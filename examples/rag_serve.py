@@ -1,0 +1,75 @@
+"""End-to-end RAG serving driver (the paper's kind of system is a serving
+stack, so this is the primary end-to-end example): a small LM answers
+batched requests grounded in a multi-tenant corpus through the unified data
+layer — retrieval, prefill, decode, with per-request provenance.
+
+  PYTHONPATH=src python examples/rag_serve.py [--requests 8] [--tokens 12]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Principal, StoreConfig, TransactionLog, empty
+from repro.data.corpus import DAY_S, CorpusConfig, make_corpus
+from repro.models.transformer import TransformerConfig, init
+from repro.serving.engine import RAGEngine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=12)
+    ap.add_argument("--docs", type=int, default=10_000)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    ccfg = CorpusConfig(n_docs=args.docs, dim=48, n_tenants=6, n_categories=5)
+    scfg = StoreConfig(capacity=1 << 14, dim=48)
+    log = TransactionLog(scfg, empty(scfg))
+    corpus = make_corpus(ccfg)
+    log.ingest(corpus)
+
+    # a small generator (the paper's contribution is the data layer; the LM
+    # just has to be a real decoder with a KV cache)
+    cfg = TransformerConfig(name="gen-25m", n_layers=4, d_model=256, n_heads=8,
+                            n_kv_heads=4, d_ff=688, vocab_size=2048,
+                            dtype="float32", attn_impl="naive")
+    params = init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"generator: {n_params/1e6:.1f}M params; corpus: {args.docs} docs, "
+          f"{ccfg.n_tenants} tenants")
+
+    engine = RAGEngine(log.snapshot(), cfg, params, k=4, max_prompt=48,
+                       max_len=48 + args.tokens + 2)
+
+    reqs = []
+    for i in range(args.requests):
+        t = int(rng.integers(0, ccfg.n_tenants))
+        reqs.append(Request(
+            principal=Principal(tenant_id=t, group_bits=0xFFFFFFFF),
+            query_emb=rng.standard_normal(ccfg.dim).astype(np.float32),
+            prompt_tokens=rng.integers(1, 2048, 6).astype(np.int32),
+            min_ts=ccfg.now_ts - 120 * DAY_S,
+            max_new_tokens=args.tokens))
+
+    t0 = time.perf_counter()
+    resps = engine.serve(reqs)
+    dt = time.perf_counter() - t0
+    tenant_of = np.asarray(corpus.tenant)
+    print(f"\nserved {len(reqs)} requests in {dt:.2f}s "
+          f"({len(reqs)*args.tokens/dt:.1f} tok/s aggregate)")
+    for i, r in enumerate(resps[:4]):
+        got = r.doc_slots[r.doc_slots >= 0]
+        print(f"req{i} tenant={reqs[i].principal.tenant_id} "
+              f"docs={got.tolist()} (tenants {tenant_of[got].tolist()}) "
+              f"retrieval {r.retrieval_ms:.1f}ms prefill {r.prefill_ms:.0f}ms "
+              f"decode {r.decode_ms:.0f}ms -> tokens {r.tokens.tolist()}")
+        assert (tenant_of[got] == reqs[i].principal.tenant_id).all()
+    print("\nprovenance check: every retrieved doc belongs to its caller's "
+          "tenant (engine-level RLS)")
+
+
+if __name__ == "__main__":
+    main()

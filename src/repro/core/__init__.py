@@ -1,0 +1,16 @@
+"""The paper's contribution: the unified data layer.
+
+  store.py        columnar device-resident document store (one source of truth)
+  transactions.py atomic commits + snapshot isolation (0 ms inconsistency window)
+  query.py        the unified query (similarity + freshness + category + RLS in
+                  one program); ref engine here, Pallas engine in repro.kernels
+  tenancy.py      principals, tenant registry, server-side predicate builder
+  splitstack.py   Stack A — the conventional 3-tool baseline (vector DB +
+                  metadata store + cache + app-layer glue), bug-injectable
+  ivf.py          IVF cluster index (TPU-native scale-out of the scan)
+  router.py       3-tier hot/warm/cold deployment router (paper §7.3)
+"""
+from repro.core.query import Predicate, unified_query, unified_query_ref  # noqa: F401
+from repro.core.store import DocBatch, Store, StoreConfig, empty  # noqa: F401
+from repro.core.tenancy import Principal, TenantRegistry, build_predicate  # noqa: F401
+from repro.core.transactions import TransactionLog  # noqa: F401

@@ -1,0 +1,159 @@
+"""The unified query — the paper's Section 5.2 as one fused device program.
+
+    SELECT content, embedding <=> :q AS distance
+    FROM documents
+    WHERE tenant_id = :tenant
+      AND updated_at > :min_ts
+      AND category = ANY(:cats)
+      AND :principal = ANY(permitted_users)
+    ORDER BY distance LIMIT :k;
+
+becomes: predicate mask (engine-level, evaluated over metadata columns in the
+same pass as similarity) -> masked scores -> top-k. There is no code path
+that can return an unmasked row: the leakage-impossibility property the paper
+attributes to row-level security holds here at the kernel level, and is
+property-tested in tests/test_core_query.py.
+
+Two execution engines share this contract:
+  * `unified_query_ref`    — pure-jnp reference (this file)
+  * `repro.kernels.filtered_topk.ops.filtered_topk` — Pallas TPU kernel
+`unified_query` dispatches on `engine=`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.store import Store
+
+NEG_INF = jnp.float32(jnp.finfo(jnp.float32).min)
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """Runtime predicate values. Disabled clauses use their pass-all value, so
+    the jitted program is shared across every clause combination (one compiled
+    engine, like one SQL planner).
+
+    tenant   : int32, -2 means "any tenant" (-1 is the tombstone tenant)
+    min_ts   : int32 inclusive lower bound on updated_at (0 = no recency bound)
+    cat_mask : uint32 bitmask of allowed categories (all-ones = any category)
+    acl_bits : uint32 principal group bits; rows must share a bit (all-ones = no ACL)
+    """
+    tenant: int = -2
+    min_ts: int = 0
+    cat_mask: int = 0xFFFFFFFF
+    acl_bits: int = 0xFFFFFFFF
+
+    def as_array(self) -> jax.Array:
+        # [tenant, min_ts, cat_mask, acl_bits] packed for the kernel path.
+        # Memoized: predicates repeat across a serving session, and the
+        # host->device transfer would otherwise dominate sub-ms queries.
+        cached = _PRED_CACHE.get(self)
+        if cached is None:
+            cached = jnp.array(
+                [self.tenant, self.min_ts,
+                 jnp.uint32(self.cat_mask).view(jnp.int32),
+                 jnp.uint32(self.acl_bits).view(jnp.int32)], dtype=jnp.int32)
+            if len(_PRED_CACHE) > 4096:
+                _PRED_CACHE.clear()
+            _PRED_CACHE[self] = cached
+        return cached
+
+
+_PRED_CACHE: dict["Predicate", jax.Array] = {}
+
+
+def predicate_mask(store: Store, pred: jax.Array) -> jax.Array:
+    """Engine-level WHERE clause. pred = Predicate.as_array() (4,) int32.
+
+    Returns (N,) bool — True where the row is live AND satisfies every clause.
+    """
+    tenant, min_ts = pred[0], pred[1]
+    cat_mask = pred[2].view(jnp.uint32)
+    acl_bits = pred[3].view(jnp.uint32)
+    live = store["tenant"] >= 0                                   # tombstones out
+    ten_ok = jnp.where(tenant == -2, True, store["tenant"] == tenant)
+    ts_ok = store["updated_at"] >= min_ts
+    cat_ok = (jnp.left_shift(jnp.uint32(1), store["category"].astype(jnp.uint32))
+              & cat_mask) != 0
+    acl_ok = (store["acl"] & acl_bits) != 0
+    return live & ten_ok & ts_ok & cat_ok & acl_ok
+
+
+@partial(jax.jit, static_argnames=("k",))
+def unified_query_ref(store: Store, q: jax.Array, pred: jax.Array, k: int):
+    """q: (B, D) (normalized by the caller for cosine) -> (scores (B,k) f32,
+    slots (B,k) int32). Slots of masked-out rows never appear: their score is
+    -inf, and if fewer than k rows qualify the tail slots are -1. LIMIT k
+    larger than the arena returns every qualifying row (SQL semantics),
+    padded to k."""
+    n = store["emb"].shape[0]
+    mask = predicate_mask(store, pred)                            # (N,)
+    scores = q.astype(jnp.float32) @ store["emb"].astype(jnp.float32).T   # (B,N)
+    scores = jnp.where(mask[None, :], scores, NEG_INF)
+    k_eff = min(k, n)
+    top_scores, top_idx = jax.lax.top_k(scores, k_eff)
+    top_idx = jnp.where(top_scores > NEG_INF, top_idx, -1)
+    if k_eff < k:
+        pad = ((0, 0), (0, k - k_eff))
+        top_scores = jnp.pad(top_scores, pad, constant_values=NEG_INF)
+        top_idx = jnp.pad(top_idx, pad, constant_values=-1)
+    return top_scores, top_idx
+
+
+def make_sharded_query(mesh, axes, n_rows: int, k: int):
+    """Distributed unified query (§Perf iteration: rag-unified/query_hot).
+
+    The naive GSPMD lowering of `unified_query_ref` over a row-sharded corpus
+    all-gathers the FULL (B, N) score matrix to run the global top-k — 17 GiB
+    per device at the 2^26-doc hot tier. This version runs the same masked
+    scan per shard, keeps only each shard's local top-k, and merges a
+    constant-size (shards x k) candidate list: collective payload drops from
+    O(B x N) to O(B x shards x k), independent of corpus size.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    ax = (axes,) if isinstance(axes, str) else tuple(axes)
+    n_shards = 1
+    for a in ax:
+        n_shards *= mesh.shape[a]
+    n_local = n_rows // n_shards
+
+    def local_fn(store_l, q_l, pred_l):
+        mask = predicate_mask(store_l, pred_l)
+        scores = q_l.astype(jnp.float32) @ store_l["emb"].astype(jnp.float32).T
+        scores = jnp.where(mask[None, :], scores, NEG_INF)
+        k_eff = min(k, n_local)
+        s, i = jax.lax.top_k(scores, k_eff)
+        i = jnp.where(s > NEG_INF, i + jax.lax.axis_index(ax) * n_local, -1)
+        s_all = jax.lax.all_gather(s, ax, axis=1, tiled=True)   # (B, shards*k)
+        i_all = jax.lax.all_gather(i, ax, axis=1, tiled=True)
+        top_s, pos = jax.lax.top_k(s_all, k)
+        top_i = jnp.take_along_axis(i_all, pos, axis=1)
+        return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
+
+    row = P(ax)
+    store_specs = {"emb": P(ax, None), "tenant": row, "category": row,
+                   "updated_at": row, "acl": row, "doc_id": row, "version": row,
+                   "commit_ts": P(), "n_live": P()}
+    return shard_map(local_fn, mesh=mesh,
+                     in_specs=(store_specs, P(), P()),
+                     out_specs=(P(), P()), check_rep=False)
+
+
+def unified_query(store: Store, q: jax.Array, pred: Predicate, k: int,
+                  engine: str = "ref"):
+    """Front door used by the serving engine / benchmarks."""
+    pa = pred.as_array()
+    if engine == "ref":
+        return unified_query_ref(store, q, pa, k)
+    if engine == "pallas":
+        from repro.kernels.filtered_topk.ops import filtered_topk
+        return filtered_topk(q, store["emb"], store["tenant"], store["updated_at"],
+                             store["category"], store["acl"], pa, k)
+    raise ValueError(f"unknown engine {engine!r}")

@@ -1,0 +1,94 @@
+"""Three-tier deployment router — paper §7.3.
+
+  Tier 1 HOT   unified store (this paper): recent docs / hot tenants; full
+               predicate model, transactional freshness. 10-30 % of corpus,
+               80-90 % of traffic.
+  Tier 2 WARM  similarity-only store (a "specialized vector DB"): long-tail
+               corpus where pure ANN dominates; metadata fetched separately
+               (coordination cost accepted for this workload class only).
+  Tier 3 COLD  host archive ("object storage"): explicit fetch by doc id,
+               no vector index, no device residency.
+
+The router preserves the paper's key claim at scale: multi-constraint queries
+never leave the unified tier; only low-constraint long-tail similarity spills
+to the warm tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.query import Predicate, unified_query
+from repro.core.splitstack import SplitStackClient
+from repro.core.store import DocBatch, StoreConfig, empty
+from repro.core.transactions import TransactionLog
+
+
+@dataclasses.dataclass
+class RouteStats:
+    hot_queries: int = 0
+    warm_queries: int = 0
+    cold_fetches: int = 0
+
+
+class TieredRouter:
+    def __init__(self, hot_cfg: StoreConfig, warm_cfg: StoreConfig, *,
+                 hot_window_s: int, now_ts: int):
+        self.hot = TransactionLog(hot_cfg, empty(hot_cfg))
+        self.warm = SplitStackClient(warm_cfg)
+        self.cold: dict[int, dict[str, Any]] = {}
+        self.hot_window_s = hot_window_s
+        self.now_ts = now_ts
+        self.stats = RouteStats()
+
+    # -- ingest: placement policy ---------------------------------------
+    def ingest(self, batch: DocBatch) -> None:
+        ts = np.asarray(batch.updated_at)
+        hot_sel = ts >= self.now_ts - self.hot_window_s
+        idx_hot = np.nonzero(hot_sel)[0]
+        idx_warm = np.nonzero(~hot_sel)[0]
+
+        def take(sel):
+            s = jnp.asarray(sel, jnp.int32)
+            return DocBatch(emb=batch.emb[s], tenant=batch.tenant[s],
+                            category=batch.category[s], updated_at=batch.updated_at[s],
+                            acl=batch.acl[s], doc_id=batch.doc_id[s])
+
+        if len(idx_hot):
+            self.hot.ingest(take(idx_hot))
+        if len(idx_warm):
+            self.warm.ingest(take(idx_warm))
+
+    def archive(self, doc_id: int, payload: dict[str, Any]) -> None:
+        self.cold[doc_id] = payload
+
+    # -- query routing ---------------------------------------------------
+    def query(self, q: jax.Array, pred: Predicate, k: int):
+        """Multi-constraint queries (any predicate beyond similarity) are
+        answered by the hot unified tier. Unconstrained similarity over the
+        long tail additionally probes the warm tier and merges."""
+        constrained = (pred.tenant != -2 or pred.min_ts > 0
+                       or pred.cat_mask != 0xFFFFFFFF or pred.acl_bits != 0xFFFFFFFF)
+        recent_only = pred.min_ts >= self.now_ts - self.hot_window_s
+        self.stats.hot_queries += 1
+        hs, hi = unified_query(self.hot.snapshot(), q, pred, k)
+        hs, hi = jax.device_get((hs, hi))
+        if constrained and recent_only:
+            return hs, hi, np.full_like(hi, 0)          # tier tag 0 = hot
+        self.stats.warm_queries += 1
+        ws, wi = self.warm.query(q, pred, k)
+        # merge the two k-lists
+        scores = np.concatenate([hs, ws], axis=1)
+        slots = np.concatenate([hi, wi], axis=1)
+        tiers = np.concatenate([np.zeros_like(hi), np.ones_like(wi)], axis=1)
+        order = np.argsort(-scores, axis=1)[:, :k]
+        gather = lambda a: np.take_along_axis(a, order, axis=1)
+        return gather(scores), gather(slots), gather(tiers)
+
+    def fetch_cold(self, doc_id: int):
+        self.stats.cold_fetches += 1
+        return self.cold.get(doc_id)

@@ -1,0 +1,249 @@
+"""Stack A — the conventional three-tool RAG stack, faithfully reproduced.
+
+Three "services", three consistency domains:
+  1. VectorStore    — embeddings only; answers pure ANN top-k. Knows nothing
+                      about tenants, timestamps, or permissions.
+  2. MetadataStore  — relational columns, queried by row id (a separate device
+                      program = a separate system round trip).
+  3. MetadataCache  — host-side TTL cache in front of the metadata store (the
+                      paper's third tool), a second source of staleness.
+
+Everything in this file is the "synchronization code" the paper counts
+(~1,800 LOC in production systems; Table 4): over-fetch heuristics, app-layer
+post-filtering, retry-on-underfill, two-phase writes, cache invalidation.
+The injectable `filter_bug_rate` models the app-layer tenant-filter bug behind
+the paper's measured 0.2 % leakage (Table 3) — the point is that in Stack A
+such a bug is *possible*, while in the unified engine the tenant predicate is
+evaluated inside the retrieval kernel and no application code can skip it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.query import NEG_INF, Predicate
+from repro.core.store import DocBatch, StoreConfig, normalize
+
+
+# ---------------------------------------------------------------------------
+# tool 1: the vector database (similarity only)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def vector_topk(emb: jax.Array, valid: jax.Array, q: jax.Array, k: int):
+    scores = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    return jax.lax.top_k(scores, k)
+
+
+@jax.jit
+def vector_write(emb: jax.Array, valid: jax.Array, slots: jax.Array, new_emb: jax.Array):
+    return emb.at[slots].set(new_emb), valid.at[slots].set(True)
+
+
+# ---------------------------------------------------------------------------
+# tool 2: the relational metadata store (lookup by id)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def metadata_lookup(meta: dict[str, jax.Array], idx: jax.Array):
+    return {k: v[idx] for k, v in meta.items()}
+
+
+@jax.jit
+def metadata_write(meta: dict[str, jax.Array], slots: jax.Array,
+                   tenant: jax.Array, category: jax.Array,
+                   updated_at: jax.Array, acl: jax.Array, doc_id: jax.Array):
+    return {
+        "tenant": meta["tenant"].at[slots].set(tenant),
+        "category": meta["category"].at[slots].set(category),
+        "updated_at": meta["updated_at"].at[slots].set(updated_at),
+        "acl": meta["acl"].at[slots].set(acl),
+        "doc_id": meta["doc_id"].at[slots].set(doc_id),
+    }
+
+
+# ---------------------------------------------------------------------------
+# tool 3: host-side metadata cache (TTL)
+# ---------------------------------------------------------------------------
+
+class MetadataCache:
+    def __init__(self, ttl_s: float = 1.0):
+        self.ttl_s = ttl_s
+        self._entries: dict[int, tuple[float, tuple]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, slot: int):
+        ent = self._entries.get(slot)
+        if ent is not None and time.perf_counter() - ent[0] < self.ttl_s:
+            self.hits += 1
+            return ent[1]
+        self.misses += 1
+        return None
+
+    def put(self, slot: int, row: tuple):
+        self._entries[slot] = (time.perf_counter(), row)
+
+    def invalidate(self, slots):
+        for s in slots:
+            self._entries.pop(int(s), None)
+
+
+# ---------------------------------------------------------------------------
+# the glue: Stack A client
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SplitStackStats:
+    round_trips: int = 0
+    retries: int = 0
+    inconsistency_windows_s: list = dataclasses.field(default_factory=list)
+    write_latencies_s: list = dataclasses.field(default_factory=list)
+
+
+class SplitStackClient:
+    """Application code stitching the three tools together."""
+
+    OVERFETCH = 4          # initial over-fetch multiplier
+    MAX_RETRIES = 4        # each retry quadruples the fetch size (last one
+                           # typically degenerates to a full scan — the
+                           # "query composition explosion" failure mode)
+
+    def __init__(self, cfg: StoreConfig, *, filter_bug_rate: float = 0.0,
+                 cache_ttl_s: float = 1.0, rng_seed: int = 0):
+        N, D = cfg.capacity, cfg.dim
+        self.cfg = cfg
+        self.emb = jnp.zeros((N, D), jnp.dtype(cfg.dtype))
+        self.valid = jnp.zeros((N,), bool)
+        self.meta = {
+            "tenant": jnp.full((N,), -1, jnp.int32),
+            "category": jnp.zeros((N,), jnp.int32),
+            "updated_at": jnp.zeros((N,), jnp.int32),
+            "acl": jnp.zeros((N,), jnp.uint32),
+            "doc_id": jnp.full((N,), -1, jnp.int32),
+        }
+        self.cache = MetadataCache(cache_ttl_s)
+        self.stats = SplitStackStats()
+        self.filter_bug_rate = filter_bug_rate
+        self._rng = np.random.default_rng(rng_seed)
+        self._cursor = 0
+        self._slot_of_doc: dict[int, int] = {}
+        # host gap injected between the two write commits; models queue /
+        # network / worker delay between the vector upsert and the metadata
+        # upsert in a real deployment.
+        self.write_gap_s = 0.0
+
+    # -- writes: TWO separate commits -----------------------------------
+    def ingest(self, batch: DocBatch) -> None:
+        m = batch.size
+        slots = jnp.arange(self._cursor, self._cursor + m, dtype=jnp.int32)
+        t0 = time.perf_counter()
+        # commit 1: vector store
+        emb = normalize(self.cfg, batch.emb.astype(self.emb.dtype))
+        self.emb, self.valid = vector_write(self.emb, self.valid, slots, emb)
+        jax.block_until_ready(self.emb)
+        t1 = time.perf_counter()
+        if self.write_gap_s:
+            time.sleep(self.write_gap_s)
+        # commit 2: metadata store (a reader between t1 and t2 sees the new
+        # vector with the OLD metadata — the inconsistency window)
+        self.meta = metadata_write(self.meta, slots, batch.tenant, batch.category,
+                                   batch.updated_at, batch.acl, batch.doc_id)
+        jax.block_until_ready(self.meta["tenant"])
+        t2 = time.perf_counter()
+        self.cache.invalidate(np.asarray(slots))
+        self.stats.inconsistency_windows_s.append(t2 - t1)
+        self.stats.write_latencies_s.append(t2 - t0)
+        for i, d in enumerate(jax.device_get(batch.doc_id)):
+            self._slot_of_doc[int(d)] = self._cursor + i
+        self._cursor += m
+
+    def update(self, doc_ids, new_emb, updated_at) -> None:
+        slots = jnp.asarray([self._slot_of_doc[int(d)] for d in doc_ids], jnp.int32)
+        t0 = time.perf_counter()
+        emb = normalize(self.cfg, jnp.asarray(new_emb, self.emb.dtype))
+        self.emb, self.valid = vector_write(self.emb, self.valid, slots, emb)
+        jax.block_until_ready(self.emb)
+        t1 = time.perf_counter()
+        if self.write_gap_s:
+            time.sleep(self.write_gap_s)
+        meta = dict(self.meta)
+        meta["updated_at"] = meta["updated_at"].at[slots].set(jnp.asarray(updated_at, jnp.int32))
+        self.meta = meta
+        jax.block_until_ready(self.meta["updated_at"])
+        t2 = time.perf_counter()
+        self.cache.invalidate(np.asarray(slots))
+        self.stats.inconsistency_windows_s.append(t2 - t1)
+        self.stats.write_latencies_s.append(t2 - t0)
+
+    # -- reads: vector search -> metadata fetch -> app-layer filter ------
+    def _passes_filters(self, row: tuple, pred: Predicate, bug_active: bool) -> bool:
+        tenant, category, updated_at, acl, doc_id = row
+        if doc_id < 0:
+            return False
+        # THE BUG: under bug_active the tenant clause is skipped — exactly the
+        # class of app-layer filter defect the paper measured at 0.2 %.
+        if not bug_active and pred.tenant != -2 and tenant != pred.tenant:
+            return False
+        if updated_at < pred.min_ts:
+            return False
+        if not ((1 << int(category)) & pred.cat_mask):
+            return False
+        if not (int(acl) & pred.acl_bits):
+            return False
+        return True
+
+    def query(self, q: jax.Array, pred: Predicate, k: int):
+        """Returns (scores (B,k) np.float32, slots (B,k) np.int32, doc mask).
+
+        Every round trip is counted; retries model the under-fill problem of
+        post-filtering (over-fetch never provably suffices)."""
+        B = q.shape[0]
+        bug_active = self._rng.random() < self.filter_bug_rate
+        fetch = k * self.OVERFETCH
+        out_scores = np.full((B, k), np.float32(jax.device_get(NEG_INF)), np.float32)
+        out_slots = np.full((B, k), -1, np.int32)
+        for attempt in range(self.MAX_RETRIES + 1):
+            # round trip 1..n: vector service
+            scores, idx = vector_topk(self.emb, self.valid, q, min(fetch, self.cfg.capacity))
+            scores, idx = jax.device_get((scores, idx))
+            self.stats.round_trips += 1
+            # metadata fetch: cache first, then the metadata service for misses
+            uniq = np.unique(idx)
+            missing = [s for s in uniq if self.cache.get(int(s)) is None]
+            if missing:
+                rows = jax.device_get(metadata_lookup(self.meta, jnp.asarray(missing, jnp.int32)))
+                self.stats.round_trips += 1
+                for j, s in enumerate(missing):
+                    self.cache.put(int(s), (int(rows["tenant"][j]), int(rows["category"][j]),
+                                            int(rows["updated_at"][j]), int(rows["acl"][j]),
+                                            int(rows["doc_id"][j])))
+            # app-layer post-filter + merge (the fragile part)
+            done = True
+            for b in range(B):
+                kept = 0
+                for j in range(idx.shape[1]):
+                    s = int(idx[b, j])
+                    row = self.cache.get(s)
+                    if row is None:
+                        continue
+                    if self._passes_filters(row, pred, bug_active):
+                        out_scores[b, kept] = scores[b, j]
+                        out_slots[b, kept] = s
+                        kept += 1
+                        if kept == k:
+                            break
+                if kept < k and fetch < self.cfg.capacity:
+                    done = False
+            if done or fetch >= self.cfg.capacity:
+                break
+            fetch *= 4
+            self.stats.retries += 1
+        return out_scores, out_slots

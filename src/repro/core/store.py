@@ -1,0 +1,82 @@
+"""Unified document store — the paper's "one database" as a device-resident
+columnar tensor arena.
+
+Everything a production RAG query needs lives in ONE pytree:
+  emb        (N, D)  embeddings (unit-normalized when metric == cosine)
+  tenant     (N,)    int32 tenant id (-1 = free/tombstoned slot)
+  category   (N,)    int32 category id (< 32 so predicate sets are bitmasks)
+  updated_at (N,)    int32 seconds since store epoch
+  acl        (N,)    uint32 bitmask of permitted principal groups
+  doc_id     (N,)    int32 external document id
+  version    (N,)    int32 row version (bumped on every update)
+  commit_ts  ()      int32 store-level commit watermark
+  n_live     ()      int32 number of live rows
+
+The store is immutable: every write produces the next state in ONE XLA
+program, so embedding + metadata can never be observed out of sync — this is
+the tensor-level analogue of the paper's single-transaction COMMIT, and the
+structural reason the unified stack's inconsistency window is 0 by design.
+
+Capacity is a fixed pre-allocated arena (production stores pre-size their
+slabs the same way); `StoreConfig.capacity` rows, free slots carry tenant=-1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Store = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    capacity: int                 # arena rows (power of two preferred)
+    dim: int                      # embedding dim
+    metric: str = "cosine"        # "cosine" | "dot"
+    dtype: str = "float32"
+    n_categories: int = 32        # must stay <= 32 (bitmask predicates)
+    n_acl_groups: int = 32
+
+
+def empty(cfg: StoreConfig) -> Store:
+    N, D = cfg.capacity, cfg.dim
+    return {
+        "emb": jnp.zeros((N, D), jnp.dtype(cfg.dtype)),
+        "tenant": jnp.full((N,), -1, jnp.int32),
+        "category": jnp.zeros((N,), jnp.int32),
+        "updated_at": jnp.zeros((N,), jnp.int32),
+        "acl": jnp.zeros((N,), jnp.uint32),
+        "doc_id": jnp.full((N,), -1, jnp.int32),
+        "version": jnp.zeros((N,), jnp.int32),
+        "commit_ts": jnp.int32(0),
+        "n_live": jnp.int32(0),
+    }
+
+
+def normalize(cfg: StoreConfig, emb: jax.Array) -> jax.Array:
+    if cfg.metric == "cosine":
+        norm = jnp.linalg.norm(emb.astype(jnp.float32), axis=-1, keepdims=True)
+        return (emb / jnp.maximum(norm, 1e-12)).astype(emb.dtype)
+    return emb
+
+
+@dataclasses.dataclass(frozen=True)
+class DocBatch:
+    """A batch of documents headed into the store (host-side container)."""
+    emb: jax.Array          # (M, D)
+    tenant: jax.Array       # (M,) int32
+    category: jax.Array     # (M,) int32
+    updated_at: jax.Array   # (M,) int32
+    acl: jax.Array          # (M,) uint32
+    doc_id: jax.Array       # (M,) int32
+
+    @property
+    def size(self) -> int:
+        return self.emb.shape[0]
+
+
+def live_mask(store: Store) -> jax.Array:
+    return store["tenant"] >= 0

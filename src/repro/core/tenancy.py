@@ -1,0 +1,59 @@
+"""Tenancy + access control: predicate construction is server-side.
+
+The unified engine's isolation guarantee has two halves:
+  1. the predicate is evaluated inside the retrieval kernel (query.py /
+     kernels/filtered_topk) — no app code can skip it;
+  2. the predicate itself is built HERE from the authenticated principal, not
+     from request parameters — a client cannot ask for another tenant.
+
+That pairing is the row-level-security analogue. `build_predicate` is the only
+public way to obtain a Predicate carrying a tenant clause.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.query import Predicate
+
+
+@dataclasses.dataclass(frozen=True)
+class Principal:
+    """An authenticated caller: tenant + ACL group memberships."""
+    tenant_id: int
+    group_bits: int          # uint32 bitmask of ACL groups the caller is in
+
+
+@dataclasses.dataclass
+class TenantRegistry:
+    """Tenant id allotment + per-tenant quota accounting."""
+    n_tenants: int = 0
+    doc_quota: dict = dataclasses.field(default_factory=dict)
+    doc_count: dict = dataclasses.field(default_factory=dict)
+
+    def create_tenant(self, quota: int = 1 << 30) -> int:
+        tid = self.n_tenants
+        self.n_tenants += 1
+        self.doc_quota[tid] = quota
+        self.doc_count[tid] = 0
+        return tid
+
+    def charge(self, tid: int, n_docs: int) -> None:
+        if self.doc_count[tid] + n_docs > self.doc_quota[tid]:
+            raise PermissionError(f"tenant {tid} over document quota")
+        self.doc_count[tid] += n_docs
+
+
+def build_predicate(principal: Principal, *, min_ts: int = 0,
+                    categories: list[int] | None = None) -> Predicate:
+    """The ONLY constructor that sets the tenant/ACL clauses. Categories and
+    recency are caller-chosen filters; tenant and ACL come from the principal.
+    """
+    cat_mask = 0xFFFFFFFF
+    if categories is not None:
+        cat_mask = 0
+        for c in categories:
+            if not 0 <= c < 32:
+                raise ValueError("category ids must be in [0, 32)")
+            cat_mask |= 1 << c
+    return Predicate(tenant=principal.tenant_id, min_ts=min_ts,
+                     cat_mask=cat_mask, acl_bits=principal.group_bits & 0xFFFFFFFF)

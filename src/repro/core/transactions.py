@@ -1,0 +1,146 @@
+"""Transactional writes for the unified store.
+
+The paper's claim: because document + embedding live in one engine, a write is
+ONE atomic commit and the retrieval layer can never observe a half-applied
+update (inconsistency window = 0 by construction). Here a "transaction" is a
+single jitted program mapping store -> store'; the caller swaps the returned
+pytree under `TransactionLog.commit`, so readers hold either the old snapshot
+or the new one — never a mix (MVCC by immutability).
+
+The split-stack counterpart (splitstack.py) performs the vector write and the
+metadata write as TWO separate programs with a host gap in between; that gap
+is the measurable inconsistency window of Table 2.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.store import DocBatch, Store, StoreConfig, normalize
+
+
+# ---------------------------------------------------------------------------
+# atomic write programs (each is ONE XLA program = one commit)
+# ---------------------------------------------------------------------------
+
+# NOTE: no buffer donation on these programs — readers may pin old snapshots
+# (MVCC). A deployment that doesn't expose snapshots would donate for in-place
+# updates; that trade-off is deliberate and documented in DESIGN.md.
+@partial(jax.jit, static_argnames=("cfg",))
+def ingest(store: Store, cfg: StoreConfig, slots: jax.Array, batch_emb: jax.Array,
+           tenant: jax.Array, category: jax.Array, updated_at: jax.Array,
+           acl: jax.Array, doc_id: jax.Array) -> Store:
+    """Insert M documents at the given slots. Embedding AND metadata columns
+    are updated in the same program: atomic by construction."""
+    emb = normalize(cfg, batch_emb.astype(store["emb"].dtype))
+    was_free = store["tenant"][slots] < 0
+    new = dict(store)
+    new["emb"] = store["emb"].at[slots].set(emb)
+    new["tenant"] = store["tenant"].at[slots].set(tenant)
+    new["category"] = store["category"].at[slots].set(category)
+    new["updated_at"] = store["updated_at"].at[slots].set(updated_at)
+    new["acl"] = store["acl"].at[slots].set(acl)
+    new["doc_id"] = store["doc_id"].at[slots].set(doc_id)
+    new["version"] = store["version"].at[slots].add(1)
+    new["commit_ts"] = store["commit_ts"] + 1
+    new["n_live"] = store["n_live"] + jnp.sum(was_free).astype(jnp.int32)
+    return new
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def update(store: Store, cfg: StoreConfig, slots: jax.Array, new_emb: jax.Array,
+           updated_at: jax.Array) -> Store:
+    """Re-embed existing documents (the staleness-critical path): the fresh
+    embedding and the fresh timestamp commit together."""
+    emb = normalize(cfg, new_emb.astype(store["emb"].dtype))
+    new = dict(store)
+    new["emb"] = store["emb"].at[slots].set(emb)
+    new["updated_at"] = store["updated_at"].at[slots].set(updated_at)
+    new["version"] = store["version"].at[slots].add(1)
+    new["commit_ts"] = store["commit_ts"] + 1
+    return new
+
+
+@jax.jit
+def delete(store: Store, slots: jax.Array) -> Store:
+    """Tombstone rows (tenant = -1 makes them invisible to every predicate)."""
+    was_live = store["tenant"][slots] >= 0
+    new = dict(store)
+    new["tenant"] = store["tenant"].at[slots].set(-1)
+    new["doc_id"] = store["doc_id"].at[slots].set(-1)
+    new["version"] = store["version"].at[slots].add(1)
+    new["commit_ts"] = store["commit_ts"] + 1
+    new["n_live"] = store["n_live"] - jnp.sum(was_live).astype(jnp.int32)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# host-side commit log (slot allocation + snapshot swap + instrumentation)
+# ---------------------------------------------------------------------------
+
+class TransactionLog:
+    """Owns the current store snapshot and allocates slots.
+
+    Readers call `snapshot()` and get an immutable pytree — a consistent view
+    for the whole query, regardless of concurrent commits (snapshot
+    isolation). Writers go through ingest/update/delete, which measure commit
+    wall-time for Table 2.
+    """
+
+    def __init__(self, cfg: StoreConfig, store: Store):
+        self.cfg = cfg
+        self._store = store
+        self._cursor = 0
+        self._slot_of_doc: dict[int, int] = {}
+        self.write_latencies_s: list[float] = []
+
+    # -- reads ---------------------------------------------------------
+    def snapshot(self) -> Store:
+        return self._store
+
+    def slot_of(self, doc_id: int) -> int:
+        return self._slot_of_doc[doc_id]
+
+    # -- writes --------------------------------------------------------
+    def ingest(self, batch: DocBatch) -> None:
+        m = batch.size
+        if self._cursor + m > self.cfg.capacity:
+            raise RuntimeError("store arena full — grow capacity or compact")
+        slots = jnp.arange(self._cursor, self._cursor + m, dtype=jnp.int32)
+        t0 = time.perf_counter()
+        new = ingest(self._store, self.cfg, slots, batch.emb, batch.tenant,
+                     batch.category, batch.updated_at, batch.acl, batch.doc_id)
+        jax.block_until_ready(new["commit_ts"])
+        self.write_latencies_s.append(time.perf_counter() - t0)
+        # single reference swap = the commit point
+        self._store = new
+        for i, d in enumerate(jax.device_get(batch.doc_id)):
+            self._slot_of_doc[int(d)] = self._cursor + i
+        self._cursor += m
+
+    def update(self, doc_ids, new_emb, updated_at) -> None:
+        slots = jnp.asarray([self._slot_of_doc[int(d)] for d in doc_ids], jnp.int32)
+        t0 = time.perf_counter()
+        new = update(self._store, self.cfg, slots, new_emb, jnp.asarray(updated_at, jnp.int32))
+        jax.block_until_ready(new["commit_ts"])
+        self.write_latencies_s.append(time.perf_counter() - t0)
+        self._store = new
+
+    def delete(self, doc_ids) -> None:
+        slots = jnp.asarray([self._slot_of_doc[int(d)] for d in doc_ids], jnp.int32)
+        new = delete(self._store, slots)
+        jax.block_until_ready(new["commit_ts"])
+        self._store = new
+        for d in doc_ids:
+            self._slot_of_doc.pop(int(d), None)
+
+    @property
+    def inconsistency_window_s(self) -> float:
+        """0 by construction: embedding + metadata commit in one program.
+
+        There is no intermediate state a reader could observe — `snapshot()`
+        returns either the pre-commit or post-commit pytree."""
+        return 0.0

@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic RAG corpus/workload + LM token pipeline."""

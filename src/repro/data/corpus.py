@@ -1,0 +1,56 @@
+"""Synthetic corpus + query workload matching the paper's benchmark setup:
+50,000 documents, 128-dim embeddings, 20 tenant namespaces, 5 content
+categories, timestamps uniform over the past 180 days (Section 6.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.store import DocBatch
+
+DAY_S = 86_400
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    n_docs: int = 50_000
+    dim: int = 128
+    n_tenants: int = 20
+    n_categories: int = 5
+    n_acl_groups: int = 8
+    days_span: int = 180
+    seed: int = 0
+
+    @property
+    def now_ts(self) -> int:
+        return self.days_span * DAY_S
+
+
+def make_corpus(cfg: CorpusConfig) -> DocBatch:
+    rng = np.random.default_rng(cfg.seed)
+    emb = rng.standard_normal((cfg.n_docs, cfg.dim), dtype=np.float32)
+    tenant = rng.integers(0, cfg.n_tenants, cfg.n_docs, dtype=np.int32)
+    category = rng.integers(0, cfg.n_categories, cfg.n_docs, dtype=np.int32)
+    updated_at = rng.integers(0, cfg.days_span * DAY_S, cfg.n_docs, dtype=np.int64).astype(np.int32)
+    # each doc permits 1..3 random ACL groups
+    acl = np.zeros(cfg.n_docs, dtype=np.uint32)
+    for _ in range(3):
+        bit = rng.integers(0, cfg.n_acl_groups, cfg.n_docs)
+        on = rng.random(cfg.n_docs) < 0.6
+        acl |= (np.uint32(1) << bit.astype(np.uint32)) * on.astype(np.uint32)
+    acl |= np.uint32(1) << rng.integers(0, cfg.n_acl_groups, cfg.n_docs).astype(np.uint32)
+    doc_id = np.arange(cfg.n_docs, dtype=np.int32)
+    return DocBatch(emb=jnp.asarray(emb), tenant=jnp.asarray(tenant),
+                    category=jnp.asarray(category), updated_at=jnp.asarray(updated_at),
+                    acl=jnp.asarray(acl), doc_id=jnp.asarray(doc_id))
+
+
+def make_queries(cfg: CorpusConfig, n_queries: int, batch: int = 1, seed: int = 1) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((n_queries, batch, cfg.dim), dtype=np.float32)
+    q /= np.linalg.norm(q, axis=-1, keepdims=True)
+    return jnp.asarray(q)

@@ -1,0 +1,68 @@
+"""Collective helpers + sharding-constraint utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def topk_allgather_merge(scores: jax.Array, idx: jax.Array, axis, k: int):
+    """Distributed top-k merge: each shard contributes its local (B, k) best;
+    gather k per shard and re-top-k. Payload O(shards*k) — constant in corpus
+    size (the unified query's scaling argument)."""
+    s_all = jax.lax.all_gather(scores, axis, axis=1, tiled=True)
+    i_all = jax.lax.all_gather(idx, axis, axis=1, tiled=True)
+    top_s, pos = jax.lax.top_k(s_all, k)
+    return top_s, jnp.take_along_axis(i_all, pos, axis=1)
+
+
+def collective_bytes_of_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes of every collective op in an HLO dump. Used by the
+    roofline pass (cost_analysis does not expose collective traffic)."""
+    import re
+
+    DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                   "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                   "f64": 8, "c64": 8, "c128": 16}
+    kinds = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    out = {k: 0 for k in kinds}
+    # lines like: %x = f32[128,256]{1,0} all-gather(%y), ...
+    pat = re.compile(r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+([\w-]+)")
+    shape_pat = re.compile(r"(\w+)\[([\d,]*)\]")
+
+    def size_of(dtype: str, dims: str) -> int:
+        if dtype not in DTYPE_BYTES:
+            return 0
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        return n * DTYPE_BYTES[dtype]
+
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        op = m.group(4)
+        base = None
+        for k in kinds:
+            if op == k or op.startswith(k + "-start") or op == k + "-done":
+                base = k
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        total = 0
+        if m.group(1) is not None:  # tuple shape
+            for dt, dims in shape_pat.findall(m.group(1)):
+                total += size_of(dt, dims)
+        else:
+            total += size_of(m.group(2), m.group(3))
+        out[base] += total
+    return out

@@ -1,0 +1,167 @@
+"""Sharding rules: param-path regex -> PartitionSpec.
+
+Scheme (single pod): mesh ("data", "model") = (16, 16)
+  * FSDP: weight matrices shard one dim over "data"
+  * TP:   the other dim over "model" (heads / ffn-hidden / vocab)
+Multi-pod adds a leading "pod" axis that joins the FSDP group for parameters
+(cross-pod traffic = gradient all-reduce only; TP never crosses pods).
+
+Rules are matched against the flattened path string (keys joined by '/').
+First match wins; unmatched params replicate.
+"""
+from __future__ import annotations
+
+import re
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def lm_rules(mesh: Mesh) -> list[tuple[str, P]]:
+    fsdp = fsdp_axes(mesh)
+    tp = "model"
+    return [
+        # embeddings: vocab over TP, model-dim over FSDP
+        (r"embed$", P(tp, fsdp)),
+        (r"lm_head$", P(fsdp, tp)),
+        # attention (stacked (L, ...)): contract dim FSDP, head dim TP
+        (r"attn/w[qkv]$", P(None, fsdp, tp)),
+        (r"attn/wo$", P(None, tp, fsdp)),
+        (r"attn/b[qkv]$", P(None, tp)),
+        (r"attn/[qk]_norm$", P(None, None)),
+        # dense FFN
+        (r"ffn/w_(gate|up)$", P(None, fsdp, tp)),
+        (r"ffn/w_down$", P(None, tp, fsdp)),
+        # MoE: expert-count-agnostic — shard d_model/d_ff, replicate E
+        (r"moe/router$", P(None, fsdp, None)),
+        (r"moe/w_(gate|up)$", P(None, None, fsdp, tp)),
+        (r"moe/w_down$", P(None, None, tp, fsdp)),
+        # norms
+        (r"(attn_norm|ffn_norm|final_norm)$", P()),
+    ]
+
+
+def recsys_rules(mesh: Mesh) -> list[tuple[str, P]]:
+    fsdp = fsdp_axes(mesh)
+    tp = "model"
+    return [
+        # embedding tables (F, V, d): rows (vocab) over TP — row-wise sharding;
+        # lookups become sharded gathers merged by GSPMD
+        (r"tables$|^v$|items$", P(None, tp, None)),
+        (r"^w$", P(None, tp)),
+        (r"(bot|top)/layer\d+/w$", P(fsdp, tp)),
+        (r"blocks/\d+/w[qkvo1-2]$", P(fsdp, tp)),
+    ]
+
+
+def gnn_rules(mesh: Mesh) -> list[tuple[str, P]]:
+    # GCN weights are tiny (d_hidden=16): replicate weights, shard the graph.
+    return [(r".*", P())]
+
+
+def match_pspec(path: str, rules: Sequence[tuple[str, P]]) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return P()
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _group_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def fit_spec(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Make `spec` legal for `shape` on `mesh`: every sharded dim must divide
+    evenly (jit in_shardings requirement). For a non-dividing axis group, try
+    progressively smaller subgroups (drop members right-to-left, then
+    left-to-right, then singles); fall back to None. Rank-extends short specs
+    with None."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries[: len(shape)]):
+        if ax is None:
+            out.append(None)
+            continue
+        group = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+        cands = [group]
+        for i in range(len(group) - 1, 0, -1):
+            cands.append(group[:i])
+        for i in range(1, len(group)):
+            cands.append(group[i:])
+        cands += [(a,) for a in group]
+        chosen = None
+        for c in cands:
+            if dim % _group_size(mesh, c) == 0:
+                chosen = c if len(c) > 1 else c[0]
+                break
+        out.append(chosen)
+    return P(*out)
+
+
+def param_pspecs(params, rules: Sequence[tuple[str, P]], mesh: Mesh):
+    """Pytree of PartitionSpec matching `params`; every spec is fit_spec'd
+    against the actual leaf shape (divisibility-safe)."""
+
+    def spec_for(path, leaf):
+        return fit_spec(mesh, match_pspec(_path_str(path), rules), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def opt_pspecs(opt_state, params_pspecs, params):
+    """Optimizer-state specs: leaves shaped like their param inherit its spec
+    (Adam m/v); reduced-shape leaves (Adafactor vr/vc) drop the missing axis;
+    anything else replicates. Input specs must already be rank-complete
+    (param_pspecs guarantees this)."""
+    p_leaves, p_treedef = jax.tree_util.tree_flatten(params)
+    spec_leaves = p_treedef.flatten_up_to(params_pspecs)
+    by_shape: dict[tuple, P] = {}
+    for leaf, spec in zip(p_leaves, spec_leaves):
+        full = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        by_shape.setdefault(leaf.shape, spec)
+        if leaf.ndim >= 2:
+            # adafactor vr drops the last dim; vc the second-to-last
+            by_shape.setdefault(leaf.shape[:-1], P(*full[:-1]))
+            by_shape.setdefault(leaf.shape[:-2] + leaf.shape[-1:],
+                                P(*(full[:-2] + (full[-1],))))
+
+    def spec_for(leaf):
+        return by_shape.get(leaf.shape, P())
+
+    return jax.tree.map(spec_for, opt_state)
+
+
+def named(mesh: Mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_pspecs(mesh: Mesh, state, rules):
+    """Specs for a full TrainState {"params", "opt", "step"}."""
+    pp = param_pspecs(state["params"], rules, mesh)
+    return {
+        "params": pp,
+        "opt": opt_pspecs(state["opt"], pp, state["params"]),
+        "step": P(),
+    }
+
+
+def state_shardings(mesh: Mesh, state, rules):
+    return named(mesh, state_pspecs(mesh, state, rules))

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: flash-decode GQA attention (one query token, long KV).
+
+The RAG serving hot loop: after the unified query retrieves context and
+prefill populates the KV cache, every generated token pays one pass over the
+cache. This kernel streams the cache through VMEM in (BLK_S, hd) tiles with
+an online-softmax accumulator, so HBM traffic is exactly one read of K and V
+— the decode roofline's memory term floor.
+
+  q        (B, KV, G, hd)   one token's queries, grouped by KV head
+  k_cache  (B, S, KV, hd)
+  v_cache  (B, S, KV, hd)
+  lengths  (B,) int32       valid cache prefix per sequence
+  grid = (B, KV, S_blocks)  S innermost -> sequential online softmax
+
+Outputs are the UN-normalized accumulator plus (m, l) running stats, so a
+sequence-parallel deployment can merge partial results across shards with the
+standard logsumexp combine (ops.decode_attention_sharded) — flash-decode's
+split-K trick mapped onto a TPU mesh axis instead of SM blocks.
+
+Scratch (m, l) is carried lane-uniform in (G, 128) tiles: every lane of a row
+holds the same scalar — the VPU-friendly way to keep per-row softmax stats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+LANES = 128
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, acc_out, m_out, l_out,
+            acc, m, l, *, blk_s: int, scale: float):
+    b = pl.program_id(0)
+    sblk = pl.program_id(2)
+    n_sblk = pl.num_programs(2)
+
+    @pl.when(sblk == 0)
+    def _init():
+        acc[...] = jnp.zeros(acc.shape, jnp.float32)
+        m[...] = jnp.full(m.shape, NEG_INF, jnp.float32)
+        l[...] = jnp.zeros(l.shape, jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (BLK_S, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)                 # (BLK_S, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, BLK_S)
+    # mask beyond the live prefix
+    pos = sblk * blk_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    # online softmax update (lane-uniform m/l tiles)
+    m_prev = m[...]                                        # (G, LANES)
+    m_cur = jnp.max(s, axis=1, keepdims=True)              # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev - m_new)                        # (G, LANES) lane-uniform
+    p = jnp.exp(s - m_new[:, :1])                          # (G, BLK_S)
+    l[...] = l[...] * alpha + jnp.broadcast_to(
+        jnp.sum(p, axis=1, keepdims=True), m_prev.shape)
+    acc[...] = acc[...] * alpha[:, :1] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m[...] = m_new
+
+    @pl.when(sblk == n_sblk - 1)
+    def _finish():
+        acc_out[0, 0] = acc[...]
+        m_out[0, 0] = m[...]
+        l_out[0, 0] = l[...]
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                            lengths: jax.Array, *, blk_s: int = 512,
+                            interpret: bool = False):
+    """Returns UN-normalized (acc (B,KV,G,hd) f32, m (B,KV,G,LANES) f32,
+    l (B,KV,G,LANES) f32); caller normalizes out = acc / l[..., :1]."""
+    B, KV, G, hd = q.shape
+    S = k_cache.shape[1]
+    assert S % blk_s == 0, (S, blk_s)
+    scale = 1.0 / (hd ** 0.5)
+
+    grid = (B, KV, S // blk_s)
+    kernel = functools.partial(_kernel, blk_s=blk_s, scale=scale)
+    out_shape = (jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+                 jax.ShapeDtypeStruct((B, KV, G, LANES), jnp.float32),
+                 jax.ShapeDtypeStruct((B, KV, G, LANES), jnp.float32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, kv, s, *_: (b, kv, 0, 0)),
+            pl.BlockSpec((1, blk_s, 1, hd), lambda b, kv, s, *_: (b, s, kv, 0)),
+            pl.BlockSpec((1, blk_s, 1, hd), lambda b, kv, s, *_: (b, s, kv, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, kv, s, *_: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, G, LANES), lambda b, kv, s, *_: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, G, LANES), lambda b, kv, s, *_: (b, kv, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                        interpret=interpret)
+    return fn(lengths, q, k_cache, v_cache)

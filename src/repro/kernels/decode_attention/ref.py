@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash-decode GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(jnp.finfo(jnp.float32).min)
+
+
+@jax.jit
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B, KV, G, hd); caches (B, S, KV, hd); lengths (B,) int32.
+    Returns normalized attention output (B, KV, G, hd) fp32."""
+    B, KV, G, hd = q.shape
+    S = k_cache.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, :] < lengths[:, None]          # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))

@@ -1,0 +1,119 @@
+"""jit'd public wrapper for the filtered_topk kernel.
+
+Handles: metadata packing, padding to tile multiples, CPU interpret-mode
+fallback, and the distributed (sharded-corpus) merge:
+
+  corpus rows sharded over a mesh axis
+    -> per-shard fused kernel (local top-k)
+    -> all_gather of (k per shard) candidates        [tiny: k << N/shard]
+    -> final top-k
+
+The gather payload is k rows per shard, so the collective term is O(devices·k)
+— independent of corpus size. That IS the paper's scaling story on a TPU pod:
+the unified query's cross-device coordination is a constant-size merge, not a
+second system.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels.filtered_topk.filtered_topk import NEG_INF, filtered_topk_pallas
+
+
+def _pack_meta(tenant, updated_at, category, acl):
+    return jnp.stack([tenant.astype(jnp.int32), updated_at.astype(jnp.int32),
+                      category.astype(jnp.int32), acl.astype(jnp.int32)], axis=1)
+
+
+def _pad_axis0(x, mult, fill):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@partial(jax.jit, static_argnames=("k", "blk_b", "blk_n", "interpret"))
+def _run(q, emb, meta, pred, k, blk_b, blk_n, interpret):
+    """Row padding (tenant=-1 dead rows) happens in the caller; here we pad
+    D to the 128-lane multiple and B to blk_b (padded D contributes 0 to the
+    dot; padded queries are sliced off)."""
+    B, D = q.shape
+    d_pad = (-D) % 128
+    if d_pad:
+        q = jnp.pad(q, ((0, 0), (0, d_pad)))
+        emb = jnp.pad(emb, ((0, 0), (0, d_pad)))
+    q = _pad_axis0(q, blk_b, 0)
+    s, i = filtered_topk_pallas(q, emb, meta, pred, k,
+                                blk_b=blk_b, blk_n=blk_n, interpret=interpret)
+    return s[:B], i[:B]
+
+
+def filtered_topk(q, emb, tenant, updated_at, category, acl, pred, k: int,
+                  *, blk_b: int = 8, blk_n: int = 512,
+                  interpret: bool | None = None):
+    """Single-device entry point (contract of core.query.unified_query)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if k > emb.shape[0]:   # LIMIT larger than the arena: SQL semantics
+        k_eff = emb.shape[0]
+        s, i = filtered_topk(q, emb, tenant, updated_at, category, acl, pred,
+                             k_eff, blk_b=blk_b, blk_n=blk_n, interpret=interpret)
+        pad = ((0, 0), (0, k - k_eff))
+        return (jnp.pad(s, pad, constant_values=NEG_INF),
+                jnp.pad(i, pad, constant_values=-1))
+    meta = _pack_meta(tenant, updated_at, category, acl)
+    # pad rows *before* jit so padded tenant = -1 (dead rows)
+    pad = (-emb.shape[0]) % blk_n
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0)))
+        meta = jnp.pad(meta, ((0, pad), (0, 0)))
+        meta = meta.at[-pad:, 0].set(-1)
+    return _run(q, emb, meta, pred, k, blk_b, blk_n, interpret)
+
+
+def filtered_topk_sharded(mesh: Mesh, axis: str | tuple[str, ...],
+                          q, emb, meta, pred, k: int,
+                          *, blk_b: int = 8, blk_n: int = 512,
+                          interpret: bool | None = None):
+    """Distributed unified query over a row-sharded corpus.
+
+    emb (N, D) and meta (N, 4) sharded along axis; q replicated.
+    Returns (scores (B, k), GLOBAL slots (B, k)).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    n_local = emb.shape[0] // n_shards
+
+    blk_n_l = min(blk_n, n_local)
+    assert n_local % blk_n_l == 0, (n_local, blk_n_l)
+
+    def local_fn(q_l, emb_l, meta_l, pred_l):
+        shard_id = jax.lax.axis_index(axes)
+        B = q_l.shape[0]
+        q_pad = _pad_axis0(q_l, blk_b, 0)
+        s, i = filtered_topk_pallas(q_pad, emb_l, meta_l, pred_l, k,
+                                    blk_b=blk_b, blk_n=blk_n_l, interpret=interpret)
+        s, i = s[:B], i[:B]
+        i = jnp.where(i >= 0, i + shard_id * n_local, -1)
+        # constant-size merge: k candidates per shard
+        s_all = jax.lax.all_gather(s, axes, axis=1, tiled=True)   # (B, shards*k)
+        i_all = jax.lax.all_gather(i, axes, axis=1, tiled=True)
+        top_s, pos = jax.lax.top_k(s_all, k)
+        top_i = jnp.take_along_axis(i_all, pos, axis=1)
+        return top_s, jnp.where(top_s > jnp.float32(NEG_INF), top_i, -1)
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(P(), P(axes), P(axes), P()),
+                   out_specs=(P(), P()), check_rep=False)  # pallas outs carry no rep info
+    return fn(q, emb, meta, pred)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused flash-attention forward (GQA, causal).
+
+Motivated directly by the roofline finding (EXPERIMENTS §Perf, grok/granite
+iterations 3-4): the chunked-attention *jnp* path is algebraically optimal
+but its elementwise intermediates (scores, exp, mask selects) are separate
+HLO ops — XLA's op-level accounting (and, on real hardware, imperfect fusion)
+pays HBM-class traffic for what should be VMEM-resident values. This kernel
+fuses score -> mask -> online-softmax -> PV into ONE VMEM pass per
+(q-block, kv-block) tile: HBM traffic is exactly Q, K, V read + O written.
+
+  q        (B, S, KV, G, hd)
+  k, v     (B, S, KV, hd)
+  grid     (B, KV, S/blk_q, S/blk_k)   kv innermost -> sequential accumulate
+
+Causality is block-level: kv blocks above the diagonal are skipped with a
+scalar select; only the diagonal block pays a positional mask (built from
+iota in-register, never materialized to HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *,
+            blk_q: int, blk_k: int, scale: float, causal: bool):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros(acc.shape, jnp.float32)
+        m[...] = jnp.full(m.shape, NEG_INF, jnp.float32)
+        l[...] = jnp.zeros(l.shape, jnp.float32)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)                # (blk_q, G, hd)
+    G = q.shape[1]
+    hd = q.shape[2]
+    qf = q.reshape(blk_q * G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                # (blk_k, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(qf, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        # rows are (q position, group) pairs; mask in-register
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = qi * blk_q + row
+        kpos = ki * blk_k + col
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)            # (rows, 1)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev - m_new)                       # lane-uniform
+    pexp = jnp.exp(s - m_new[:, :1])
+    l[...] = l[...] * alpha + jnp.broadcast_to(
+        jnp.sum(pexp, axis=-1, keepdims=True), m_prev.shape)
+    acc[...] = acc[...] * alpha[:, :1] + jax.lax.dot_general(
+        pexp.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        out = acc[...] / jnp.maximum(l[...][:, :1], 1e-30)
+        o_ref[0, :, 0] = out.reshape(blk_q, G, hd).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, blk_q: int = 512,
+                           blk_k: int = 512, interpret: bool = False):
+    """q: (B, S, KV, G, hd); k, v: (B, S, KV, hd) -> (B, S, KV, G, hd)."""
+    B, S, KV, G, hd = q.shape
+    assert S % blk_q == 0 and S % blk_k == 0, (S, blk_q, blk_k)
+    scale = 1.0 / (hd ** 0.5)
+    grid = (B, KV, S // blk_q, S // blk_k)
+    kernel = functools.partial(_kernel, blk_q=blk_q, blk_k=blk_k, scale=scale,
+                               causal=causal)
+    rows = blk_q * G
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, G, hd), lambda b, kv, qi, ki: (b, qi, kv, 0, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, kv, qi, ki: (b, ki, kv, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, kv, qi, ki: (b, ki, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, G, hd),
+                               lambda b, kv, qi, ki: (b, qi, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return fn(q, k, v)

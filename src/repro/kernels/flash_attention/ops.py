@@ -1,0 +1,29 @@
+"""jit'd wrapper: (B, S, H, hd) layout + interpret fallback on CPU.
+
+Forward-only by design (serving prefill is the consumer). For training, the
+jnp chunked path (models/layers.gqa_chunked) remains the differentiable
+implementation; a fused backward is the logged next step for the grok/granite
+memory term (EXPERIMENTS §Perf lessons).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnames=("n_kv", "causal", "blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, n_kv: int, *, causal: bool = True,
+                    blk_q: int = 512, blk_k: int = 512,
+                    interpret: bool | None = None):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd)."""
+    from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, S, H, hd = q.shape
+    qg = q.reshape(B, S, n_kv, H // n_kv, hd)
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, S)
+    out = flash_attention_pallas(qg, k, v, causal=causal, blk_q=blk_q,
+                                 blk_k=blk_k, interpret=interpret)
+    return out.reshape(B, S, H, hd)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention forward kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q: (B, S, KV, G, hd); k, v: (B, S, KV, hd) -> (B, S, KV, G, hd)."""
+    B, S, KV, G, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,130 @@
+"""Multi-pod dry-run: lower + compile EVERY (arch x shape) cell on the
+production meshes, record memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+
+Results cache to results/dryrun.json incrementally (one entry per
+arch/shape/mesh); finished cells are skipped unless --force. The roofline
+pass (launch/roofline.py, EXPERIMENTS.md) reads this file.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, assigned_cells
+from repro.distributed.collectives import collective_bytes_of_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results")
+
+
+def cell_key(arch_id: str, shape: str, mesh_name: str) -> str:
+    return f"{arch_id}|{shape}|{mesh_name}"
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, mesh) -> dict:
+    t0 = time.perf_counter()
+    cell = build_cell(arch_id, shape_name, mesh)
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings)
+    lowered = jitted.lower(*cell.args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes_of_hlo(compiled.as_text())
+    out = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "note": cell.note,
+        "model_flops": cell.model_flops,
+        "hlo_flops": float(cost.get("flops", 0.0)),
+        "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "mem_args_bytes": int(mem.argument_size_in_bytes),
+        "mem_out_bytes": int(mem.output_size_in_bytes),
+        "mem_temp_bytes": int(mem.temp_size_in_bytes),
+        "mem_code_bytes": int(mem.generated_code_size_in_bytes),
+        "mem_alias_bytes": int(mem.alias_size_in_bytes),
+        "collective_bytes": coll,
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "ok": True,
+    }
+    del compiled, lowered
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--include-rag", action="store_true", default=True)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_path = args.out or os.path.join(os.path.abspath(RESULTS), "dryrun.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results: dict[str, dict] = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+
+    cells = assigned_cells()
+    if args.include_rag:
+        cells += [("rag-unified", s) for s in ARCHS["rag-unified"].shapes]
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod256_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pod512_2x16x16", make_production_mesh(multi_pod=True)))
+
+    n_fail = 0
+    for mesh_name, mesh in meshes:
+        for arch_id, shape_name in cells:
+            key = cell_key(arch_id, shape_name, mesh_name)
+            if not args.force and results.get(key, {}).get("ok"):
+                continue
+            print(f"=== {key}", flush=True)
+            try:
+                res = run_cell(arch_id, shape_name, mesh_name, mesh)
+                tot = sum(res["collective_bytes"].values())
+                print(f"    flops={res['hlo_flops']:.3e} bytes={res['hlo_bytes']:.3e} "
+                      f"coll={tot:.3e} temp={res['mem_temp_bytes']/2**30:.2f}GiB "
+                      f"args={res['mem_args_bytes']/2**30:.2f}GiB "
+                      f"(lower {res['lower_s']:.1f}s compile {res['compile_s']:.1f}s)",
+                      flush=True)
+            except Exception as e:
+                n_fail += 1
+                res = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"    FAIL {type(e).__name__}: {str(e)[:300]}", flush=True)
+            results[key] = res
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=1)
+    ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{ok}/{len(results)} cells ok, {n_fail} new failures -> {out_path}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

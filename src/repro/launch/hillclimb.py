@@ -1,0 +1,66 @@
+"""Perf hillclimbing driver: measure a named cell under the CURRENT code /
+env toggles and append a tagged entry to results/perf_iterations.json.
+
+  REPRO_LM_VP_LOSS=1 PYTHONPATH=src python -m repro.launch.hillclimb \\
+      --cell "grok-1-314b|train_4k" --tag vp_loss
+
+Each entry records the three roofline terms so EXPERIMENTS.md §Perf can show
+hypothesis -> change -> before -> after."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, RESULTS,
+                                   analyze, corrected_cell)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch|shape")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--cfg", default=None,
+                    help='JSON dataclasses.replace overrides, e.g. {"moe_impl": "scatter"}')
+    args = ap.parse_args()
+
+    arch_id, shape = args.cell.split("|")
+    multi = args.mesh == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    mesh_name = "pod512_2x16x16" if multi else "pod256_16x16"
+    n_chips = 512 if multi else 256
+
+    base_cfg = None
+    if args.cfg:
+        import dataclasses
+        from repro.configs import get
+        base_cfg = dataclasses.replace(get(arch_id).full, **json.loads(args.cfg))
+
+    entry = corrected_cell(arch_id, shape, mesh_name, mesh, cache={},
+                           base_cfg=base_cfg)
+    entry["analysis"] = analyze(entry, n_chips)
+    a = entry["analysis"]
+    t = a["terms_s"]
+    print(f"[{args.tag}] {args.cell} ({mesh_name})")
+    print(f"  compute={t['compute']*1e3:.2f}ms memory={t['memory']*1e3:.2f}ms "
+          f"collective={t['collective']*1e3:.2f}ms dominant={a['dominant']}")
+    print(f"  roofline={a['roofline_fraction']:.4f} useful={a['useful_flops_ratio']:.3f} "
+          f"temp={entry['temp_bytes']/2**30:.1f}GiB fits={a['fits_hbm']}")
+    print(f"  coll: " + ", ".join(f"{k}={v:.2e}" for k, v in entry["coll_by_kind"].items() if v))
+
+    out_path = os.path.join(os.path.abspath(RESULTS), "perf_iterations.json")
+    log = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            log = json.load(f)
+    entry.update(cell=args.cell, tag=args.tag, mesh=mesh_name,
+                 env={k: v for k, v in os.environ.items() if k.startswith("REPRO_")})
+    log.append(entry)
+    with open(out_path, "w") as f:
+        json.dump(log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

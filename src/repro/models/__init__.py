@@ -1,0 +1,1 @@
+"""Model zoo: transformer (dense/MoE), GNN, recsys — pure-functional JAX."""

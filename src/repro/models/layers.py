@@ -1,0 +1,346 @@
+"""Core neural-net layers, pure-functional JAX (no flax).
+
+Every layer is an (init, apply) pair over plain dict pytrees. Conventions:
+  * params are stored in the compute dtype requested by the config (bf16 for
+    production configs); norms/softmax run in fp32 internally.
+  * attention supports GQA (n_kv_heads <= n_heads), optional qk-norm and
+    QKV bias, RoPE, and both full (train/prefill) and single-token (decode,
+    KV-cache) paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (what llama-family models use)."""
+    std = 1.0 / np.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -3, 3, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+
+
+def attention_init(key, spec: AttentionSpec, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    D, H, KV, hd = spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim
+    p: Params = {
+        "wq": dense_init(ks[0], D, H * hd, dtype),
+        "wk": dense_init(ks[1], D, KV * hd, dtype),
+        "wv": dense_init(ks[2], D, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, D, dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, spec: AttentionSpec, x: jax.Array, positions: jax.Array):
+    """x: (B, S, D) -> q (B,S,H,hd), k,v (B,S,KV,hd) with rope/qk-norm applied."""
+    B, S, _ = x.shape
+    H, KV, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if spec.qk_norm:
+        q = rmsnorm(q, p["q_norm"], spec.norm_eps)
+        k = rmsnorm(k, p["k_norm"], spec.norm_eps)
+    q = apply_rope(q, positions, spec.rope_theta)
+    k = apply_rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def gqa_scores_softmax_out(q, k, v, mask, n_heads: int, n_kv: int):
+    """Grouped-query attention core. q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd).
+
+    mask: broadcastable to (B, KV, G, Sq, Sk) additive-mask bool (True = keep).
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    G = n_heads // n_kv
+    qg = q.reshape(B, Sq, n_kv, G, hd)
+    scale = 1.0 / np.sqrt(hd)
+    # scores: (B, KV, G, Sq, Sk)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def gqa_chunked(q, k, v, n_heads: int, n_kv: int, *, causal: bool,
+                blk_q: int = 1024, blk_k: int = 1024, unroll: bool = False):
+    """Memory-efficient (flash-style) GQA attention in pure JAX: scan over
+    query blocks, inner scan over KV blocks with online softmax. Never
+    materializes more than (B, KV, G, blk_q, blk_k) scores — this is what
+    makes 32k prefill and 4k x 256 training lowerable. Inner step is
+    rematerialized so backward recomputes scores instead of saving them.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) -> (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    G = n_heads // n_kv
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, Sk, blk_q, blk_k)
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq // blk_q, blk_q, n_kv, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    kg = k.reshape(B, Sk // blk_k, blk_k, n_kv, hd).transpose(1, 0, 3, 2, 4)
+    vg = v.reshape(B, Sk // blk_k, blk_k, n_kv, hd).transpose(1, 0, 3, 2, 4)
+    # qg: (nq, B, KV, G, blk_q, hd); kg/vg: (nk, B, KV, blk_k, hd)
+
+    # ONE constant (blk_q, blk_k) triangular mask shared by every diagonal
+    # block — per-block broadcasted_iota tensors were a dominant byte term
+    # in the roofline (s32[...,1024,1024] x 144 per layer); off-diagonal
+    # blocks need only a scalar select (§Perf iteration 4)
+    diag_mask = jnp.arange(blk_q)[:, None] >= jnp.arange(blk_k)[None, :] \
+        if causal and blk_q == blk_k else None
+
+    def q_block(qi, qb):
+        def kv_step(carry, inp):
+            m_prev, l_prev, acc = carry
+            ki, kb, vb = inp
+            s = jnp.einsum("bkgqh,bksh->bkgqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            if causal:
+                neg = jnp.finfo(jnp.float32).min
+                if diag_mask is not None:
+                    q_start, k_start = qi * blk_q, ki * blk_k
+                    s = jnp.where(k_start > q_start, neg,
+                                  jnp.where(k_start == q_start,
+                                            jnp.where(diag_mask, s, neg), s))
+                else:  # unequal blocks: per-position mask fallback
+                    qpos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+                    kpos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 4)
+                    s = jnp.where(qpos >= kpos, s, neg)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            alpha = jnp.exp(m_prev - m_new)
+            pexp = jnp.exp(s - m_new)
+            l_new = l_prev * alpha + pexp.sum(-1, keepdims=True)
+            # bf16 probabilities into the PV matmul (flash-attention
+            # standard); fp32 accumulators
+            acc_new = acc * alpha + jnp.einsum(
+                "bkgqs,bksh->bkgqh", pexp.astype(jnp.bfloat16),
+                vb.astype(jnp.bfloat16)).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        neg = jnp.finfo(jnp.float32).min
+        m0 = jnp.full((B, n_kv, G, blk_q, 1), neg, jnp.float32)
+        l0 = jnp.zeros((B, n_kv, G, blk_q, 1), jnp.float32)
+        a0 = jnp.zeros((B, n_kv, G, blk_q, hd), jnp.float32)
+        nk = Sk // blk_k
+        if unroll:  # roofline costing: loop bodies are invisible to
+            carry = (m0, l0, a0)  # cost_analysis inside scan/map
+            for ki in range(nk):
+                carry, _ = jax.checkpoint(kv_step)(
+                    carry, (jnp.int32(ki), kg[ki], vg[ki]))
+            m, l, acc = carry
+        else:
+            ks = jnp.arange(nk, dtype=jnp.int32)
+            (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                          (ks, kg, vg))
+        return acc / jnp.maximum(l, 1e-30)
+
+    nq = Sq // blk_q
+    if unroll:
+        outs = jnp.stack([q_block(jnp.int32(qi), qg[qi]) for qi in range(nq)])
+    else:
+        outs = jax.lax.map(lambda args: q_block(*args),
+                           (jnp.arange(nq, dtype=jnp.int32), qg))
+    # outs: (nq, B, KV, G, blk_q, hd) -> (B, Sq, H, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention_full(p: Params, spec: AttentionSpec, x: jax.Array, *,
+                   positions: jax.Array | None = None,
+                   causal: bool = True,
+                   segment_ids: jax.Array | None = None,
+                   impl: str = "auto", unroll: bool = False) -> jax.Array:
+    """Full self-attention (training / prefill without cache). x: (B,S,D).
+
+    impl: "naive" materializes (Sq, Sk) scores; "chunked" is the flash-style
+    O(blk) memory path; "auto" switches to chunked at S >= 2048.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(p, spec, x, positions)
+    if impl == "auto":
+        impl = "chunked" if S >= 2048 else "naive"
+    if impl == "chunked" and segment_ids is None:
+        out = gqa_chunked(q, k, v, spec.n_heads, spec.n_kv_heads, causal=causal,
+                          unroll=unroll)
+    else:
+        mask = jnp.ones((1, 1, 1, S, S), dtype=bool)
+        if causal:
+            mask = jnp.tril(jnp.ones((S, S), dtype=bool))[None, None, None]
+        if segment_ids is not None:
+            seg = segment_ids[:, None, None, :, None] == segment_ids[:, None, None, None, :]
+            mask = mask & seg
+        out = gqa_scores_softmax_out(q, k, v, mask, spec.n_heads, spec.n_kv_heads)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def attention_prefill(p: Params, spec: AttentionSpec, x: jax.Array, cache_len: int,
+                      impl: str = "auto", unroll: bool = False):
+    """Prefill: full causal attention AND return a KV cache of length cache_len.
+
+    Returns (out (B,S,D), (k_cache, v_cache) each (B, cache_len, KV, hd)).
+    """
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(p, spec, x, positions)
+    if impl == "auto":
+        impl = "chunked" if S >= 2048 else "naive"
+    if impl == "chunked":
+        out = gqa_chunked(q, k, v, spec.n_heads, spec.n_kv_heads, causal=True,
+                          unroll=unroll)
+    else:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))[None, None, None]
+        out = gqa_scores_softmax_out(q, k, v, mask, spec.n_heads, spec.n_kv_heads)
+    out = out.reshape(B, S, -1) @ p["wo"]
+    pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+    return out, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+
+def attention_decode(p: Params, spec: AttentionSpec, x: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     cur_index: jax.Array):
+    """Single-token decode. x: (B, 1, D); caches (B, S_max, KV, hd);
+    cur_index: scalar int32 — number of tokens already in the cache.
+
+    Returns (out (B,1,D), (k_cache', v_cache')).
+    """
+    B = x.shape[0]
+    S_max = k_cache.shape[1]
+    positions = jnp.full((B, 1), cur_index, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, spec, x, positions)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, cur_index, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, cur_index, 0, 0))
+    # mask out cache slots beyond the current token
+    valid = jnp.arange(S_max, dtype=jnp.int32) <= cur_index      # (S_max,)
+    mask = valid[None, None, None, None, :]                       # (1,1,1,1,S_max)
+    out = gqa_scores_softmax_out(q, k_cache, v_cache, mask, spec.n_heads, spec.n_kv_heads)
+    return out.reshape(B, 1, -1) @ p["wo"], (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# dense FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# generic MLP (recsys / gnn substrate)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, dims: tuple[int, ...], dtype) -> Params:
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer{i}": {"w": dense_init(ks[i], dims[i], dims[i + 1], dtype),
+                      "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, *, final_act: bool = False) -> jax.Array:
+    n = len(p)
+    for i in range(n):
+        lay = p[f"layer{i}"]
+        x = x @ lay["w"] + lay["b"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,347 @@
+"""RecSys model zoo: DLRM, FM, MIND, BERT4Rec — the ranking tier of the RAG
+production stack, and the family where the paper's unified retrieval engine
+applies directly (retrieval_cand = filtered candidate scoring).
+
+JAX has no native EmbeddingBag: `embedding_bag` below (take + segment_sum)
+IS the system's lookup primitive, used by every model here. Embedding tables
+are stacked (F, V, d) and table-sharded over the 'model' mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, embed_init, layernorm, mlp_apply, mlp_init
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag — the JAX-native gather-reduce lookup primitive
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: jax.Array, ids: jax.Array, segments: jax.Array,
+                  num_segments: int, mode: str = "sum",
+                  weights: jax.Array | None = None) -> jax.Array:
+    """table (V, d); ids (nnz,) int32; segments (nnz,) int32 sorted bag ids.
+    Returns (num_segments, d). mode: sum | mean | max."""
+    emb = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        emb = emb * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(emb, segments, num_segments)
+    if mode == "mean":
+        s = jax.ops.segment_sum(emb, segments, num_segments)
+        cnt = jax.ops.segment_sum(jnp.ones_like(segments, jnp.float32), segments, num_segments)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(emb, segments, num_segments)
+    raise ValueError(mode)
+
+
+def fielded_lookup(tables: jax.Array, ids: jax.Array) -> jax.Array:
+    """tables (F, V, d); ids (B, F, n_hot) -> bag-summed (B, F, d)."""
+    B, F, n_hot = ids.shape
+
+    def one_field(table_f, ids_f):                     # (V,d), (B,n_hot)
+        return jnp.take(table_f, ids_f, axis=0).sum(axis=1)
+
+    return jax.vmap(one_field, in_axes=(0, 1), out_axes=1)(tables, ids)
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ---------------------------------------------------------------------------
+# DLRM (Naumov et al., arXiv:1906.00091) — RM2 configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    vocab: int = 1_000_000
+    embed_dim: int = 64
+    bot_mlp: tuple[int, ...] = (13, 512, 256, 64)
+    top_mlp: tuple[int, ...] = (512, 512, 256, 1)
+    multi_hot: int = 1
+    dtype: str = "float32"
+
+    def param_count(self) -> int:
+        n = self.n_sparse * self.vocab * self.embed_dim
+        dims = self.bot_mlp
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        d_inter = self.embed_dim + (self.n_sparse + 1) * self.n_sparse // 2
+        dims = (d_inter,) + self.top_mlp[1:]
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        return n
+
+
+def dlrm_init(key, cfg: DLRMConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_inter = cfg.embed_dim + (cfg.n_sparse + 1) * cfg.n_sparse // 2
+    return {
+        "tables": (jax.random.normal(k1, (cfg.n_sparse, cfg.vocab, cfg.embed_dim), jnp.float32)
+                   * (1.0 / np.sqrt(cfg.embed_dim))).astype(dtype),
+        "bot": mlp_init(k2, cfg.bot_mlp, dtype),
+        "top": mlp_init(k3, (d_inter,) + cfg.top_mlp[1:], dtype),
+    }
+
+
+def dlrm_forward(params: Params, cfg: DLRMConfig, dense: jax.Array,
+                 sparse_ids: jax.Array) -> jax.Array:
+    """dense (B, n_dense) f32; sparse_ids (B, n_sparse, multi_hot) i32 -> logits (B,)."""
+    B = dense.shape[0]
+    x = mlp_apply(params["bot"], dense.astype(params["tables"].dtype), final_act=True)  # (B, d)
+    emb = fielded_lookup(params["tables"], sparse_ids)                 # (B, F, d)
+    z = jnp.concatenate([x[:, None, :], emb], axis=1)                   # (B, F+1, d)
+    inter = jnp.einsum("bid,bjd->bij", z, z)                             # dot interaction
+    iu, ju = jnp.triu_indices(z.shape[1], k=1)
+    flat = inter[:, iu, ju]                                              # (B, (F+1)F/2)
+    top_in = jnp.concatenate([x, flat], axis=1)
+    return mlp_apply(params["top"], top_in)[:, 0]
+
+
+def dlrm_loss(params: Params, cfg: DLRMConfig, batch: dict[str, jax.Array]) -> jax.Array:
+    logits = dlrm_forward(params, cfg, batch["dense"], batch["sparse_ids"])
+    return bce_loss(logits, batch["label"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# FM (Rendle, ICDM'10) — O(nk) sum-square trick
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    vocab: int = 1_000_000
+    embed_dim: int = 10
+    dtype: str = "float32"
+
+    def param_count(self) -> int:
+        return self.n_sparse * self.vocab * (self.embed_dim + 1) + 1
+
+
+def fm_init(key, cfg: FMConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "v": (jax.random.normal(k1, (cfg.n_sparse, cfg.vocab, cfg.embed_dim), jnp.float32)
+              * 0.01).astype(dtype),
+        "w": jnp.zeros((cfg.n_sparse, cfg.vocab), dtype),
+        "b": jnp.zeros((), dtype),
+    }
+
+
+def fm_forward(params: Params, cfg: FMConfig, sparse_ids: jax.Array) -> jax.Array:
+    """sparse_ids (B, F) -> logits (B,).  Σᵢ<ⱼ⟨vᵢ,vⱼ⟩ = ½[(Σv)² − Σv²]."""
+    v = jax.vmap(lambda t, i: jnp.take(t, i, axis=0), in_axes=(0, 1), out_axes=1)(
+        params["v"], sparse_ids)                                       # (B, F, d)
+    w = jax.vmap(lambda t, i: jnp.take(t, i, axis=0), in_axes=(0, 1), out_axes=1)(
+        params["w"], sparse_ids)                                       # (B, F)
+    sum_v = v.sum(axis=1)                                               # (B, d)
+    second = 0.5 * (sum_v * sum_v - (v * v).sum(axis=1)).sum(axis=-1)
+    return params["b"] + w.sum(axis=1) + second
+
+
+def fm_loss(params: Params, cfg: FMConfig, batch: dict[str, jax.Array]) -> jax.Array:
+    logits = fm_forward(params, cfg, batch["sparse_ids"])
+    return bce_loss(logits, batch["label"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# MIND (Li et al., arXiv:1904.08030) — multi-interest capsule routing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    vocab: int = 1_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    pow_p: float = 1.0          # label-aware attention sharpness
+    dtype: str = "float32"
+
+    def param_count(self) -> int:
+        return self.vocab * self.embed_dim + self.embed_dim * self.embed_dim
+
+
+def mind_init(key, cfg: MINDConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "items": embed_init(k1, cfg.vocab, cfg.embed_dim, dtype),
+        "S": dense_init(k2, cfg.embed_dim, cfg.embed_dim, dtype),   # bilinear map
+    }
+
+
+def _squash(x: jax.Array) -> jax.Array:
+    n2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params: Params, cfg: MINDConfig, hist_ids: jax.Array,
+                   hist_mask: jax.Array) -> jax.Array:
+    """hist_ids (B, L) i32; hist_mask (B, L) bool -> interests (B, K, d).
+
+    B2I dynamic routing: fixed (non-learned) routing logits refined for
+    capsule_iters; stop-gradient on logits per the paper.
+    """
+    B, Lh = hist_ids.shape
+    K = cfg.n_interests
+    e = jnp.take(params["items"], hist_ids, axis=0) @ params["S"]     # (B, L, d)
+    e = jnp.where(hist_mask[..., None], e, 0.0)
+    # deterministic per-sample init (paper: random normal, fixed) — seeded on ids
+    key = jax.random.fold_in(jax.random.PRNGKey(17), 0)
+    logits = jax.random.normal(key, (1, K, Lh), jnp.float32) * jnp.ones((B, 1, 1))
+
+    def routing_iter(logits, _):
+        w = jax.nn.softmax(logits, axis=1)                             # over K
+        w = jnp.where(hist_mask[:, None, :], w, 0.0)
+        z = jnp.einsum("bkl,bld->bkd", w, e.astype(jnp.float32))
+        u = _squash(z)
+        upd = jnp.einsum("bkd,bld->bkl", u, e.astype(jnp.float32))
+        return jax.lax.stop_gradient(logits + upd), u
+
+    logits, us = jax.lax.scan(routing_iter, logits, None, length=cfg.capsule_iters)
+    return us[-1].astype(e.dtype)                                      # (B, K, d)
+
+
+def mind_loss(params: Params, cfg: MINDConfig, batch: dict[str, jax.Array]) -> jax.Array:
+    """Sampled-softmax training with in-batch negatives.
+    batch: hist_ids (B,L), hist_mask (B,L), label_id (B,)."""
+    interests = mind_interests(params, cfg, batch["hist_ids"], batch["hist_mask"])
+    label_emb = jnp.take(params["items"], batch["label_id"], axis=0)   # (B, d)
+    # label-aware attention over interests
+    att = jnp.einsum("bkd,bd->bk", interests, label_emb)
+    att = jax.nn.softmax(cfg.pow_p * att, axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att, interests)                    # (B, d)
+    scores = user @ label_emb.T                                        # (B, B) in-batch
+    labels = jnp.arange(scores.shape[0])
+    logz = jax.nn.logsumexp(scores.astype(jnp.float32), axis=1)
+    gold = jnp.take_along_axis(scores.astype(jnp.float32), labels[:, None], 1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def mind_score(params: Params, cfg: MINDConfig, hist_ids, hist_mask,
+               cand_ids: jax.Array) -> jax.Array:
+    """Serving: max-over-interests dot. cand_ids (B, C) -> scores (B, C)."""
+    interests = mind_interests(params, cfg, hist_ids, hist_mask)       # (B,K,d)
+    cand = jnp.take(params["items"], cand_ids, axis=0)                 # (B,C,d)
+    return jnp.einsum("bkd,bcd->bkc", interests, cand).max(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec (Sun et al., arXiv:1904.06690) — bidirectional seq encoder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BERT4RecConfig:
+    name: str = "bert4rec"
+    vocab: int = 50_000          # item vocabulary ([MASK] = vocab, +1 row)
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    dtype: str = "float32"
+
+    @property
+    def mask_id(self) -> int:
+        return self.vocab
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        per_block = 4 * d * d + 4 * d + 2 * (4 * d * d) + 4 * d + 4 * d + 2 * d
+        return (self.vocab + 1) * d + self.seq_len * d + self.n_blocks * per_block
+
+
+def bert4rec_init(key, cfg: BERT4RecConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 2 + cfg.n_blocks)
+    d = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        ks = jax.random.split(keys[2 + i], 6)
+        blocks.append({
+            "wq": dense_init(ks[0], d, d, dtype), "wk": dense_init(ks[1], d, d, dtype),
+            "wv": dense_init(ks[2], d, d, dtype), "wo": dense_init(ks[3], d, d, dtype),
+            "ln1_s": jnp.ones((d,), dtype), "ln1_b": jnp.zeros((d,), dtype),
+            "w1": dense_init(ks[4], d, 4 * d, dtype), "b1": jnp.zeros((4 * d,), dtype),
+            "w2": dense_init(ks[5], 4 * d, d, dtype), "b2": jnp.zeros((d,), dtype),
+            "ln2_s": jnp.ones((d,), dtype), "ln2_b": jnp.zeros((d,), dtype),
+        })
+    return {
+        "items": embed_init(keys[0], cfg.vocab + 1, d, dtype),
+        "pos": embed_init(keys[1], cfg.seq_len, d, dtype),
+        "blocks": blocks,
+    }
+
+
+def bert4rec_encode(params: Params, cfg: BERT4RecConfig, ids: jax.Array,
+                    pad_mask: jax.Array) -> jax.Array:
+    """ids (B, S) i32; pad_mask (B, S) bool -> hidden (B, S, d).
+    Bidirectional (no causal mask) post-LN blocks with GELU FFN, per paper."""
+    B, S = ids.shape
+    d, H = cfg.embed_dim, cfg.n_heads
+    hd = d // H
+    x = jnp.take(params["items"], ids, axis=0) + params["pos"][None, :S]
+    att_mask = (pad_mask[:, None, None, :]).astype(jnp.float32)        # (B,1,1,S)
+    neg = jnp.finfo(jnp.float32).min
+    for blk in params["blocks"]:
+        q = (x @ blk["wq"]).reshape(B, S, H, hd)
+        k = (x @ blk["wk"]).reshape(B, S, H, hd)
+        v = (x @ blk["wv"]).reshape(B, S, H, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(hd)
+        s = jnp.where(att_mask > 0, s, neg)
+        p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B, S, d) @ blk["wo"]
+        x = layernorm(x + o, blk["ln1_s"], blk["ln1_b"])
+        h = jax.nn.gelu(x @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+        x = layernorm(x + h, blk["ln2_s"], blk["ln2_b"])
+    return x
+
+
+def bert4rec_loss(params: Params, cfg: BERT4RecConfig, batch: dict[str, jax.Array]) -> jax.Array:
+    """Masked-item prediction (cloze). batch:
+      ids (B,S) with [MASK] tokens, pad_mask (B,S),
+      mask_positions (B,M) positions that were masked (may repeat pos 0 as pad),
+      mask_targets (B,M) original ids (-1 = padding entry).
+
+    Hidden states are GATHERED at the M masked positions before the vocab
+    projection, so logits are (B, M, V) not (B, S, V) — at production batch
+    (65536 x 200 x 50k) the full-logits variant is a 10 TB buffer; the
+    gathered one is ~50x smaller (M = 20)."""
+    h = bert4rec_encode(params, cfg, batch["ids"], batch["pad_mask"])
+    pos = batch["mask_positions"]                                      # (B, M)
+    hm = jnp.take_along_axis(h, pos[..., None], axis=1)                # (B, M, d)
+    logits = (hm @ params["items"].T).astype(jnp.float32)              # (B, M, V+1)
+    targets = batch["mask_targets"]
+    sel = targets >= 0
+    t = jnp.maximum(targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+    return jnp.sum((logz - gold) * sel) / jnp.maximum(sel.sum(), 1)
+
+
+def bert4rec_score(params: Params, cfg: BERT4RecConfig, ids, pad_mask,
+                   cand_ids: jax.Array) -> jax.Array:
+    """Next-item scoring: encode with a trailing [MASK]; dot with candidates.
+    cand_ids (B, C) -> (B, C)."""
+    h = bert4rec_encode(params, cfg, ids, pad_mask)
+    # score at the last valid position (the appended [MASK])
+    last = jnp.sum(pad_mask.astype(jnp.int32), axis=1) - 1             # (B,)
+    hb = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]     # (B, d)
+    cand = jnp.take(params["items"], cand_ids, axis=0)                 # (B,C,d)
+    return jnp.einsum("bd,bcd->bc", hb, cand)

@@ -1,0 +1,146 @@
+"""Checkpointing: sharded, atomic, async, keep-k.
+
+Layout (one checkpoint = one directory):
+  <root>/step_000001230/
+    manifest.json        {step, n_leaves, paths, shapes, dtypes, time}
+    arrays.npz           leaf arrays keyed by flattened path
+
+Atomicity: write into `<root>/.tmp_<step>` then os.rename — a crash mid-write
+can never produce a directory that `latest_step` would pick up. Async: a
+single background writer thread (device->host copy happens on the caller
+thread; serialization off the critical path). keep-k pruning on every save.
+
+On restore, leaves are `device_put` against target shardings when provided —
+this is the resharding path fault_tolerance.py uses after an elastic re-mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "$"
+
+
+def _flatten(tree) -> tuple[list[str], list[Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    keys, vals = [], []
+    for path, leaf in flat:
+        keys.append(SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path))
+        vals.append(leaf)
+    return keys, vals
+
+
+def save(root: str, step: int, tree, *, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    keys, vals = _flatten(tree)
+    host = [np.asarray(jax.device_get(v)) for v in vals]
+    tmp = os.path.join(root, f".tmp_{step}")
+    final = os.path.join(root, f"step_{step:012d}")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **dict(zip(keys, host)))
+    manifest = {
+        "step": step,
+        "n_leaves": len(keys),
+        "paths": keys,
+        "shapes": [list(h.shape) for h in host],
+        "dtypes": [str(h.dtype) for h in host],
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _prune(root, keep)
+    return final
+
+
+def _prune(root: str, keep: int) -> None:
+    steps = sorted(all_steps(root))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(root, f"step_{s:012d}"), ignore_errors=True)
+
+
+def all_steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and os.path.exists(os.path.join(root, name, "manifest.json")):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(root: str) -> int | None:
+    steps = all_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore(root: str, step: int, like, *, shardings=None):
+    """Rebuild the pytree of `like` (structure donor) from checkpoint `step`.
+    `shardings`: optional matching pytree of jax.sharding.Sharding for
+    device placement (the elastic-resharding path)."""
+    path = os.path.join(root, f"step_{step:012d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    keys, _ = _flatten(like)
+    if set(keys) != set(manifest["paths"]):
+        missing = set(manifest["paths"]) ^ set(keys)
+        raise ValueError(f"checkpoint/model structure mismatch: {sorted(missing)[:5]} ...")
+    leaves = [data[k] for k in keys]
+    treedef = jax.tree_util.tree_structure(like)
+    if shardings is not None:
+        shard_leaves = treedef.flatten_up_to(shardings)
+        leaves = [jax.device_put(l, s) for l, s in zip(leaves, shard_leaves)]
+    else:
+        leaves = [jax.device_put(l) for l in leaves]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Background writer: `save()` snapshots to host synchronously (cheap),
+    serialization + fsync happen on the writer thread. `wait()` drains."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue()
+        self._err: list[BaseException] = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree_host = item
+            try:
+                save(self.root, step, tree_host, keep=self.keep)
+            except BaseException as e:  # surfaced on wait()
+                self._err.append(e)
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree) -> None:
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err:
+            raise self._err[0]
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

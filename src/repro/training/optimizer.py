@@ -1,0 +1,178 @@
+"""Optimizers in pure JAX (no optax in this environment).
+
+Interface (optax-like):
+  opt = adamw(lr=...) / adafactor(lr=...) / sgd(lr=...)
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params, step)
+  params = apply_updates(params, updates)
+
+`lr` may be a float or a schedule fn step->float. AdamW is the default for
+<=7B models; Adafactor (factored second moments, no momentum) is the
+production choice for grok-1-314b, where fp32 Adam moments alone (3.8 TB)
+exceed a pod's HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.float32(lr)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[..., tuple[Params, Any]]
+    name: str = "opt"
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum)
+# ---------------------------------------------------------------------------
+
+def sgd(lr, momentum: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr_t = _lr_at(lr, step)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads), state
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        return jax.tree.map(lambda m: -lr_t * m, mu), {"mu": mu}
+
+    return Optimizer(init, update, "sgd")
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = _lr_at(lr, step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+
+        def upd(m_, v_, p):
+            u = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v}
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, arXiv:1804.04235) — factored second moments
+# ---------------------------------------------------------------------------
+
+def adafactor(lr, decay: float = 0.8, eps1: float = 1e-30, eps2: float = 1e-3,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """Memory cost for a (n, m) matrix: n + m fp32 (vs 2·n·m for Adam)."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def per_param(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"f": jax.tree.map(per_param, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = _lr_at(lr, step)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps1
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps1)
+                precond = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(jnp.maximum(precond, eps1))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(v, eps1))
+                new_s = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr_t * u
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u, new_s
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        s_leaves = treedef.flatten_up_to(state["f"])
+        out = [upd(g, s, p) for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+        updates = jax.tree_util.tree_unflatten(treedef, [u for u, _ in out])
+        new_state = jax.tree_util.tree_unflatten(treedef, [s for _, s in out])
+        return updates, {"f": new_state}
+
+    return Optimizer(init, update, "adafactor")
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return fn

@@ -1,0 +1,110 @@
+"""Generic distributed training loop.
+
+`make_train_step` builds the jitted step for any (loss_fn, optimizer) pair,
+with optional microbatch gradient accumulation (lax.scan over microbatches —
+the standard way to overlap per-microbatch compute with the deferred
+gradient all-reduce under XLA's latency-hiding scheduler).
+
+`Trainer` owns the host loop: data iterator, periodic async checkpoints,
+straggler detection, and crash-restart (see fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import Optimizer, apply_updates
+
+TrainState = dict[str, Any]     # {"params", "opt", "step"}
+
+
+def init_state(params, optimizer: Optimizer) -> TrainState:
+    return {"params": params, "opt": optimizer.init(params), "step": jnp.int32(0)}
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer, *,
+                    accum_steps: int = 1, donate: bool = True):
+    """loss_fn(params, batch) -> scalar. Returns jitted
+    step(state, batch) -> (state, metrics).
+
+    With accum_steps > 1, batch leaves must have a leading microbatch axis
+    of that size; gradients average across microbatches inside one program.
+    """
+
+    def step_fn(state: TrainState, batch):
+        params = state["params"]
+
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, tot = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, tot + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0.0)), batch)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+
+        updates, opt_state = optimizer.update(grads, state["opt"], params, state["step"])
+        new_params = apply_updates(params, updates)
+        new_state = {"params": new_params, "opt": opt_state, "step": state["step"] + 1}
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_dir: str | None = None
+    ckpt_every: int = 100
+    ckpt_keep: int = 3
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, step_fn, state: TrainState,
+                 data: Iterator, *, straggler_detector=None, log_fn=print):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state = state
+        self.data = data
+        self.log_fn = log_fn
+        self.straggler = straggler_detector
+        self.ckpt = (ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.ckpt_keep)
+                     if cfg.ckpt_dir else None)
+        self.history: list[dict] = []
+
+    def run(self) -> TrainState:
+        start = int(jax.device_get(self.state["step"]))
+        for step in range(start, self.cfg.total_steps):
+            batch = next(self.data)
+            t0 = time.perf_counter()
+            self.state, metrics = self.step_fn(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if self.straggler is not None:
+                self.straggler.record(step, dt)
+            if step % self.cfg.log_every == 0 or step == self.cfg.total_steps - 1:
+                m = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+                m.update(step=step, step_time_s=dt)
+                self.history.append(m)
+                self.log_fn(f"step {step:6d}  loss {m['loss']:.4f}  "
+                            f"gnorm {m['grad_norm']:.3f}  {dt*1e3:.1f} ms")
+            if self.ckpt and (step + 1) % self.cfg.ckpt_every == 0:
+                self.ckpt.save(step + 1, self.state)
+        if self.ckpt:
+            self.ckpt.save(self.cfg.total_steps, self.state)
+            self.ckpt.close()
+        return self.state

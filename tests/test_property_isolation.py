@@ -1,0 +1,101 @@
+"""Hypothesis property tests on the system's central invariants.
+
+1. LEAKAGE-IMPOSSIBILITY: for ANY corpus, ANY predicate, ANY query, no row
+   returned by the unified engine violates the predicate (the paper's
+   row-level-security claim, attacked adversarially).
+2. TOP-K SOUNDNESS: returned scores are the true top-k of the masked score
+   vector, in non-increasing order.
+3. The filtered_topk Pallas kernel satisfies the same contract as the ref.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.query import Predicate, unified_query_ref
+from repro.kernels.filtered_topk.ops import filtered_topk
+
+
+def _store_from(emb, tenant, ts, cat, acl):
+    n = emb.shape[0]
+    return {
+        "emb": jnp.asarray(emb), "tenant": jnp.asarray(tenant),
+        "category": jnp.asarray(cat), "updated_at": jnp.asarray(ts),
+        "acl": jnp.asarray(acl, jnp.uint32),
+        "doc_id": jnp.arange(n, dtype=jnp.int32),
+        "version": jnp.zeros(n, jnp.int32),
+        "commit_ts": jnp.int32(1), "n_live": jnp.int32(n),
+    }
+
+
+corpus_st = st.integers(min_value=4, max_value=300).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.integers(min_value=0, max_value=2**32 - 1),  # numpy seed
+        st.integers(min_value=-2, max_value=5),          # tenant pred
+        st.integers(min_value=0, max_value=500),         # min_ts
+        st.integers(min_value=1, max_value=0xFFFFFFFF),  # cat mask
+        st.integers(min_value=1, max_value=0xFFFFFFFF),  # acl bits
+        st.integers(min_value=1, max_value=12),          # k
+    ))
+
+
+@given(corpus_st)
+@settings(max_examples=40, deadline=None)
+def test_no_leak_and_topk_sound(args):
+    n, seed, p_ten, p_ts, p_cat, p_acl, k = args
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((n, 8), dtype=np.float32)
+    tenant = rng.integers(-1, 6, n, dtype=np.int32)     # -1 = tombstones
+    ts = rng.integers(0, 600, n, dtype=np.int32)
+    cat = rng.integers(0, 32, n, dtype=np.int32)
+    acl = rng.integers(0, 2**31, n, dtype=np.int64).astype(np.uint32)
+    store = _store_from(emb, tenant, ts, cat, acl)
+    pred = Predicate(tenant=p_ten, min_ts=p_ts, cat_mask=p_cat, acl_bits=p_acl)
+    q = rng.standard_normal((2, 8), dtype=np.float32)
+
+    scores, slots = unified_query_ref(store, jnp.asarray(q), pred.as_array(), k)
+    scores, slots = np.asarray(scores), np.asarray(slots)
+
+    mask = (tenant >= 0) & (ts >= p_ts)
+    if p_ten != -2:
+        mask &= tenant == p_ten
+    mask &= ((np.uint64(1) << (cat.astype(np.uint64) & np.uint64(31)))
+             & np.uint64(p_cat)) != 0
+    mask &= (acl & np.uint32(p_acl)) != 0
+    ref = q @ emb.T
+    ref[:, ~mask] = -np.inf
+
+    for b in range(2):
+        # 1. no returned slot violates the predicate
+        got = slots[b][slots[b] >= 0]
+        assert mask[got].all(), "LEAK: predicate-violating row returned"
+        # 2. exactly min(k, qualifying) rows returned
+        assert len(got) == min(k, int(mask.sum()))
+        # 3. scores are the true top-k, non-increasing
+        want = np.sort(ref[b][mask])[::-1][: len(got)]
+        have = scores[b][scores[b] > -1e38]
+        assert (np.diff(have) <= 1e-6).all()
+        np.testing.assert_allclose(have, want, rtol=1e-4, atol=1e-5)
+
+
+@given(corpus_st)
+@settings(max_examples=15, deadline=None)
+def test_pallas_kernel_same_contract(args):
+    n, seed, p_ten, p_ts, p_cat, p_acl, k = args
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((n, 8), dtype=np.float32)
+    tenant = rng.integers(-1, 6, n, dtype=np.int32)
+    ts = rng.integers(0, 600, n, dtype=np.int32)
+    cat = rng.integers(0, 32, n, dtype=np.int32)
+    acl = rng.integers(0, 2**31, n, dtype=np.int64).astype(np.uint32)
+    pred = Predicate(tenant=p_ten, min_ts=p_ts, cat_mask=p_cat, acl_bits=p_acl)
+    q = rng.standard_normal((2, 8), dtype=np.float32)
+
+    store = _store_from(emb, tenant, ts, cat, acl)
+    s_ref, _ = unified_query_ref(store, jnp.asarray(q), pred.as_array(), k)
+    s_pal, i_pal = filtered_topk(jnp.asarray(q), jnp.asarray(emb),
+                                 jnp.asarray(tenant), jnp.asarray(ts),
+                                 jnp.asarray(cat), jnp.asarray(acl, jnp.uint32),
+                                 pred.as_array(), k, blk_n=64)
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-5)

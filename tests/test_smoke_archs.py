@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one real
+forward/train step on CPU, asserting output shapes and finiteness. The FULL
+configs are exercised only by the multi-pod dry-run (ShapeDtypeStructs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec
+from repro.models import transformer as tfm
+from repro.training.optimizer import adamw
+from repro.training.train_loop import init_state, make_train_step
+
+LM_ARCHS = [a for a, v in ARCHS.items() if v.family == "lm"]
+RECSYS_ARCHS = [a for a, v in ARCHS.items() if v.family == "recsys"]
+
+
+def _one_train_step(loss_fn, params, batch):
+    opt = adamw(1e-3, weight_decay=0.0)
+    step = make_train_step(loss_fn, opt, donate=False)
+    state, metrics = step(init_state(params, opt), batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), "loss not finite"
+    for leaf in jax.tree_util.tree_leaves(state["params"]):
+        assert np.isfinite(np.asarray(leaf)).all(), "params went non-finite"
+    return loss
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke(arch_id, rng):
+    cfg: tfm.TransformerConfig = ARCHS[arch_id].reduced
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32))
+    logits, aux = tfm.forward(params, cfg, toks)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss = _one_train_step(lambda p, b: tfm.loss_fn(p, cfg, b), params,
+                           {"tokens": toks, "labels": toks})
+    # untrained loss should be near ln(V)
+    assert abs(loss - np.log(cfg.vocab_size)) < 2.0
+    # serve path: prefill + one decode step
+    lg, cache = tfm.prefill(params, cfg, toks, cache_len=S + 4)
+    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+    lg2, _ = tfm.decode_step(params, cfg, nxt, cache, jnp.int32(S))
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+
+
+def _recsys_smoke_batch(arch_id, cfg, rng, B=16):
+    if arch_id == "dlrm-rm2":
+        return {"dense": jnp.asarray(rng.standard_normal((B, cfg.n_dense), dtype=np.float32)),
+                "sparse_ids": jnp.asarray(rng.integers(0, cfg.vocab, (B, cfg.n_sparse, cfg.multi_hot), dtype=np.int32)),
+                "label": jnp.asarray(rng.integers(0, 2, B, dtype=np.int32))}
+    if arch_id == "fm":
+        return {"sparse_ids": jnp.asarray(rng.integers(0, cfg.vocab, (B, cfg.n_sparse), dtype=np.int32)),
+                "label": jnp.asarray(rng.integers(0, 2, B, dtype=np.int32))}
+    if arch_id == "mind":
+        return {"hist_ids": jnp.asarray(rng.integers(0, cfg.vocab, (B, cfg.hist_len), dtype=np.int32)),
+                "hist_mask": jnp.ones((B, cfg.hist_len), bool),
+                "label_id": jnp.asarray(rng.integers(0, cfg.vocab, B, dtype=np.int32))}
+    if arch_id == "bert4rec":
+        S, M = cfg.seq_len, 3
+        ids = rng.integers(0, cfg.vocab, (B, S)).astype(np.int32)
+        pos = rng.integers(0, S, (B, M)).astype(np.int32)
+        tgt = np.take_along_axis(ids, pos, 1)
+        np.put_along_axis(ids, pos, cfg.mask_id, 1)
+        return {"ids": jnp.asarray(ids), "pad_mask": jnp.ones((B, S), bool),
+                "mask_positions": jnp.asarray(pos), "mask_targets": jnp.asarray(tgt)}
+    raise KeyError(arch_id)
+
+
+RECSYS_FNS = {
+    "dlrm-rm2": (rec.dlrm_init, rec.dlrm_loss),
+    "fm": (rec.fm_init, rec.fm_loss),
+    "mind": (rec.mind_init, rec.mind_loss),
+    "bert4rec": (rec.bert4rec_init, rec.bert4rec_loss),
+}
+
+
+@pytest.mark.parametrize("arch_id", RECSYS_ARCHS)
+def test_recsys_smoke(arch_id, rng):
+    cfg = ARCHS[arch_id].reduced
+    init_fn, loss_fn = RECSYS_FNS[arch_id]
+    params = init_fn(jax.random.PRNGKey(0), cfg)
+    batch = _recsys_smoke_batch(arch_id, cfg, rng)
+    loss = _one_train_step(lambda p, b: loss_fn(p, cfg, b), params, batch)
+    assert loss > 0
+
+
+@pytest.mark.parametrize("shape_kind", ["full", "sampled", "batched"])
+def test_gnn_smoke(shape_kind, rng):
+    base = ARCHS["gcn-cora"].reduced
+    if shape_kind == "batched":
+        cfg = dataclasses.replace(base, d_feat=8, n_classes=2)
+        B, Nn, Ne = 4, 10, 24
+        params = gnn_mod.gcn_init(jax.random.PRNGKey(0), cfg)
+        batch = {"feats": jnp.asarray(rng.standard_normal((B, Nn, 8), dtype=np.float32)),
+                 "src": jnp.asarray(rng.integers(0, Nn, (B, Ne), dtype=np.int32)),
+                 "dst": jnp.asarray(rng.integers(0, Nn, (B, Ne), dtype=np.int32)),
+                 "edge_mask": jnp.ones((B, Ne), bool),
+                 "node_mask": jnp.ones((B, Nn), bool),
+                 "labels": jnp.asarray(rng.integers(0, 2, B, dtype=np.int32))}
+        loss = _one_train_step(lambda p, b: gnn_mod.gcn_loss_batched(p, cfg, b),
+                               params, batch)
+        assert loss > 0
+        return
+    cfg = base
+    if shape_kind == "sampled":
+        # real sampler -> padded fixed-shape subgraph -> jitted step
+        N, E = 80, 400
+        src = rng.integers(0, N, E).astype(np.int32)
+        dst = rng.integers(0, N, E).astype(np.int32)
+        samp = gnn_mod.NeighborSampler(N, src, dst, seed=1)
+        sub = samp.sample(np.arange(8), (4, 3))
+        n_sub = sub["nodes"].shape[0]
+        feats = rng.standard_normal((N, cfg.d_feat)).astype(np.float32)
+        sub_feats = np.where(sub["nodes"][:, None] >= 0,
+                             feats[np.maximum(sub["nodes"], 0)], 0.0)
+        labels = rng.integers(0, cfg.n_classes, n_sub).astype(np.int32)
+        lmask = np.zeros(n_sub, np.float32)
+        lmask[:8] = 1.0                                 # loss on seeds only
+        batch = {"feats": jnp.asarray(sub_feats), "src": jnp.asarray(sub["src"]),
+                 "dst": jnp.asarray(sub["dst"]),
+                 "edge_mask": jnp.asarray(sub["edge_mask"]),
+                 "labels": jnp.asarray(labels), "label_mask": jnp.asarray(lmask)}
+    else:
+        N, E = 50, 200
+        batch = {"feats": jnp.asarray(rng.standard_normal((N, cfg.d_feat), dtype=np.float32)),
+                 "src": jnp.asarray(rng.integers(0, N, E, dtype=np.int32)),
+                 "dst": jnp.asarray(rng.integers(0, N, E, dtype=np.int32)),
+                 "labels": jnp.asarray(rng.integers(0, cfg.n_classes, N, dtype=np.int32)),
+                 "label_mask": jnp.ones(N, np.float32)}
+    params = gnn_mod.gcn_init(jax.random.PRNGKey(0), cfg)
+    loss = _one_train_step(lambda p, b: gnn_mod.gcn_loss(p, cfg, b), params, batch)
+    assert loss > 0
+
+
+def test_rag_reduced_smoke(rng):
+    """The paper's own arch at reduced scale: ingest -> unified query."""
+    from repro.configs.rag_unified import REDUCED, REDUCED_CORPUS
+    from repro.core import Predicate, TransactionLog, empty, unified_query
+    from repro.data.corpus import make_corpus, make_queries
+    log = TransactionLog(REDUCED, empty(REDUCED))
+    log.ingest(make_corpus(REDUCED_CORPUS))
+    q = make_queries(REDUCED_CORPUS, 1, batch=2)[0]
+    s, slots = unified_query(log.snapshot(), q, Predicate(tenant=1), k=4)
+    assert s.shape == (2, 4) and np.isfinite(np.asarray(s)).any()
+
+
+def test_registry_covers_assigned_cells():
+    from repro.configs import assigned_cells
+    cells = assigned_cells()
+    assert len(cells) == 40, f"expected 40 assigned cells, got {len(cells)}"
+    assert len({a for a, _ in cells}) == 10
