@@ -3,35 +3,49 @@
 Reproduces the paper's crossover finding: equal latency on pure similarity,
 split-system overhead growing with constraint count (round trips + app-side
 merge + retry-on-underfill), unified latency flat or falling with selectivity.
+
+Stack B goes through the front door (RagDB session -> builder -> planner ->
+grouped executor), so the numbers include the full API path, and each query
+type's compiled plan is recorded via explain().
+
+A second section measures predicate-group batching: a B-request batch with G
+unique predicate groups served as G stacked device calls (the RAGEngine.serve
+fast path) versus the old per-request loop of B calls.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import (PAPER, QUERY_TYPES, build_stacks, percentiles,
+from benchmarks.common import (PAPER, QUERY_TYPES, SESSION_QUERIES,
+                               build_ragdb, build_stacks, percentiles,
                                save_result, timeit)
-from repro.core import unified_query
-from repro.data.corpus import make_queries
+from repro.api.executor import run_grouped
+from repro.core import Predicate, unified_query
+from repro.data.corpus import DAY_S, make_queries
 
 
 def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
     from repro.data.corpus import CorpusConfig
     ccfg = CorpusConfig(n_docs=n_docs)
-    unified, split, corpus, (ccfg, scfg) = build_stacks(ccfg)
-    snap = unified.snapshot()
+    _, split, corpus, (ccfg, scfg) = build_stacks(ccfg, with_unified=False)
+    db, _, _ = build_ragdb(ccfg, corpus=corpus)
     queries = make_queries(ccfg, 8, batch=1)
     k = 5
 
     table: dict[str, dict] = {}
-    for qt, make_pred in QUERY_TYPES.items():
-        pred = make_pred(ccfg)
+    for qt, make_builder in SESSION_QUERIES.items():
+        pred = QUERY_TYPES[qt](ccfg)
+        sess_k = lambda q: (make_builder(db, ccfg, np.asarray(q)[0])
+                            .limit(k).using(engine))
+        plan_text = sess_k(queries[0]).explain()
 
         qi = [0]
 
         def q_unified():
             q = queries[qi[0] % len(queries)]
-            s, i = unified_query(snap, q, pred, k, engine=engine)
-            jax.block_until_ready(s)
+            sess_k(q).run()
             qi[0] += 1
 
         def q_split():
@@ -43,6 +57,7 @@ def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
         a = percentiles(timeit(q_split, iters=iters))
         table[qt] = {"stack_a": a, "stack_b": b,
                      "speedup_p50": a["p50"] / max(b["p50"], 1e-9),
+                     "plan": plan_text,
                      "paper": PAPER["latency_ms"][qt]}
         print(f"{qt:18s}  A p50={a['p50']:7.2f}ms  B p50={b['p50']:7.2f}ms  "
               f"(paper: A {PAPER['latency_ms'][qt]['A_p50']} / "
@@ -51,8 +66,44 @@ def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
     out = {"table": table, "iters": iters, "n_docs": ccfg.n_docs, "dim": ccfg.dim,
            "engine": engine,
            "split_round_trips": split.stats.round_trips,
-           "split_retries": split.stats.retries}
+           "split_retries": split.stats.retries,
+           "batched_vs_looped": run_batched_vs_looped(
+               db, ccfg, iters=max(iters // 4, 20), engine=engine, k=k)}
     save_result("bench_latency", out)
+    return out
+
+
+def run_batched_vs_looped(db, ccfg, *, iters: int, engine: str, k: int,
+                          batch: int = 32, n_groups: int = 4) -> dict:
+    """The RAGEngine.serve hot path, isolated: B per-request predicates with
+    G unique groups — looped (B device calls, the pre-front-door serve loop)
+    vs predicate-group batched (G device calls over stacked rows)."""
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((batch, ccfg.dim)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    preds = [Predicate(tenant=i % n_groups,
+                       min_ts=ccfg.now_ts - 120 * DAY_S)
+             for i in range(batch)]
+    snap = db.log.snapshot()
+
+    def looped():
+        for i, p in enumerate(preds):
+            s, _ = unified_query(snap, jnp.asarray(q[i:i + 1]), p, k,
+                                 engine=engine)
+            jax.block_until_ready(s)
+
+    def grouped():
+        run_grouped(snap, q, preds, k, engine=engine)
+
+    t_loop = percentiles(timeit(looped, iters=iters))
+    t_group = percentiles(timeit(grouped, iters=iters))
+    out = {"batch": batch, "unique_groups": n_groups,
+           "looped_ms": t_loop, "grouped_ms": t_group,
+           "speedup_p50": t_loop["p50"] / max(t_group["p50"], 1e-9)}
+    print(f"batched retrieval: B={batch} requests, G={n_groups} groups  "
+          f"looped p50={t_loop['p50']:.2f}ms ({batch} calls)  "
+          f"grouped p50={t_group['p50']:.2f}ms ({n_groups} calls)  "
+          f"speedup {out['speedup_p50']:.1f}x")
     return out
 
 

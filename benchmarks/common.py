@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Predicate, StoreConfig, TransactionLog, empty
+from repro.api import RagDB
+from repro.core import Predicate, Principal, StoreConfig, TransactionLog, empty
 from repro.core.splitstack import SplitStackClient
 from repro.data.corpus import DAY_S, CorpusConfig, make_corpus, make_queries
 
@@ -34,18 +35,42 @@ PAPER = {  # the paper's own measured numbers, for side-by-side reporting
 }
 
 
-def build_stacks(corpus_cfg: CorpusConfig | None = None, *,
-                 filter_bug_rate: float = 0.0, seed: int = 0):
-    """Returns (unified TransactionLog, SplitStackClient, corpus, cfgs)."""
-    ccfg = corpus_cfg or CorpusConfig()
-    scfg = StoreConfig(capacity=1 << (int(np.ceil(np.log2(ccfg.n_docs))) + 1),
+def bench_store_cfg(ccfg: CorpusConfig) -> StoreConfig:
+    """One arena-size rule for every benchmark stack (next pow2 + headroom),
+    so unified and split sides always measure against identical capacity."""
+    return StoreConfig(capacity=1 << (int(np.ceil(np.log2(ccfg.n_docs))) + 1),
                        dim=ccfg.dim)
+
+
+def build_stacks(corpus_cfg: CorpusConfig | None = None, *,
+                 filter_bug_rate: float = 0.0, seed: int = 0,
+                 with_unified: bool = True):
+    """Returns (unified TransactionLog, SplitStackClient, corpus, cfgs).
+    `with_unified=False` skips building/ingesting the unified log (None is
+    returned) for callers that measure the unified side via build_ragdb."""
+    ccfg = corpus_cfg or CorpusConfig()
+    scfg = bench_store_cfg(ccfg)
     corpus = make_corpus(ccfg)
-    unified = TransactionLog(scfg, empty(scfg))
-    unified.ingest(corpus)
+    unified = None
+    if with_unified:
+        unified = TransactionLog(scfg, empty(scfg))
+        unified.ingest(corpus)
     split = SplitStackClient(scfg, filter_bug_rate=filter_bug_rate, rng_seed=seed)
     split.ingest(corpus)
     return unified, split, corpus, (ccfg, scfg)
+
+
+def build_ragdb(corpus_cfg: CorpusConfig | None = None, *, corpus=None):
+    """The unified stack behind the front door: RagDB + ingested corpus.
+    Pass `corpus` to reuse one already built (e.g. by build_stacks) instead
+    of regenerating it."""
+    ccfg = corpus_cfg or CorpusConfig()
+    scfg = bench_store_cfg(ccfg)
+    if corpus is None:
+        corpus = make_corpus(ccfg)
+    db = RagDB(scfg)
+    db.ingest(corpus)
+    return db, corpus, (ccfg, scfg)
 
 
 QUERY_TYPES = {
@@ -55,6 +80,21 @@ QUERY_TYPES = {
     "tenant_category": lambda ccfg: Predicate(tenant=3, cat_mask=0b00110),
     "full_multi": lambda ccfg: Predicate(tenant=3, min_ts=ccfg.now_ts - 60 * DAY_S,
                                          cat_mask=0b00110, acl_bits=0b0011),
+}
+
+# the same four levels expressed through the session API; each entry takes
+# (db, ccfg, q_emb) and returns a ready QueryBuilder lowering to the exact
+# Predicate its QUERY_TYPES twin builds
+SESSION_QUERIES = {
+    "pure_similarity": lambda db, ccfg, q: db.admin_session().search(q),
+    "date_filter": lambda db, ccfg, q: (db.admin_session().search(q)
+                                        .newer_than(ccfg.now_ts - 60 * DAY_S)),
+    "tenant_category": lambda db, ccfg, q: (
+        db.session(Principal(tenant_id=3, group_bits=0xFFFFFFFF))
+        .search(q).in_categories([1, 2])),
+    "full_multi": lambda db, ccfg, q: (
+        db.session(Principal(tenant_id=3, group_bits=0b0011))
+        .search(q).newer_than(ccfg.now_ts - 60 * DAY_S).in_categories([1, 2])),
 }
 
 

@@ -1,0 +1,14 @@
+"""The front-door API: one session-scoped entrance to the unified data layer.
+
+  ragdb.py     RagDB (storage + tenants + plan execution), Session (principal
+               -scoped; the only way to query), QueryBuilder (composable chain)
+  plan.py      LogicalPlan (what was asked) / PhysicalPlan (how it runs) with
+               SQL-style explain()
+  planner.py   deterministic compilation: engine selection + tier routing
+  executor.py  predicate-group batched execution; the single dispatch point
+               for retrieval device calls
+"""
+from repro.api.executor import ExecStats  # noqa: F401
+from repro.api.plan import LogicalPlan, PhysicalPlan  # noqa: F401
+from repro.api.planner import PlannerConfig, compile_plan  # noqa: F401
+from repro.api.ragdb import QueryBuilder, QueryResult, RagDB, Session  # noqa: F401

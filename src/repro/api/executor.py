@@ -1,0 +1,154 @@
+"""Physical-plan execution — the ONLY module that issues retrieval device
+calls for the front-door API (and, via shims, for TieredRouter and
+RAGEngine). Centralizing the dispatch is what makes the two headline
+behaviors enforceable and testable:
+
+  * predicate-group batching: a batch of B concurrent queries is grouped by
+    `PhysicalPlan.group_key` (predicate, k, engine) and each group runs as
+    ONE device program over the stacked query rows — B requests with G
+    unique predicate groups cost G device calls, not B;
+  * tier merge: "hot+warm" plans probe the warm similarity tier and merge
+    the two k-lists host-side, exactly as TieredRouter.query always did.
+
+Tests count calls by monkeypatching `executor.unified_query`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.plan import PhysicalPlan
+from repro.core.query import Predicate, unified_query
+from repro.core.store import Store
+
+#: tier tags in the returned `tiers` array
+TIER_HOT = 0
+TIER_WARM = 1
+
+
+@dataclasses.dataclass
+class ExecStats:
+    device_calls: int = 0         # retrieval programs launched on-device
+    queries: int = 0              # logical queries answered
+    hot_queries: int = 0
+    warm_queries: int = 0
+
+
+def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
+              engine: str, sharded_fn=None):
+    """One retrieval device program. `sharded_fn` is the cached
+    make_sharded_query callable when engine == 'sharded'."""
+    if engine == "sharded":
+        if sharded_fn is None:
+            raise ValueError("engine='sharded' requires a mesh-built RagDB")
+        return sharded_fn(store, q, pred.as_array())
+    return unified_query(store, q, pred, k, engine=engine)
+
+
+def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
+                engine: str = "ref", *, sharded_fn=None,
+                stats: ExecStats | None = None):
+    """Predicate-group batched retrieval over one store.
+
+    q: (B, D) host array, preds: B predicates (one per row). Rows sharing a
+    predicate are stacked and answered by one device call. Returns
+    (scores (B, k) f32, slots (B, k) i32, n_device_calls).
+    """
+    B = q.shape[0]
+    groups: dict[Predicate, list[int]] = {}
+    for i, p in enumerate(preds):
+        groups.setdefault(p, []).append(i)
+    scores = np.full((B, k), np.float32(np.finfo(np.float32).min), np.float32)
+    slots = np.full((B, k), -1, np.int32)
+    for pred, idxs in groups.items():
+        s, sl = _dispatch(store, jnp.asarray(q[np.asarray(idxs)]), pred, k,
+                          engine, sharded_fn)
+        scores[idxs], slots[idxs] = np.asarray(s), np.asarray(sl)
+    if stats is not None:
+        stats.device_calls += len(groups)
+        stats.queries += B
+        stats.hot_queries += B
+    return scores, slots, len(groups)
+
+
+def merge_tiers(hs, hi, ws, wi, k: int):
+    """Merge hot and warm k-lists into the global top-k (host-side)."""
+    scores = np.concatenate([hs, ws], axis=1)
+    slots = np.concatenate([hi, wi], axis=1)
+    tiers = np.concatenate([np.full_like(hi, TIER_HOT),
+                            np.full_like(wi, TIER_WARM)], axis=1)
+    order = np.argsort(-scores, axis=1)[:, :k]
+    gather = lambda a: np.take_along_axis(a, order, axis=1)
+    return gather(scores), gather(slots), gather(tiers)
+
+
+def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
+                 k: int, *, engine: str = "ref", probe_warm: bool = False,
+                 sharded_fn=None, stats: ExecStats | None = None):
+    """Single-predicate tiered retrieval (TieredRouter.query's engine room).
+
+    Returns (scores (B, k), slots (B, k), tiers (B, k)) as numpy arrays."""
+    hs, hi = _dispatch(hot_store, q, pred, k, engine, sharded_fn)
+    hs, hi = jax.device_get((hs, hi))
+    if stats is not None:
+        stats.device_calls += 1
+        stats.queries += q.shape[0]
+        stats.hot_queries += q.shape[0]
+    if not probe_warm:
+        return hs, hi, np.full_like(hi, TIER_HOT)
+    # the warm client's round trips (vector scan + metadata fetch, retries
+    # included) are device programs too — count them, or device_calls would
+    # under-report exactly when the expensive route runs
+    rt0 = warm.stats.round_trips
+    ws, wi = warm.query(q, pred, k)
+    if stats is not None:
+        stats.device_calls += warm.stats.round_trips - rt0
+        stats.warm_queries += q.shape[0]
+    return merge_tiers(hs, hi, ws, wi, k)
+
+
+def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
+                  sharded_fn=None, stats: ExecStats | None = None):
+    """Batched execution of compiled plans: group by `group_key`, one hot
+    device call per group, warm probe + merge for 'hot+warm' groups.
+
+    Every plan must carry its query rows (`logical.q`, shape (B_i, D)).
+    Returns (scores (B, k), slots (B, k), tiers (B, k)) with B = total query
+    rows across plans, in plan order. All plans must share one k.
+    """
+    ks = {p.logical.k for p in plans}
+    if len(ks) != 1:
+        raise ValueError(f"batched execution needs a single k, got {sorted(ks)}")
+    k = ks.pop()
+
+    # flatten plan -> row spans
+    row_plans: list[PhysicalPlan] = []
+    qs: list[np.ndarray] = []
+    for p in plans:
+        if p.logical.q is None:
+            raise ValueError("plan carries no query embedding")
+        q = np.atleast_2d(np.asarray(p.logical.q, np.float32))
+        qs.append(q)
+        row_plans.extend([p] * q.shape[0])
+    q_all = np.concatenate(qs, axis=0)
+    B = q_all.shape[0]
+
+    groups: dict[tuple, list[int]] = {}
+    for i, p in enumerate(row_plans):
+        groups.setdefault(p.group_key, []).append(i)
+
+    scores = np.full((B, k), np.float32(np.finfo(np.float32).min), np.float32)
+    slots = np.full((B, k), -1, np.int32)
+    tiers = np.full((B, k), TIER_HOT, np.int32)
+    for key, idxs in groups.items():
+        plan = row_plans[idxs[0]]
+        q_g = jnp.asarray(q_all[np.asarray(idxs)])
+        s, sl, tr = query_tiered(hot_store, warm, q_g, plan.pred, k,
+                                 engine=plan.engine,
+                                 probe_warm=(plan.route == "hot+warm"),
+                                 sharded_fn=sharded_fn, stats=stats)
+        scores[idxs], slots[idxs], tiers[idxs] = s, sl, tr
+    return scores, slots, tiers

@@ -1,0 +1,111 @@
+"""Logical and physical query plans — the middle of the front door.
+
+A builder chain (`session.search(q).newer_than(ts).limit(k)`) *lowers* to a
+`LogicalPlan`: a declarative description of WHAT the query asks for —
+similarity target, predicate clauses, LIMIT — with the tenant/ACL clauses
+already stamped from the authenticated principal (they cannot be expressed by
+the builder at all; see ragdb.Session).
+
+The planner (planner.py) *compiles* a LogicalPlan into a `PhysicalPlan`: HOW
+the engine will answer it — execution engine (ref / pallas / sharded), tier
+route (hot-only vs hot+warm merge), and the predicate-group key under which
+concurrent queries are batched into one device program.
+
+`PhysicalPlan.explain()` renders the compiled plan the way a SQL EXPLAIN
+would, so benchmark tables and tests can assert on planner decisions instead
+of reverse-engineering them from timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.query import Predicate
+
+#: Predicate pass-all sentinels (mirrors core.query.Predicate defaults).
+ANY_TENANT = -2
+ALL_BITS = 0xFFFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalPlan:
+    """What the caller asked for. Immutable; the query embedding travels
+    alongside (`q`, shape (B, D)) but is excluded from equality/hash so plans
+    that differ only in the vector share one predicate group."""
+    tenant: int = ANY_TENANT          # stamped from the principal, never caller-set
+    acl_bits: int = ALL_BITS          # stamped from the principal
+    min_ts: int = 0                   # newer_than()
+    categories: tuple[int, ...] | None = None   # in_categories()
+    k: int = 10                       # limit()
+    engine: str | None = None         # using(); None = planner's choice
+    q: np.ndarray | None = dataclasses.field(
+        default=None, compare=False, hash=False, repr=False)
+
+    def predicate(self) -> Predicate:
+        from repro.core.tenancy import category_mask
+        cat_mask = (ALL_BITS if self.categories is None
+                    else category_mask(self.categories))
+        return Predicate(tenant=self.tenant, min_ts=self.min_ts,
+                         cat_mask=cat_mask, acl_bits=self.acl_bits & ALL_BITS)
+
+    @property
+    def constrained(self) -> bool:
+        """Any clause beyond pure similarity (drives tier routing)."""
+        return (self.tenant != ANY_TENANT or self.min_ts > 0
+                or self.categories is not None or self.acl_bits != ALL_BITS)
+
+
+def logical_from_predicate(pred: Predicate, *, k: int,
+                           engine: str | None = None,
+                           q: np.ndarray | None = None) -> LogicalPlan:
+    """Lift an already-lowered Predicate back to a LogicalPlan — the compat
+    path for callers holding raw Predicates (TieredRouter shim, benchmarks)."""
+    cats = None
+    if pred.cat_mask != ALL_BITS:
+        cats = tuple(c for c in range(32) if pred.cat_mask & (1 << c))
+    return LogicalPlan(tenant=pred.tenant, acl_bits=pred.acl_bits,
+                       min_ts=pred.min_ts, categories=cats, k=k,
+                       engine=engine, q=q)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalPlan:
+    """How the engine will answer it. Produced only by planner.compile_plan."""
+    logical: LogicalPlan
+    pred: Predicate                   # lowered clause set (the kernel contract)
+    engine: str                       # "ref" | "pallas" | "sharded"
+    engine_reason: str
+    route: str                        # "hot" | "hot+warm"
+    route_reason: str
+    n_rows: int                       # hot-tier arena rows the scan covers
+
+    @property
+    def group_key(self) -> tuple:
+        """Queries sharing this key share ONE device program per batch —
+        the predicate-group batching contract (executor.run_grouped). The
+        route is part of the key: two plans can lower to the same predicate
+        (e.g. in_categories(range(32)) == no category clause) yet route
+        differently, and grouping them would apply one plan's tiers to the
+        other's results."""
+        return (self.pred, self.logical.k, self.engine, self.route)
+
+    def explain(self) -> str:
+        lp = self.logical
+        clauses = ["live (tenant >= 0)"]
+        if lp.tenant != ANY_TENANT:
+            clauses.append(f"tenant = {lp.tenant}")
+        if lp.min_ts > 0:
+            clauses.append(f"updated_at >= {lp.min_ts}")
+        if lp.categories is not None:
+            clauses.append(f"category IN {set(lp.categories)}")
+        if lp.acl_bits != ALL_BITS:
+            clauses.append(f"acl & {lp.acl_bits:#x}")
+        lines = [
+            f"PhysicalPlan  top-{lp.k} over {self.n_rows} hot-tier rows",
+            f"  predicate: {' AND '.join(clauses)}",
+            f"  engine:    {self.engine:8s} ({self.engine_reason})",
+            f"  route:     {self.route:8s} ({self.route_reason})",
+            f"  batching:  predicate-group key {self.group_key!r}",
+        ]
+        return "\n".join(lines)

@@ -1,0 +1,70 @@
+"""The planner: LogicalPlan -> PhysicalPlan.
+
+Deterministic compilation rules (documented in DESIGN.md §Planner):
+
+Engine selection — first match wins:
+  1. the builder's explicit `.using(engine)` hint;
+  2. "sharded"  if the RagDB was built with a device mesh and the hot arena
+     is at least `shard_min_rows` (the make_sharded_query path: per-shard
+     masked scan + constant-size O(shards·k) merge);
+  3. "pallas"   on a TPU backend once the arena crosses `pallas_min_rows`
+     (the fused filtered_topk kernel amortizes its launch there);
+  4. "ref"      otherwise (pure-jnp reference; fastest at small N and the
+     only engine on CPU test rigs).
+
+Tier routing — the paper's §7.3 invariant, previously buried inside
+`TieredRouter.query`:
+  * multi-constraint queries that only need the hot window are answered by
+    the hot unified tier alone ("hot");
+  * everything else additionally probes the warm similarity tier and merges
+    ("hot+warm") — unless the warm tier is empty, in which case probing it
+    could only return padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.api.plan import LogicalPlan, PhysicalPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    pallas_min_rows: int = 1 << 15    # fused-kernel launch amortization point
+    shard_min_rows: int = 1 << 20     # below this a single device wins
+
+
+def choose_engine(logical: LogicalPlan, *, n_rows: int,
+                  cfg: PlannerConfig = PlannerConfig(),
+                  has_mesh: bool = False) -> tuple[str, str]:
+    if logical.engine is not None:
+        return logical.engine, "caller hint (.using())"
+    if has_mesh and n_rows >= cfg.shard_min_rows:
+        return "sharded", f"mesh present and {n_rows} rows >= {cfg.shard_min_rows}"
+    if jax.default_backend() == "tpu" and n_rows >= cfg.pallas_min_rows:
+        return "pallas", f"tpu backend and {n_rows} rows >= {cfg.pallas_min_rows}"
+    return "ref", f"{jax.default_backend()} backend, {n_rows} rows"
+
+
+def choose_route(logical: LogicalPlan, *, hot_window_s: int, now_ts: int,
+                 warm_rows: int) -> tuple[str, str]:
+    if warm_rows == 0:
+        return "hot", "warm tier empty"
+    recent_only = logical.min_ts >= now_ts - hot_window_s
+    if logical.constrained and recent_only:
+        return "hot", "constrained query within the hot window"
+    return "hot+warm", "long-tail similarity spills to the warm tier"
+
+
+def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
+                 now_ts: int, warm_rows: int,
+                 cfg: PlannerConfig = PlannerConfig(),
+                 has_mesh: bool = False) -> PhysicalPlan:
+    engine, engine_reason = choose_engine(logical, n_rows=n_rows, cfg=cfg,
+                                          has_mesh=has_mesh)
+    route, route_reason = choose_route(logical, hot_window_s=hot_window_s,
+                                       now_ts=now_ts, warm_rows=warm_rows)
+    return PhysicalPlan(logical=logical, pred=logical.predicate(),
+                        engine=engine, engine_reason=engine_reason,
+                        route=route, route_reason=route_reason, n_rows=n_rows)

@@ -1,0 +1,291 @@
+"""`RagDB` — one front door for the unified data layer.
+
+The paper's argument is that a *unified* data layer beats a split stack, yet
+the repo grew three separate entrances: `unified_query(...)`,
+`TieredRouter.query(...)`, and `RAGEngine.serve`'s hand-rolled loop. This
+module is the single session-scoped API that subsumes them:
+
+    db = RagDB(StoreConfig(...), warm_cfg=..., hot_window_s=..., now_ts=...)
+    db.ingest(batch)                      # tier placement by recency
+    sess = db.session(Principal(tenant_id=3, group_bits=0b0011))
+    res = (sess.search(q_emb)
+               .newer_than(ccfg.now_ts - 60 * DAY_S)
+               .in_categories([1, 2])
+               .limit(5)
+               .run())
+    print(res.plan.explain())
+
+Isolation is structural, not conventional: a `Session` exists only via
+`db.session(principal)`, the builder exposes no method that could name a
+tenant or widen ACL bits, and the lowered `LogicalPlan` stamps both clauses
+from the principal before the planner ever sees the query — the same
+server-side construction `tenancy.build_predicate` enforces, now at the API
+boundary. Batched callers (the serving engine) lower one plan per request
+and hand them to `db.execute`, which collapses plans sharing a predicate
+group into one device program each (executor.run_grouped's contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.executor import ExecStats, execute_plans
+from repro.api.plan import ALL_BITS, ANY_TENANT, LogicalPlan, PhysicalPlan
+from repro.api.planner import PlannerConfig, compile_plan
+from repro.core.query import make_sharded_query
+from repro.core.router import TieredRouter
+from repro.core.store import DocBatch, StoreConfig
+from repro.core.tenancy import Principal, TenantRegistry, category_mask
+from repro.core.transactions import TransactionLog
+
+_FOREVER = (1 << 31) - 1     # hot window that never expires (single-tier mode)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QueryResult:
+    scores: np.ndarray           # (B, k) f32, NEG_INF beyond the fill
+    slots: np.ndarray            # (B, k) i32 hot-tier slots, -1 padding
+    tiers: np.ndarray            # (B, k) i32, 0 = hot, 1 = warm
+    plan: PhysicalPlan
+
+
+class RagDB:
+    """Owns the storage engine (hot `TransactionLog` inside a `TieredRouter`,
+    warm similarity tier, cold archive) plus the `TenantRegistry`, and is the
+    only object that executes query plans."""
+
+    def __init__(self, hot_cfg: StoreConfig, *, warm_cfg: StoreConfig | None = None,
+                 hot_window_s: int | None = None, now_ts: int = 0,
+                 planner_cfg: PlannerConfig = PlannerConfig(),
+                 mesh=None, shard_axes=None):
+        tiered = warm_cfg is not None
+        if tiered and hot_window_s is None:
+            raise ValueError("a tiered RagDB (warm_cfg given) needs "
+                             "hot_window_s to place and route documents")
+        if not tiered:
+            # single-tier mode: the warm client must exist for the router's
+            # plumbing but is never routed to (hot window covers everything)
+            # — give it a 1-row arena instead of duplicating the hot one.
+            warm_cfg = dataclasses.replace(hot_cfg, capacity=1)
+        self.router = TieredRouter(
+            hot_cfg, warm_cfg,
+            hot_window_s=hot_window_s if tiered else _FOREVER,
+            now_ts=now_ts)
+        self.tenants = TenantRegistry()
+        self.planner_cfg = planner_cfg
+        self.mesh, self.shard_axes = mesh, shard_axes
+        self.stats = ExecStats()
+        self._sharded_fns: dict[int, object] = {}     # k -> compiled query
+
+    # -- storage facade --------------------------------------------------
+    @property
+    def log(self) -> TransactionLog:
+        return self.router.hot
+
+    @property
+    def hot_cfg(self) -> StoreConfig:
+        return self.log.cfg
+
+    def ingest(self, batch: DocBatch) -> None:
+        """Tier placement by recency; registered tenants are quota-charged.
+        Quotas are validated for the WHOLE batch before any charge or write,
+        so a rejected batch leaves no partial charge behind."""
+        tenants, counts = np.unique(np.asarray(batch.tenant), return_counts=True)
+        charges = [(tid, n) for tid, n in zip(tenants.tolist(), counts.tolist())
+                   if tid in self.tenants.doc_quota]
+        for tid, n in charges:
+            self.tenants.precheck(tid, n)
+        self.router.ingest(batch)
+        for tid, n in charges:
+            self.tenants.charge(tid, n)
+
+    def update(self, doc_ids, new_emb, updated_at) -> None:
+        """Re-embed documents wherever the router placed them (hot log or
+        warm client); an unknown doc_id raises KeyError."""
+        ids = [int(d) for d in doc_ids]
+        emb = np.asarray(new_emb)
+        ts = np.asarray(updated_at).reshape(-1)
+        # validate BEFORE mutating either tier: all-or-nothing, like ingest
+        unknown = [d for d in ids
+                   if not (self.log.has_doc(d) or self.router.warm.has_doc(d))]
+        if unknown:
+            raise KeyError(f"unknown doc_ids {unknown}")
+        hot = [i for i, d in enumerate(ids) if self.log.has_doc(d)]
+        hot_set = set(hot)
+        warm = [i for i in range(len(ids)) if i not in hot_set]
+        if hot:
+            self.log.update([ids[i] for i in hot], emb[hot],
+                            [int(ts[i]) for i in hot])
+        if warm:
+            # a warm doc whose fresh timestamp now falls inside the hot
+            # window must MOVE to the hot tier — recency-constrained queries
+            # are answered hot-only, so leaving it warm would hide it
+            hot_floor = self.router.now_ts - self.router.hot_window_s
+            promote = {i for i in warm if int(ts[i]) >= hot_floor}
+            stay = [i for i in warm if i not in promote]
+            if stay:
+                self.router.warm.update([ids[i] for i in stay], emb[stay],
+                                        [int(ts[i]) for i in stay])
+            if promote:
+                self._promote_to_hot(sorted(promote), ids, emb, ts)
+
+    def _promote_to_hot(self, idx: list[int], ids, emb, ts) -> None:
+        """Move docs from the warm client to the hot log, carrying their
+        metadata and the fresh embedding/timestamp. Quota is untouched:
+        the docs were charged at ingest and stay live."""
+        warm = self.router.warm
+        wslots = np.asarray([warm.slot_of(ids[i]) for i in idx], np.int64)
+        meta = {k: np.asarray(warm.meta[k])[wslots]
+                for k in ("tenant", "category", "acl")}
+        warm.delete([ids[i] for i in idx])
+        self.log.ingest(DocBatch(
+            emb=jnp.asarray(emb[idx]),
+            tenant=jnp.asarray(meta["tenant"], jnp.int32),
+            category=jnp.asarray(meta["category"], jnp.int32),
+            updated_at=jnp.asarray([int(ts[i]) for i in idx], jnp.int32),
+            acl=jnp.asarray(meta["acl"], jnp.uint32),
+            doc_id=jnp.asarray([ids[i] for i in idx], jnp.int32)))
+
+    def delete(self, doc_ids) -> None:
+        """Tier-aware delete. Refunds registered tenants' quota: slot
+        recycling frees the arena rows, so the quota must free with them or
+        churn deadlocks."""
+        uniq = list(dict.fromkeys(int(d) for d in doc_ids))
+        # validate BEFORE mutating either tier: all-or-nothing, like ingest
+        unknown = [d for d in uniq
+                   if not (self.log.has_doc(d) or self.router.warm.has_doc(d))]
+        if unknown:
+            raise KeyError(f"unknown doc_ids {unknown}")
+        hot_set = {d for d in uniq if self.log.has_doc(d)}
+        hot_ids = [d for d in uniq if d in hot_set]
+        warm_ids = [d for d in uniq if d not in hot_set]
+        owners: list[int] = []
+        if hot_ids:
+            snap = self.log.snapshot()
+            freed = self.log.delete(hot_ids)
+            owners += np.asarray(snap["tenant"])[np.asarray(freed, np.int64)].tolist()
+        if warm_ids:
+            warm = self.router.warm
+            wslots = [warm.slot_of(d) for d in warm_ids]      # KeyError if unknown
+            tenants = np.asarray(warm.meta["tenant"])[np.asarray(wslots, np.int64)]
+            warm.delete(warm_ids)
+            owners += tenants.tolist()
+        for tid in owners:
+            if tid in self.tenants.doc_count and self.tenants.doc_count[tid] > 0:
+                self.tenants.doc_count[tid] -= 1
+
+    def archive(self, doc_id: int, payload) -> None:
+        self.router.archive(doc_id, payload)
+
+    def fetch_cold(self, doc_id: int):
+        return self.router.fetch_cold(doc_id)
+
+    def create_tenant(self, quota: int = 1 << 30) -> int:
+        return self.tenants.create_tenant(quota)
+
+    # -- sessions (the only way to query) --------------------------------
+    def session(self, principal: Principal) -> "Session":
+        return Session(self, principal)
+
+    def admin_session(self) -> "Session":
+        """Trusted-operator session: no tenant clause, all ACL groups.
+        For benchmarks and system maintenance, never request handling."""
+        return Session(self, Principal(tenant_id=ANY_TENANT, group_bits=ALL_BITS))
+
+    # -- planning + execution --------------------------------------------
+    def compile(self, logical: LogicalPlan) -> PhysicalPlan:
+        snap = self.log.snapshot()
+        return compile_plan(
+            logical, n_rows=snap["emb"].shape[0],
+            hot_window_s=self.router.hot_window_s, now_ts=self.router.now_ts,
+            warm_rows=self.router.warm.n_docs, cfg=self.planner_cfg,
+            has_mesh=self.mesh is not None)
+
+    def _sharded_fn(self, k: int):
+        fn = self._sharded_fns.get(k)
+        if fn is None:
+            snap = self.log.snapshot()
+            fn = make_sharded_query(self.mesh, self.shard_axes,
+                                    snap["emb"].shape[0], k)
+            self._sharded_fns[k] = fn
+        return fn
+
+    def execute(self, plans: list[PhysicalPlan]):
+        """Predicate-group batched execution; see executor.execute_plans.
+        Router stats stay coherent for callers watching the old counters."""
+        # only build the sharded program when a mesh exists; otherwise let
+        # the executor raise its "requires a mesh-built RagDB" error
+        needs_shard = (self.mesh is not None
+                       and any(p.engine == "sharded" for p in plans))
+        k = plans[0].logical.k if plans else 0
+        before_hot, before_warm = self.stats.hot_queries, self.stats.warm_queries
+        out = execute_plans(
+            self.log.snapshot(), self.router.warm, plans,
+            sharded_fn=self._sharded_fn(k) if needs_shard else None,
+            stats=self.stats)
+        self.router.stats.hot_queries += self.stats.hot_queries - before_hot
+        self.router.stats.warm_queries += self.stats.warm_queries - before_warm
+        return out
+
+
+class Session:
+    """A principal-scoped handle. Tenant and ACL clauses are stamped here,
+    from the authenticated principal — the builder cannot express them."""
+
+    def __init__(self, db: RagDB, principal: Principal):
+        self._db = db
+        self.principal = principal
+
+    def search(self, q_emb, *, normalize: bool = True) -> "QueryBuilder":
+        """Start a query from a (D,) or (B, D) embedding. `normalize=True`
+        unit-normalizes rows (required for cosine scores; pass False if the
+        caller already normalized)."""
+        q = np.atleast_2d(np.asarray(q_emb, np.float32))
+        if normalize and self._db.hot_cfg.metric == "cosine":
+            q = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-12)
+        logical = LogicalPlan(
+            tenant=self.principal.tenant_id,
+            acl_bits=self.principal.group_bits & ALL_BITS, q=q)
+        return QueryBuilder(self._db, logical)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QueryBuilder:
+    """Immutable, composable chain; each step returns a new builder. Lowers
+    to a LogicalPlan (`lower()`), compiles to a PhysicalPlan (`plan()`),
+    executes (`run()`)."""
+    _db: RagDB
+    _logical: LogicalPlan
+
+    def _with(self, **changes) -> "QueryBuilder":
+        return QueryBuilder(self._db, dataclasses.replace(self._logical, **changes))
+
+    def newer_than(self, min_ts: int) -> "QueryBuilder":
+        return self._with(min_ts=int(min_ts))
+
+    def in_categories(self, categories) -> "QueryBuilder":
+        cats = tuple(sorted(set(int(c) for c in categories)))
+        category_mask(cats)      # validate where the bad input enters
+        return self._with(categories=cats)
+
+    def limit(self, k: int) -> "QueryBuilder":
+        return self._with(k=int(k))
+
+    def using(self, engine: str) -> "QueryBuilder":
+        return self._with(engine=engine)
+
+    def lower(self) -> LogicalPlan:
+        return self._logical
+
+    def plan(self) -> PhysicalPlan:
+        return self._db.compile(self._logical)
+
+    def explain(self) -> str:
+        return self.plan().explain()
+
+    def run(self) -> QueryResult:
+        phys = self.plan()
+        scores, slots, tiers = self._db.execute([phys])
+        return QueryResult(scores=scores, slots=slots, tiers=tiers, plan=phys)

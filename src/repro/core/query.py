@@ -22,6 +22,7 @@ Two execution engines share this contract:
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 
 import jax
@@ -50,21 +51,26 @@ class Predicate:
 
     def as_array(self) -> jax.Array:
         # [tenant, min_ts, cat_mask, acl_bits] packed for the kernel path.
-        # Memoized: predicates repeat across a serving session, and the
-        # host->device transfer would otherwise dominate sub-ms queries.
+        # Memoized with LRU eviction: predicates repeat across a serving
+        # session, and the host->device transfer would otherwise dominate
+        # sub-ms queries. Eviction is per-entry (oldest use first) so a hot
+        # predicate is never dropped by a burst of one-off ones.
         cached = _PRED_CACHE.get(self)
         if cached is None:
             cached = jnp.array(
                 [self.tenant, self.min_ts,
                  jnp.uint32(self.cat_mask).view(jnp.int32),
                  jnp.uint32(self.acl_bits).view(jnp.int32)], dtype=jnp.int32)
-            if len(_PRED_CACHE) > 4096:
-                _PRED_CACHE.clear()
+            while len(_PRED_CACHE) >= _PRED_CACHE_CAP:
+                _PRED_CACHE.popitem(last=False)
             _PRED_CACHE[self] = cached
+        else:
+            _PRED_CACHE.move_to_end(self)
         return cached
 
 
-_PRED_CACHE: dict["Predicate", jax.Array] = {}
+_PRED_CACHE: OrderedDict["Predicate", jax.Array] = OrderedDict()
+_PRED_CACHE_CAP = 4096
 
 
 def predicate_mask(store: Store, pred: jax.Array) -> jax.Array:

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.query import Predicate, unified_query
+from repro.core.query import Predicate
 from repro.core.splitstack import SplitStackClient
 from repro.core.store import DocBatch, StoreConfig, empty
 from repro.core.transactions import TransactionLog
@@ -30,6 +30,8 @@ from repro.core.transactions import TransactionLog
 
 @dataclasses.dataclass
 class RouteStats:
+    """Counters are per query ROW (a (B, D) call counts B), matching the
+    front-door ExecStats so shim and session traffic aggregate coherently."""
     hot_queries: int = 0
     warm_queries: int = 0
     cold_fetches: int = 0
@@ -67,27 +69,25 @@ class TieredRouter:
         self.cold[doc_id] = payload
 
     # -- query routing ---------------------------------------------------
-    def query(self, q: jax.Array, pred: Predicate, k: int):
-        """Multi-constraint queries (any predicate beyond similarity) are
-        answered by the hot unified tier. Unconstrained similarity over the
-        long tail additionally probes the warm tier and merges."""
-        constrained = (pred.tenant != -2 or pred.min_ts > 0
-                       or pred.cat_mask != 0xFFFFFFFF or pred.acl_bits != 0xFFFFFFFF)
-        recent_only = pred.min_ts >= self.now_ts - self.hot_window_s
-        self.stats.hot_queries += 1
-        hs, hi = unified_query(self.hot.snapshot(), q, pred, k)
-        hs, hi = jax.device_get((hs, hi))
-        if constrained and recent_only:
-            return hs, hi, np.full_like(hi, 0)          # tier tag 0 = hot
-        self.stats.warm_queries += 1
-        ws, wi = self.warm.query(q, pred, k)
-        # merge the two k-lists
-        scores = np.concatenate([hs, ws], axis=1)
-        slots = np.concatenate([hi, wi], axis=1)
-        tiers = np.concatenate([np.zeros_like(hi), np.ones_like(wi)], axis=1)
-        order = np.argsort(-scores, axis=1)[:, :k]
-        gather = lambda a: np.take_along_axis(a, order, axis=1)
-        return gather(scores), gather(slots), gather(tiers)
+    def query(self, q: jax.Array, pred: Predicate, k: int, *,
+              engine: str = "ref"):
+        """Compatibility shim over the front-door planner/executor (the
+        routing rule itself now lives in repro.api.planner.choose_route):
+        multi-constraint queries within the hot window stay hot-only;
+        long-tail similarity additionally probes the warm tier and merges."""
+        # imported lazily: repro.api's package init imports this module
+        from repro.api.executor import query_tiered
+        from repro.api.plan import logical_from_predicate
+        from repro.api.planner import choose_route
+
+        logical = logical_from_predicate(pred, k=k, engine=engine)
+        route, _ = choose_route(logical, hot_window_s=self.hot_window_s,
+                                now_ts=self.now_ts, warm_rows=self.warm.n_docs)
+        self.stats.hot_queries += q.shape[0]
+        if route == "hot+warm":
+            self.stats.warm_queries += q.shape[0]
+        return query_tiered(self.hot.snapshot(), self.warm, q, pred, k,
+                            engine=engine, probe_warm=(route == "hot+warm"))
 
     def fetch_cold(self, doc_id: int):
         self.stats.cold_fetches += 1

@@ -140,6 +140,44 @@ class SplitStackClient:
         # upsert in a real deployment.
         self.write_gap_s = 0.0
 
+    @property
+    def n_docs(self) -> int:
+        """LIVE rows (the planner skips the warm probe at 0)."""
+        return len(self._slot_of_doc)
+
+    def has_doc(self, doc_id: int) -> bool:
+        return int(doc_id) in self._slot_of_doc
+
+    def slot_of(self, doc_id: int) -> int:
+        return self._slot_of_doc[int(doc_id)]
+
+    def delete(self, doc_ids) -> list[int]:
+        """Tombstone rows — TWO commits like every split-stack write (vector
+        invalidate, then metadata), with the usual window in between,
+        recorded in stats like every other write.
+        Returns the freed slots (one per unique doc_id, in dedup order)."""
+        slot_list = [self._slot_of_doc[d]
+                     for d in dict.fromkeys(int(d) for d in doc_ids)]
+        slots = jnp.asarray(slot_list, jnp.int32)
+        t0 = time.perf_counter()
+        self.valid = self.valid.at[slots].set(False)
+        jax.block_until_ready(self.valid)
+        t1 = time.perf_counter()
+        if self.write_gap_s:
+            time.sleep(self.write_gap_s)
+        meta = dict(self.meta)
+        meta["tenant"] = meta["tenant"].at[slots].set(-1)
+        meta["doc_id"] = meta["doc_id"].at[slots].set(-1)
+        self.meta = meta
+        jax.block_until_ready(self.meta["tenant"])
+        t2 = time.perf_counter()
+        self.cache.invalidate(np.asarray(slots))
+        self.stats.inconsistency_windows_s.append(t2 - t1)
+        self.stats.write_latencies_s.append(t2 - t0)
+        for d in doc_ids:
+            self._slot_of_doc.pop(int(d), None)
+        return slot_list
+
     # -- writes: TWO separate commits -----------------------------------
     def ingest(self, batch: DocBatch) -> None:
         m = batch.size

@@ -37,23 +37,36 @@ class TenantRegistry:
         self.doc_count[tid] = 0
         return tid
 
-    def charge(self, tid: int, n_docs: int) -> None:
+    def precheck(self, tid: int, n_docs: int) -> None:
+        """The quota rule, checkable without committing (batch validation)."""
         if self.doc_count[tid] + n_docs > self.doc_quota[tid]:
             raise PermissionError(f"tenant {tid} over document quota")
+
+    def charge(self, tid: int, n_docs: int) -> None:
+        self.precheck(tid, n_docs)
         self.doc_count[tid] += n_docs
+
+
+def category_mask(categories) -> int:
+    """Lower a category id list to the engine's uint32 bitmask — the ONE
+    place the [0, 32) bound is enforced (shared by build_predicate and the
+    front-door LogicalPlan lowering)."""
+    mask = 0
+    for c in categories:
+        c = int(c)
+        if not 0 <= c < 32:
+            raise ValueError("category ids must be in [0, 32)")
+        mask |= 1 << c
+    return mask
 
 
 def build_predicate(principal: Principal, *, min_ts: int = 0,
                     categories: list[int] | None = None) -> Predicate:
-    """The ONLY constructor that sets the tenant/ACL clauses. Categories and
-    recency are caller-chosen filters; tenant and ACL come from the principal.
+    """With the front-door Session lowering, one of the only two predicate
+    constructors that set the tenant/ACL clauses — both take them from the
+    authenticated principal, never from request parameters. Categories and
+    recency are caller-chosen filters.
     """
-    cat_mask = 0xFFFFFFFF
-    if categories is not None:
-        cat_mask = 0
-        for c in categories:
-            if not 0 <= c < 32:
-                raise ValueError("category ids must be in [0, 32)")
-            cat_mask |= 1 << c
+    cat_mask = 0xFFFFFFFF if categories is None else category_mask(categories)
     return Predicate(tenant=principal.tenant_id, min_ts=min_ts,
                      cat_mask=cat_mask, acl_bits=principal.group_bits & 0xFFFFFFFF)

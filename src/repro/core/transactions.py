@@ -95,6 +95,7 @@ class TransactionLog:
         self._store = store
         self._cursor = 0
         self._slot_of_doc: dict[int, int] = {}
+        self._free_slots: list[int] = []      # tombstoned slots, LIFO recycled
         self.write_latencies_s: list[float] = []
 
     # -- reads ---------------------------------------------------------
@@ -104,12 +105,23 @@ class TransactionLog:
     def slot_of(self, doc_id: int) -> int:
         return self._slot_of_doc[doc_id]
 
+    def has_doc(self, doc_id: int) -> bool:
+        return int(doc_id) in self._slot_of_doc
+
     # -- writes --------------------------------------------------------
     def ingest(self, batch: DocBatch) -> None:
         m = batch.size
-        if self._cursor + m > self.cfg.capacity:
+        n_fresh_avail = self.cfg.capacity - self._cursor
+        if m > len(self._free_slots) + n_fresh_avail:
             raise RuntimeError("store arena full — grow capacity or compact")
-        slots = jnp.arange(self._cursor, self._cursor + m, dtype=jnp.int32)
+        # recycle tombstoned slots first, then extend the fresh frontier.
+        # Peek (don't pop) so a failed device write leaks nothing: allocator
+        # state only advances after the commit point below.
+        n_recycled = min(m, len(self._free_slots))
+        recycled = self._free_slots[len(self._free_slots) - n_recycled:][::-1]
+        n_fresh = m - n_recycled
+        slot_list = recycled + list(range(self._cursor, self._cursor + n_fresh))
+        slots = jnp.asarray(slot_list, jnp.int32)
         t0 = time.perf_counter()
         new = ingest(self._store, self.cfg, slots, batch.emb, batch.tenant,
                      batch.category, batch.updated_at, batch.acl, batch.doc_id)
@@ -117,9 +129,11 @@ class TransactionLog:
         self.write_latencies_s.append(time.perf_counter() - t0)
         # single reference swap = the commit point
         self._store = new
-        for i, d in enumerate(jax.device_get(batch.doc_id)):
-            self._slot_of_doc[int(d)] = self._cursor + i
-        self._cursor += m
+        if n_recycled:
+            del self._free_slots[len(self._free_slots) - n_recycled:]
+        for s, d in zip(slot_list, jax.device_get(batch.doc_id)):
+            self._slot_of_doc[int(d)] = s
+        self._cursor += n_fresh
 
     def update(self, doc_ids, new_emb, updated_at) -> None:
         slots = jnp.asarray([self._slot_of_doc[int(d)] for d in doc_ids], jnp.int32)
@@ -129,13 +143,21 @@ class TransactionLog:
         self.write_latencies_s.append(time.perf_counter() - t0)
         self._store = new
 
-    def delete(self, doc_ids) -> None:
-        slots = jnp.asarray([self._slot_of_doc[int(d)] for d in doc_ids], jnp.int32)
-        new = delete(self._store, slots)
+    def delete(self, doc_ids) -> list[int]:
+        """Tombstone the given docs. Returns the freed slots (one per unique
+        doc_id, in dedup order) so callers can attribute the frees without
+        re-deriving the dedupe/lookup."""
+        # dedupe: a repeated doc_id must not double-free its slot
+        slot_list = [self._slot_of_doc[d]
+                     for d in dict.fromkeys(int(d) for d in doc_ids)]
+        new = delete(self._store, jnp.asarray(slot_list, jnp.int32))
         jax.block_until_ready(new["commit_ts"])
         self._store = new
         for d in doc_ids:
             self._slot_of_doc.pop(int(d), None)
+        # tombstoned slots return to the allocator (free-slot recycling)
+        self._free_slots.extend(slot_list)
+        return slot_list
 
     @property
     def inconsistency_window_s(self) -> float:

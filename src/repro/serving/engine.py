@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.query import Predicate, unified_query
+from repro.api.executor import run_grouped
+from repro.api.ragdb import RagDB
 from repro.core.store import Store
 from repro.core.tenancy import Principal, build_predicate
 from repro.models import transformer as tfm
@@ -39,22 +40,35 @@ class Request:
 
 @dataclasses.dataclass
 class Response:
-    doc_slots: np.ndarray          # (k,) retrieved doc slots (provenance)
+    doc_slots: np.ndarray          # (k,) retrieved doc slots (provenance);
+                                   # each indexes the arena named by doc_tiers
     doc_scores: np.ndarray
     tokens: np.ndarray             # generated token ids
     retrieval_ms: float
     prefill_ms: float
     decode_ms: float
+    doc_tiers: np.ndarray | None = None   # (k,) 0 = hot arena, 1 = warm arena
 
 
 class RAGEngine:
     """Single-model, batched-request engine."""
 
-    def __init__(self, store: Store, cfg: tfm.TransformerConfig, params,
+    def __init__(self, store: Store | RagDB, cfg: tfm.TransformerConfig, params,
                  *, k: int = 4, max_prompt: int = 64, max_len: int = 128,
                  doc_token_fn: Callable[[int], np.ndarray] | None = None,
+                 warm_doc_token_fn: Callable[[int], np.ndarray] | None = None,
                  engine: str = "ref"):
-        self.store = store
+        # front-door path: a RagDB executes plans (tier routing included);
+        # compat path: a raw Store snapshot goes straight to the grouped
+        # executor. Both collapse a batch into one device call per unique
+        # predicate group.
+        if isinstance(store, RagDB):
+            self.db: RagDB | None = store
+            self.store = None          # serve reads live snapshots via db
+        else:
+            self.db = None
+            self.store = store
+        self.last_retrieval_device_calls = 0
         self.cfg = cfg
         self.params = params
         self.k = k
@@ -62,9 +76,14 @@ class RAGEngine:
         self.max_len = max_len
         self.engine = engine
         # maps a retrieved doc slot to its "content" tokens (the corpus side
-        # of the prompt); synthetic corpora supply a deterministic stub
+        # of the prompt); synthetic corpora supply a deterministic stub.
+        # doc_token_fn indexes the HOT arena; warm-tier slots index a
+        # different arena and need their own mapping — without one they
+        # contribute provenance only (counted in last_warm_docs_skipped).
         self.doc_token_fn = doc_token_fn or (lambda slot: np.asarray(
             [int(slot) % max(cfg.vocab_size - 1, 1)], np.int32))
+        self.warm_doc_token_fn = warm_doc_token_fn
+        self.last_warm_docs_skipped = 0
 
         self._prefill = jax.jit(
             lambda p, toks: tfm.prefill(p, cfg, toks, cache_len=max_len))
@@ -72,14 +91,23 @@ class RAGEngine:
             lambda p, tok, cache, idx: tfm.decode_step(p, cfg, tok, cache, idx))
 
     # -- prompt assembly -------------------------------------------------
-    def _build_prompts(self, requests: list[Request], slots: np.ndarray) -> np.ndarray:
+    def _build_prompts(self, requests: list[Request], slots: np.ndarray,
+                       tiers: np.ndarray) -> np.ndarray:
         B = len(requests)
         toks = np.zeros((B, self.max_prompt), np.int32)
+        self.last_warm_docs_skipped = 0
         for i, r in enumerate(requests):
             ctx: list[int] = []
-            for s in slots[i]:
-                if s >= 0:
+            for s, t in zip(slots[i], tiers[i]):
+                if s < 0:
+                    continue
+                if t == 0:
                     ctx.extend(self.doc_token_fn(int(s)).tolist())
+                elif self.warm_doc_token_fn is not None:
+                    ctx.extend(self.warm_doc_token_fn(int(s)).tolist())
+                else:
+                    # warm slot with no content mapping: provenance only
+                    self.last_warm_docs_skipped += 1
             joined = np.asarray(ctx + r.prompt_tokens.tolist(), np.int32)
             joined = joined[-self.max_prompt:]
             # RIGHT-aligned (left-padded) so the last prefill position is the
@@ -90,28 +118,48 @@ class RAGEngine:
             toks[i, self.max_prompt - len(joined):] = joined
         return toks
 
+    # -- request lowering (front-door path) -------------------------------
+    def _lower_request(self, r: Request, q_row: np.ndarray):
+        """Lower one request through the session API: tenant/ACL clauses come
+        from the principal via db.session — the engine cannot widen them."""
+        b = (self.db.session(r.principal)
+             .search(q_row, normalize=False)       # batch-normalized above
+             .limit(self.k)
+             .using(self.engine))
+        if r.min_ts:
+            b = b.newer_than(r.min_ts)
+        if r.categories is not None:
+            b = b.in_categories(r.categories)
+        return b.plan()
+
     # -- the serving step -------------------------------------------------
     def serve(self, requests: list[Request], *, greedy: bool = True,
               seed: int = 0) -> list[Response]:
         B = len(requests)
         t0 = time.perf_counter()
-        # 1) retrieval: one unified query per batch (predicates server-built)
+        # 1) retrieval: predicates are server-built, and the batch is
+        # predicate-group batched — requests sharing a predicate run as ONE
+        # device program over their stacked query rows, so the batch costs
+        # (unique predicate groups) device calls instead of B.
         q = np.stack([r.query_emb for r in requests]).astype(np.float32)
         q /= np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-12)
-        # group identical predicates to keep programs cached; general case:
-        # per-request predicate (still one device program per unique pred)
-        slots = np.zeros((B, self.k), np.int32)
-        scores = np.zeros((B, self.k), np.float32)
-        for i, r in enumerate(requests):
-            pred = build_predicate(r.principal, min_ts=r.min_ts,
-                                   categories=r.categories)
-            s, sl = unified_query(self.store, jnp.asarray(q[i:i + 1]), pred,
-                                  self.k, engine=self.engine)
-            scores[i], slots[i] = np.asarray(s[0]), np.asarray(sl[0])
+        if self.db is not None:
+            plans = [self._lower_request(r, q[i]) for i, r in enumerate(requests)]
+            calls0 = self.db.stats.device_calls
+            scores, slots, tiers = self.db.execute(plans)
+            self.last_retrieval_device_calls = self.db.stats.device_calls - calls0
+        else:
+            preds = [build_predicate(r.principal, min_ts=r.min_ts,
+                                     categories=r.categories)
+                     for r in requests]
+            scores, slots, n_calls = run_grouped(self.store, q, preds, self.k,
+                                                 engine=self.engine)
+            tiers = np.zeros_like(slots)
+            self.last_retrieval_device_calls = n_calls
         t1 = time.perf_counter()
 
         # 2) prefill
-        prompts = self._build_prompts(requests, slots)
+        prompts = self._build_prompts(requests, slots, tiers)
         logits, cache = self._prefill(self.params, jnp.asarray(prompts))
         jax.block_until_ready(logits)
         t2 = time.perf_counter()
@@ -139,5 +187,6 @@ class RAGEngine:
                          tokens=out_tokens[i, : requests[i].max_new_tokens],
                          retrieval_ms=(t1 - t0) * 1e3 / B,
                          prefill_ms=(t2 - t1) * 1e3,
-                         decode_ms=(t3 - t2) * 1e3)
+                         decode_ms=(t3 - t2) * 1e3,
+                         doc_tiers=tiers[i])
                 for i in range(B)]

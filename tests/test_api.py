@@ -1,0 +1,319 @@
+"""The front door: builder -> plan -> grouped execution.
+
+Acceptance contract of the API redesign:
+  * a builder-API query returns results bit-identical to the equivalent
+    direct `unified_query_ref` call;
+  * `explain()` reports the chosen engine and tier route;
+  * `RAGEngine.serve` issues exactly (unique predicate groups) retrieval
+    device calls per batch — counted by monkeypatching the executor's single
+    dispatch point;
+  * tier routing decisions match the paper's §7.3 invariant.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import LogicalPlan, RagDB
+from repro.api import executor as executor_mod
+from repro.api.plan import logical_from_predicate
+from repro.api.planner import PlannerConfig, choose_engine, choose_route
+from repro.core import Predicate, Principal, StoreConfig, unified_query_ref
+from repro.data.corpus import DAY_S, CorpusConfig, make_corpus
+from repro.models.transformer import TransformerConfig, init
+from repro.serving.engine import RAGEngine, Request
+
+
+@pytest.fixture(scope="module")
+def db_stack():
+    ccfg = CorpusConfig(n_docs=2500, dim=24, n_tenants=5, n_categories=4)
+    db = RagDB(StoreConfig(capacity=4096, dim=24))
+    corpus = make_corpus(ccfg)
+    db.ingest(corpus)
+    return db, corpus, ccfg
+
+
+CHAINS = [
+    lambda s, ccfg: s.search,                                       # similarity only
+    lambda s, ccfg: lambda q: s.search(q).newer_than(ccfg.now_ts - 90 * DAY_S),
+    lambda s, ccfg: lambda q: s.search(q).in_categories([0, 2]),
+    lambda s, ccfg: lambda q: (s.search(q).newer_than(ccfg.now_ts - 30 * DAY_S)
+                               .in_categories([1, 2, 3])),
+]
+
+
+@pytest.mark.parametrize("chain_i", range(len(CHAINS)))
+def test_builder_bit_identical_to_ref(db_stack, chain_i, rng):
+    db, corpus, ccfg = db_stack
+    sess = db.session(Principal(tenant_id=2, group_bits=0b0101))
+    q = rng.standard_normal((3, ccfg.dim)).astype(np.float32)
+    builder = CHAINS[chain_i](sess, ccfg)(q).limit(6)
+    res = builder.run()
+    # the equivalent direct call: same lowered predicate, same normalized q
+    qn = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-12)
+    pred = builder.lower().predicate()
+    s, sl = unified_query_ref(db.log.snapshot(), jnp.asarray(qn),
+                              pred.as_array(), 6)
+    assert (np.asarray(sl) == res.slots).all()
+    assert (np.asarray(s) == res.scores).all()
+    assert (res.tiers == 0).all()
+
+
+def test_session_cannot_name_a_tenant(db_stack):
+    db, _, _ = db_stack
+    sess = db.session(Principal(tenant_id=1, group_bits=0xFFFFFFFF))
+    builder = sess.search(np.zeros(24, np.float32))
+    # no builder method can touch the tenant/ACL clauses...
+    assert not any(hasattr(builder, m) for m in
+                   ("tenant", "in_tenant", "for_tenant", "acl", "with_acl"))
+    # ...and the lowered plan carries the principal's clauses verbatim
+    lp = builder.newer_than(5).in_categories([1]).limit(3).lower()
+    assert lp.tenant == 1 and lp.acl_bits == 0xFFFFFFFF
+
+
+def test_explain_reports_engine_and_route(db_stack):
+    db, _, ccfg = db_stack
+    sess = db.session(Principal(tenant_id=0, group_bits=0xFFFFFFFF))
+    text = (sess.search(np.zeros(ccfg.dim, np.float32))
+            .newer_than(ccfg.now_ts - 10 * DAY_S).limit(4).explain())
+    assert "engine:" in text and "ref" in text
+    assert "route:" in text and "hot" in text
+    assert "tenant = 0" in text
+
+
+def test_planner_engine_rules():
+    lp = LogicalPlan(k=5)
+    cfg = PlannerConfig(pallas_min_rows=1 << 15, shard_min_rows=1 << 20)
+    eng, _ = choose_engine(lp, n_rows=1 << 12, cfg=cfg)
+    assert eng == ("ref" if jax.default_backend() != "tpu" else "ref")
+    eng, why = choose_engine(lp, n_rows=1 << 21, cfg=cfg, has_mesh=True)
+    assert eng == "sharded" and "mesh" in why
+    hint, _ = choose_engine(LogicalPlan(k=5, engine="pallas"), n_rows=8, cfg=cfg)
+    assert hint == "pallas"
+
+
+def test_planner_route_rules():
+    window, now = 100, 1000
+    constrained_recent = LogicalPlan(tenant=1, min_ts=950, k=3)
+    unconstrained = LogicalPlan(k=3)
+    constrained_old = LogicalPlan(tenant=1, min_ts=0, k=3)
+    route, _ = choose_route(constrained_recent, hot_window_s=window,
+                            now_ts=now, warm_rows=10)
+    assert route == "hot"
+    route, _ = choose_route(unconstrained, hot_window_s=window, now_ts=now,
+                            warm_rows=10)
+    assert route == "hot+warm"
+    route, _ = choose_route(constrained_old, hot_window_s=window, now_ts=now,
+                            warm_rows=10)
+    assert route == "hot+warm"
+    # empty warm tier never probed
+    route, why = choose_route(unconstrained, hot_window_s=window, now_ts=now,
+                              warm_rows=0)
+    assert route == "hot" and "empty" in why
+
+
+def test_logical_from_predicate_roundtrip():
+    pred = Predicate(tenant=3, min_ts=77, cat_mask=0b1010, acl_bits=0b11)
+    lp = logical_from_predicate(pred, k=5)
+    assert lp.predicate() == pred
+    assert lp.constrained
+    assert logical_from_predicate(Predicate(), k=5).predicate() == Predicate()
+
+
+def _count_calls(monkeypatch):
+    calls = {"n": 0}
+    real = executor_mod.unified_query
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(executor_mod, "unified_query", counting)
+    return calls
+
+
+def _mini_engine(store_or_db, ccfg, k=3):
+    cfg = TransformerConfig(name="gen", n_layers=1, d_model=16, n_heads=2,
+                            n_kv_heads=2, d_ff=32, vocab_size=64,
+                            dtype="float32")
+    params = init(jax.random.PRNGKey(0), cfg)
+    return RAGEngine(store_or_db, cfg, params, k=k, max_prompt=16, max_len=24)
+
+
+def _requests(rng, ccfg, tenants):
+    return [Request(principal=Principal(tenant_id=t, group_bits=0xFFFFFFFF),
+                    query_emb=rng.standard_normal(ccfg.dim).astype(np.float32),
+                    prompt_tokens=np.asarray([3, 4], np.int32),
+                    min_ts=ccfg.now_ts - 150 * DAY_S, max_new_tokens=2)
+            for t in tenants]
+
+
+@pytest.mark.parametrize("front_door", [False, True])
+def test_serve_batches_by_predicate_group(db_stack, rng, monkeypatch,
+                                          front_door):
+    db, corpus, ccfg = db_stack
+    engine = _mini_engine(db if front_door else db.log.snapshot(), ccfg)
+    # 8 requests, 3 unique predicate groups (tenants 0/1/2 repeated)
+    tenants = [0, 1, 2, 0, 1, 2, 0, 1]
+    reqs = _requests(rng, ccfg, tenants)
+    calls = _count_calls(monkeypatch)
+    resps = engine.serve(reqs)
+    assert calls["n"] == 3, f"expected 3 grouped device calls, saw {calls['n']}"
+    assert engine.last_retrieval_device_calls == 3
+    # grouped execution preserves per-request isolation and ordering
+    tenant_of = np.asarray(corpus.tenant)
+    for t, r in zip(tenants, resps):
+        got = r.doc_slots[r.doc_slots >= 0]
+        assert len(got) > 0 and (tenant_of[got] == t).all()
+
+
+def test_grouped_matches_looped(db_stack, rng, monkeypatch):
+    """Grouped execution is a pure batching transform: results identical to
+    issuing each request's query alone."""
+    db, _, ccfg = db_stack
+    snap = db.log.snapshot()
+    q = rng.standard_normal((6, ccfg.dim)).astype(np.float32)
+    preds = [Predicate(tenant=i % 2) for i in range(6)]
+    gs, gi, n_calls = executor_mod.run_grouped(snap, q, preds, 4)
+    assert n_calls == 2
+    for i, p in enumerate(preds):
+        s, sl = unified_query_ref(snap, jnp.asarray(q[i:i + 1]), p.as_array(), 4)
+        assert (np.asarray(sl)[0] == gi[i]).all()
+        assert (np.asarray(s)[0] == gs[i]).all()
+
+
+def test_tiered_db_merges_and_routes(rng):
+    ccfg = CorpusConfig(n_docs=900, dim=16, n_tenants=4)
+    scfg = StoreConfig(capacity=2048, dim=16)
+    db = RagDB(scfg, warm_cfg=scfg, hot_window_s=90 * DAY_S, now_ts=ccfg.now_ts)
+    db.ingest(make_corpus(ccfg))
+    assert 0 < int(db.log.snapshot()["n_live"]) < 900
+    assert db.router.warm.n_docs > 0
+    sess = db.session(Principal(tenant_id=1, group_bits=0xFFFFFFFF))
+    q = rng.standard_normal(16).astype(np.float32)
+    # constrained + recent: hot only
+    res = sess.search(q).newer_than(ccfg.now_ts - 60 * DAY_S).limit(4).run()
+    assert res.plan.route == "hot"
+    assert (res.tiers[res.slots >= 0] == 0).all()
+    # long-tail similarity from the admin surface: merges both tiers
+    res2 = db.admin_session().search(q).limit(6).run()
+    assert res2.plan.route == "hot+warm"
+    assert db.stats.warm_queries == 1
+
+
+def test_quota_charged_through_ingest(rng):
+    db = RagDB(StoreConfig(capacity=64, dim=8))
+    tid = db.create_tenant(quota=4)
+    from tests.test_core_store import make_batch
+    db.ingest(make_batch(rng, 3, 8, tenant=tid))
+    with pytest.raises(PermissionError):
+        db.ingest(make_batch(rng, 2, 8, tenant=tid, start_id=10))
+    # a rejected batch must not leave a partial charge or partial write
+    assert db.tenants.doc_count[tid] == 3
+    assert int(db.log.snapshot()["n_live"]) == 3
+    db.ingest(make_batch(rng, 1, 8, tenant=tid, start_id=20))   # still room
+
+
+def test_quota_refunded_on_delete(rng):
+    db = RagDB(StoreConfig(capacity=64, dim=8))
+    tid = db.create_tenant(quota=4)
+    from tests.test_core_store import make_batch
+    db.ingest(make_batch(rng, 4, 8, tenant=tid))
+    db.delete([0, 1, 2, 3])
+    assert db.tenants.doc_count[tid] == 0
+    db.ingest(make_batch(rng, 4, 8, tenant=tid, start_id=10))   # churn works
+    assert db.tenants.doc_count[tid] == 4
+
+
+def test_tiered_requires_hot_window():
+    scfg = StoreConfig(capacity=64, dim=8)
+    with pytest.raises(ValueError, match="hot_window_s"):
+        RagDB(scfg, warm_cfg=scfg)
+
+
+def test_group_key_separates_routes(db_stack):
+    """Same lowered predicate, different route, must not share a group:
+    in_categories(range(32)) lowers to the pass-all mask yet is constrained."""
+    db, _, ccfg = db_stack
+    admin = db.admin_session()
+    q = np.zeros(ccfg.dim, np.float32)
+    p1 = admin.search(q).limit(4).plan()
+    p2 = admin.search(q).in_categories(range(32)).limit(4).plan()
+    assert p1.pred == p2.pred
+    if p1.route != p2.route:
+        assert p1.group_key != p2.group_key
+    # route is always part of the key
+    assert p1.route in p1.group_key and p2.route in p2.group_key
+
+
+def test_tiered_writes_reach_warm_docs(rng):
+    """The write facade is tier-aware: update/delete work on documents the
+    router placed in the warm tier."""
+    ccfg = CorpusConfig(n_docs=400, dim=16, n_tenants=3)
+    scfg = StoreConfig(capacity=1024, dim=16)
+    db = RagDB(scfg, warm_cfg=scfg, hot_window_s=90 * DAY_S, now_ts=ccfg.now_ts)
+    corpus = make_corpus(ccfg)
+    db.ingest(corpus)
+    ts = np.asarray(corpus.updated_at)
+    order = np.argsort(ts)
+    warm_doc = int(np.asarray(corpus.doc_id)[order[0]])   # oldest -> warm
+    warm_doc2 = int(np.asarray(corpus.doc_id)[order[1]])
+    hot_doc = int(np.asarray(corpus.doc_id)[order[-1]])
+    assert not db.log.has_doc(warm_doc) and db.log.has_doc(hot_doc)
+    # update both in one call: a fresh timestamp PROMOTES the warm doc to
+    # hot (recency-constrained queries are hot-only, so it must move)
+    db.update([warm_doc, hot_doc],
+              rng.standard_normal((2, 16)).astype(np.float32),
+              [ccfg.now_ts, ccfg.now_ts])
+    assert db.log.has_doc(warm_doc) and not db.router.warm.has_doc(warm_doc)
+    # the promoted doc is now visible to a recency-filtered session query
+    sess = db.session(Principal(
+        tenant_id=int(np.asarray(corpus.tenant)[order[0]]),
+        group_bits=0xFFFFFFFF))
+    snap_emb = np.asarray(db.log.snapshot()["emb"])[db.log.slot_of(warm_doc)]
+    res = (sess.search(snap_emb, normalize=False)
+           .newer_than(ccfg.now_ts - 10 * DAY_S).limit(4).run())
+    assert db.log.slot_of(warm_doc) in res.slots[0].tolist()
+    # an update keeping an old timestamp stays in the warm tier
+    db.update([warm_doc2], rng.standard_normal((1, 16)).astype(np.float32),
+              [int(ts[order[1]])])
+    assert db.router.warm.has_doc(warm_doc2)
+    # delete a warm doc: no KeyError, row invisible afterwards
+    wslot = db.router.warm.slot_of(warm_doc2)
+    db.delete([warm_doc2])
+    assert not db.router.warm.has_doc(warm_doc2)
+    assert not bool(np.asarray(db.router.warm.valid)[wslot])
+
+
+def test_sharded_hint_without_mesh_raises_cleanly(db_stack):
+    db, _, ccfg = db_stack
+    with pytest.raises(ValueError, match="mesh"):
+        (db.admin_session().search(np.ones(ccfg.dim, np.float32))
+         .using("sharded").limit(3).run())
+
+
+def test_single_tier_db_warm_arena_is_tiny():
+    db = RagDB(StoreConfig(capacity=1 << 12, dim=32))
+    # single-tier mode must not duplicate the hot arena for the unused warm client
+    assert db.router.warm.emb.shape[0] == 1
+
+
+def test_serve_reports_tiers_and_skips_warm_in_prompts(rng):
+    """Tiered serving: warm-tier slots index a different arena, so they feed
+    provenance (doc_tiers) but never doc_token_fn."""
+    ccfg = CorpusConfig(n_docs=600, dim=16, n_tenants=3)
+    scfg = StoreConfig(capacity=1024, dim=16)
+    db = RagDB(scfg, warm_cfg=scfg, hot_window_s=90 * DAY_S, now_ts=ccfg.now_ts)
+    db.ingest(make_corpus(ccfg))
+    seen_hot_slots = []
+    engine = _mini_engine(db, ccfg)
+    engine.doc_token_fn = lambda s: (seen_hot_slots.append(s),
+                                     np.asarray([s % 60], np.int32))[1]
+    # min_ts=0 -> route hot+warm: responses may carry warm slots
+    reqs = [Request(principal=Principal(tenant_id=0, group_bits=0xFFFFFFFF),
+                    query_emb=rng.standard_normal(ccfg.dim).astype(np.float32),
+                    prompt_tokens=np.asarray([1], np.int32), max_new_tokens=2)]
+    (resp,) = engine.serve(reqs)
+    assert resp.doc_tiers is not None
+    hot_slots = resp.doc_slots[(resp.doc_slots >= 0) & (resp.doc_tiers == 0)]
+    assert sorted(seen_hot_slots) == sorted(hot_slots.tolist())

@@ -74,6 +74,22 @@ def test_underfill_returns_minus_one(stack):
     assert (np.asarray(slots) == -1).all()
 
 
+def test_pred_cache_lru_keeps_hot_entries(monkeypatch):
+    from repro.core import query as qmod
+    monkeypatch.setattr(qmod, "_PRED_CACHE", type(qmod._PRED_CACHE)())
+    monkeypatch.setattr(qmod, "_PRED_CACHE_CAP", 4)
+    hot = Predicate(tenant=7)
+    hot.as_array()
+    for i in range(16):
+        Predicate(min_ts=i + 1).as_array()
+        hot.as_array()                      # touch the hot entry every time
+    # bounded, and the hot predicate survived the churn (LRU, not clear())
+    assert len(qmod._PRED_CACHE) <= 4
+    assert hot in qmod._PRED_CACHE
+    # cached array is reused, not rebuilt
+    assert hot.as_array() is qmod._PRED_CACHE[hot]
+
+
 def test_engines_agree(stack):
     snap, ccfg = stack
     q = make_queries(ccfg, 1, batch=2, seed=4)[0]

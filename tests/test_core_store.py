@@ -80,6 +80,69 @@ def test_tombstones_invisible_to_queries(rng):
     assert (slots >= 0).sum() == 4
 
 
+def test_free_slot_recycling(rng):
+    """delete() returns slots to the allocator: the arena never reports full
+    while live rows < capacity."""
+    cfg = StoreConfig(capacity=8, dim=4)
+    log = TransactionLog(cfg, empty(cfg))
+    log.ingest(make_batch(rng, 8, 4))                      # arena at capacity
+    log.delete([0, 1, 2])
+    log.ingest(make_batch(rng, 3, 4, tenant=1, start_id=100, ts=200))
+    snap = log.snapshot()
+    assert int(snap["n_live"]) == 8
+    # the new docs landed in the recycled slots, not past the frontier
+    new_slots = sorted(log.slot_of(d) for d in (100, 101, 102))
+    assert new_slots == [0, 1, 2]
+    # recycled rows are fully live and queryable under the new tenant
+    q = jnp.asarray(rng.standard_normal((1, 4), dtype=np.float32))
+    _, slots = unified_query(snap, q, Predicate(tenant=1), k=8)
+    got = np.asarray(slots)[0]
+    assert sorted(got[got >= 0].tolist()) == [0, 1, 2]
+    # mixed recycle + fresh would overflow only beyond true capacity
+    log.delete([100])
+    log.ingest(make_batch(rng, 1, 4, start_id=200))
+    try:
+        log.ingest(make_batch(rng, 1, 4, start_id=300))
+        assert False, "arena overfilled"
+    except RuntimeError:
+        pass
+
+
+def test_failed_ingest_leaks_no_free_slots(rng):
+    """Allocator state must only advance at the commit point: an ingest that
+    dies on the device write leaves every recycled slot reusable."""
+    cfg = StoreConfig(capacity=4, dim=4)
+    log = TransactionLog(cfg, empty(cfg))
+    log.ingest(make_batch(rng, 4, 4))
+    log.delete([0, 1])
+    bad = make_batch(rng, 2, 8, start_id=20)       # wrong embedding dim
+    try:
+        log.ingest(bad)
+        assert False, "wrong-dim ingest should fail"
+    except Exception:
+        pass
+    # the two freed slots are still available
+    log.ingest(make_batch(rng, 2, 4, tenant=1, start_id=30))
+    assert int(log.snapshot()["n_live"]) == 4
+
+
+def test_delete_duplicate_doc_ids_no_double_free(rng):
+    cfg = StoreConfig(capacity=4, dim=4)
+    log = TransactionLog(cfg, empty(cfg))
+    log.ingest(make_batch(rng, 4, 4))
+    log.delete([2, 2])                       # repeated id frees ONE slot
+    log.ingest(make_batch(rng, 1, 4, tenant=1, start_id=50))
+    snap = log.snapshot()
+    assert int(snap["n_live"]) == 4
+    assert log.slot_of(50) == 2
+    # arena genuinely full again: a 1-doc ingest must fail, not reuse slot 2
+    try:
+        log.ingest(make_batch(rng, 1, 4, start_id=60))
+        assert False, "double-free let the arena overfill"
+    except RuntimeError:
+        pass
+
+
 def test_quota_enforced():
     from repro.core import TenantRegistry
     reg = TenantRegistry()

@@ -1,4 +1,4 @@
-"""Hypothesis property tests on the system's central invariants.
+"""Property tests on the system's central invariants.
 
 1. LEAKAGE-IMPOSSIBILITY: for ANY corpus, ANY predicate, ANY query, no row
    returned by the unified engine violates the predicate (the paper's
@@ -6,13 +6,29 @@
 2. TOP-K SOUNDNESS: returned scores are the true top-k of the masked score
    vector, in non-increasing order.
 3. The filtered_topk Pallas kernel satisfies the same contract as the ref.
+4. FRONT DOOR: the same two properties hold through `RagDB`/`Session` — a
+   builder chain is bit-identical to the direct reference call, and no
+   Session can surface another tenant's rows (the API cannot even express
+   the request).
+
+Runs under Hypothesis when installed; otherwise the same checks sweep a
+deterministic seed grid so the invariants stay enforced on minimal CI rigs.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
+from repro.api import RagDB
+from repro.core import Principal, StoreConfig
 from repro.core.query import Predicate, unified_query_ref
+from repro.core.store import DocBatch
 from repro.kernels.filtered_topk.ops import filtered_topk
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 
 def _store_from(emb, tenant, ts, cat, acl):
@@ -27,21 +43,18 @@ def _store_from(emb, tenant, ts, cat, acl):
     }
 
 
-corpus_st = st.integers(min_value=4, max_value=300).flatmap(
-    lambda n: st.tuples(
-        st.just(n),
-        st.integers(min_value=0, max_value=2**32 - 1),  # numpy seed
-        st.integers(min_value=-2, max_value=5),          # tenant pred
-        st.integers(min_value=0, max_value=500),         # min_ts
-        st.integers(min_value=1, max_value=0xFFFFFFFF),  # cat mask
-        st.integers(min_value=1, max_value=0xFFFFFFFF),  # acl bits
-        st.integers(min_value=1, max_value=12),          # k
-    ))
+def _args_from_seed(seed: int):
+    """Deterministic draw matching the hypothesis strategy's support
+    (endpoint=True so the ALL_BITS pass-all sentinels are reachable)."""
+    rng = np.random.default_rng(seed)
+    return (int(rng.integers(4, 301)), int(rng.integers(0, 2**32)),
+            int(rng.integers(-2, 6)), int(rng.integers(0, 501)),
+            int(rng.integers(1, 0xFFFFFFFF, endpoint=True)),
+            int(rng.integers(1, 0xFFFFFFFF, endpoint=True)),
+            int(rng.integers(1, 13)))
 
 
-@given(corpus_st)
-@settings(max_examples=40, deadline=None)
-def test_no_leak_and_topk_sound(args):
+def _corpus(args):
     n, seed, p_ten, p_ts, p_cat, p_acl, k = args
     rng = np.random.default_rng(seed)
     emb = rng.standard_normal((n, 8), dtype=np.float32)
@@ -49,19 +62,28 @@ def test_no_leak_and_topk_sound(args):
     ts = rng.integers(0, 600, n, dtype=np.int32)
     cat = rng.integers(0, 32, n, dtype=np.int32)
     acl = rng.integers(0, 2**31, n, dtype=np.int64).astype(np.uint32)
-    store = _store_from(emb, tenant, ts, cat, acl)
     pred = Predicate(tenant=p_ten, min_ts=p_ts, cat_mask=p_cat, acl_bits=p_acl)
     q = rng.standard_normal((2, 8), dtype=np.float32)
+    return emb, tenant, ts, cat, acl, pred, q, k
 
+
+def _oracle_mask(tenant, ts, cat, acl, pred):
+    mask = (tenant >= 0) & (ts >= pred.min_ts)
+    if pred.tenant != -2:
+        mask &= tenant == pred.tenant
+    mask &= ((np.uint64(1) << (cat.astype(np.uint64) & np.uint64(31)))
+             & np.uint64(pred.cat_mask)) != 0
+    mask &= (acl & np.uint32(pred.acl_bits)) != 0
+    return mask
+
+
+def _check_no_leak_and_topk(args):
+    emb, tenant, ts, cat, acl, pred, q, k = _corpus(args)
+    store = _store_from(emb, tenant, ts, cat, acl)
     scores, slots = unified_query_ref(store, jnp.asarray(q), pred.as_array(), k)
     scores, slots = np.asarray(scores), np.asarray(slots)
 
-    mask = (tenant >= 0) & (ts >= p_ts)
-    if p_ten != -2:
-        mask &= tenant == p_ten
-    mask &= ((np.uint64(1) << (cat.astype(np.uint64) & np.uint64(31)))
-             & np.uint64(p_cat)) != 0
-    mask &= (acl & np.uint32(p_acl)) != 0
+    mask = _oracle_mask(tenant, ts, cat, acl, pred)
     ref = q @ emb.T
     ref[:, ~mask] = -np.inf
 
@@ -78,19 +100,8 @@ def test_no_leak_and_topk_sound(args):
         np.testing.assert_allclose(have, want, rtol=1e-4, atol=1e-5)
 
 
-@given(corpus_st)
-@settings(max_examples=15, deadline=None)
-def test_pallas_kernel_same_contract(args):
-    n, seed, p_ten, p_ts, p_cat, p_acl, k = args
-    rng = np.random.default_rng(seed)
-    emb = rng.standard_normal((n, 8), dtype=np.float32)
-    tenant = rng.integers(-1, 6, n, dtype=np.int32)
-    ts = rng.integers(0, 600, n, dtype=np.int32)
-    cat = rng.integers(0, 32, n, dtype=np.int32)
-    acl = rng.integers(0, 2**31, n, dtype=np.int64).astype(np.uint32)
-    pred = Predicate(tenant=p_ten, min_ts=p_ts, cat_mask=p_cat, acl_bits=p_acl)
-    q = rng.standard_normal((2, 8), dtype=np.float32)
-
+def _check_pallas_same_contract(args):
+    emb, tenant, ts, cat, acl, pred, q, k = _corpus(args)
     store = _store_from(emb, tenant, ts, cat, acl)
     s_ref, _ = unified_query_ref(store, jnp.asarray(q), pred.as_array(), k)
     s_pal, i_pal = filtered_topk(jnp.asarray(q), jnp.asarray(emb),
@@ -99,3 +110,76 @@ def test_pallas_kernel_same_contract(args):
                                  pred.as_array(), k, blk_n=64)
     np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref),
                                rtol=1e-4, atol=1e-5)
+
+
+def _check_session_front_door(args):
+    """The front door adds nothing and removes nothing: a Session's builder
+    chain is bit-identical to the reference engine under the principal's
+    clauses, and its results can never leave the principal's tenant/ACL."""
+    emb, tenant, ts, cat, acl, pred, q, k = _corpus(args)
+    n = emb.shape[0]
+    db = RagDB(StoreConfig(capacity=n, dim=8, metric="dot"))
+    db.ingest(DocBatch(emb=jnp.asarray(emb), tenant=jnp.asarray(tenant),
+                       category=jnp.asarray(cat), updated_at=jnp.asarray(ts),
+                       acl=jnp.asarray(acl, jnp.uint32),
+                       doc_id=jnp.arange(n, dtype=jnp.int32)))
+    principal_tenant = abs(pred.tenant) % 6
+    principal = Principal(tenant_id=principal_tenant, group_bits=pred.acl_bits)
+    res = (db.session(principal).search(q, normalize=False)
+           .newer_than(pred.min_ts).limit(k).run())
+
+    lowered = Predicate(tenant=principal_tenant, min_ts=pred.min_ts,
+                        acl_bits=pred.acl_bits)
+    s_ref, i_ref = unified_query_ref(db.log.snapshot(), jnp.asarray(q),
+                                     lowered.as_array(), k)
+    assert (np.asarray(i_ref) == res.slots).all()
+    assert (np.asarray(s_ref) == res.scores).all()
+    for b in range(2):
+        got = res.slots[b][res.slots[b] >= 0]
+        assert (tenant[got] == principal_tenant).all(), "cross-tenant leak"
+        assert ((acl[got] & np.uint32(pred.acl_bits)) != 0).all(), "ACL leak"
+        assert (ts[got] >= pred.min_ts).all()
+
+
+SEED_GRID = list(range(40))
+
+if HAVE_HYPOTHESIS:
+    # independent field draws so hypothesis can mutate/shrink each clause
+    # (the seed grid below is only the hypothesis-absent fallback)
+    corpus_st = st.integers(min_value=4, max_value=300).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.integers(min_value=0, max_value=2**32 - 1),  # numpy seed
+            st.integers(min_value=-2, max_value=5),          # tenant pred
+            st.integers(min_value=0, max_value=500),         # min_ts
+            st.integers(min_value=1, max_value=0xFFFFFFFF),  # cat mask
+            st.integers(min_value=1, max_value=0xFFFFFFFF),  # acl bits
+            st.integers(min_value=1, max_value=12),          # k
+        ))
+
+    @given(corpus_st)
+    @settings(max_examples=40, deadline=None)
+    def test_no_leak_and_topk_sound(args):
+        _check_no_leak_and_topk(args)
+
+    @given(corpus_st)
+    @settings(max_examples=15, deadline=None)
+    def test_pallas_kernel_same_contract(args):
+        _check_pallas_same_contract(args)
+
+    @given(corpus_st)
+    @settings(max_examples=15, deadline=None)
+    def test_session_front_door_property(args):
+        _check_session_front_door(args)
+else:
+    @pytest.mark.parametrize("seed", SEED_GRID)
+    def test_no_leak_and_topk_sound(seed):
+        _check_no_leak_and_topk(_args_from_seed(seed))
+
+    @pytest.mark.parametrize("seed", SEED_GRID[:15])
+    def test_pallas_kernel_same_contract(seed):
+        _check_pallas_same_contract(_args_from_seed(seed))
+
+    @pytest.mark.parametrize("seed", SEED_GRID[:15])
+    def test_session_front_door_property(seed):
+        _check_session_front_door(_args_from_seed(seed))
