@@ -11,8 +11,20 @@ type's compiled plan is recorded via explain().
 A second section measures predicate-group batching: a B-request batch with G
 unique predicate groups served as G stacked device calls (the RAGEngine.serve
 fast path) versus the old per-request loop of B calls.
+
+Two adaptive-serving sections (PR 2) close the loop:
+  * `cost_model` — per-engine latency curves measured at several arena sizes,
+    saved in the exact shape `repro.api.planner.CostModel.from_bench` loads,
+    so the next serving process routes on THESE measurements instead of the
+    static row thresholds;
+  * `adaptive_serving` — the B=32/G=4 serve fast path through `db.execute`
+    (bucketed + grouped, cache bypassed vs cache hit), plus a cold
+    varying-batch-size stream showing bucketed batching amortizing program
+    compilation (exact shapes recompile per distinct size; buckets don't).
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -21,16 +33,18 @@ import numpy as np
 from benchmarks.common import (PAPER, QUERY_TYPES, SESSION_QUERIES,
                                build_ragdb, build_stacks, percentiles,
                                save_result, timeit)
-from repro.api.executor import run_grouped
-from repro.core import Predicate, unified_query
-from repro.data.corpus import DAY_S, make_queries
+from repro.api import RagDB
+from repro.api.executor import CompiledShapes, run_grouped
+from repro.core import Predicate, Principal, StoreConfig, unified_query
+from repro.data.corpus import DAY_S, CorpusConfig, make_corpus, make_queries
 
 
 def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
-    from repro.data.corpus import CorpusConfig
     ccfg = CorpusConfig(n_docs=n_docs)
     _, split, corpus, (ccfg, scfg) = build_stacks(ccfg, with_unified=False)
-    db, _, _ = build_ragdb(ccfg, corpus=corpus)
+    # result cache off: the paper table compares ENGINE latency against the
+    # split stack; cached serving is measured in run_adaptive_serving below
+    db, _, _ = build_ragdb(ccfg, corpus=corpus, result_cache_size=0)
     queries = make_queries(ccfg, 8, batch=1)
     k = 5
 
@@ -68,8 +82,138 @@ def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
            "split_round_trips": split.stats.round_trips,
            "split_retries": split.stats.retries,
            "batched_vs_looped": run_batched_vs_looped(
-               db, ccfg, iters=max(iters // 4, 20), engine=engine, k=k)}
+               db, ccfg, iters=max(iters // 4, 20), engine=engine, k=k),
+           "cost_model": run_engine_curves(
+               ccfg, iters=max(iters // 4, 20), k=k,
+               warm_probe_ms=table["pure_similarity"]["stack_a"]["p50"]),
+           "adaptive_serving": run_adaptive_serving(
+               iters=max(iters // 4, 20), engine=engine, k=k)}
     save_result("bench_latency", out)
+    return out
+
+
+def run_engine_curves(ccfg, *, iters: int, k: int,
+                      warm_probe_ms: float | None = None,
+                      capacities=(1 << 10, 1 << 12, 1 << 14)) -> dict:
+    """Measure each runnable engine's p50 at several arena sizes and save the
+    curves in `CostModel.from_bench` format — the planner's measured cost
+    model is literally this section fed back in."""
+    engines = ["ref"]
+    if jax.default_backend() == "tpu":
+        engines.append("pallas")
+    curves: dict[str, list[list[float]]] = {e: [] for e in engines}
+    for cap in capacities:
+        sub = CorpusConfig(n_docs=cap // 2, dim=ccfg.dim)
+        db = RagDB(StoreConfig(capacity=cap, dim=ccfg.dim))
+        db.ingest(make_corpus(sub))
+        snap = db.log.snapshot()
+        qs = [np.asarray(q, np.float32) for q in make_queries(sub, 8, batch=1)]
+        pred = Predicate(min_ts=sub.now_ts - 120 * DAY_S)
+        for eng in engines:
+            qi = [0]
+
+            def go():
+                s, _ = unified_query(snap, jnp.asarray(qs[qi[0] % len(qs)]),
+                                     pred, k, engine=eng)
+                jax.block_until_ready(s)
+                qi[0] += 1
+
+            p50 = percentiles(timeit(go, iters=iters))["p50"]
+            curves[eng].append([cap, p50])
+            print(f"engine curve: {eng:6s} n_rows={cap:6d}  p50={p50:.3f}ms")
+    return {"engines": curves, "warm_probe_ms": warm_probe_ms}
+
+
+def run_adaptive_serving(*, iters: int, engine: str, k: int, batch: int = 32,
+                         n_groups: int = 4, n_docs: int = 20_000,
+                         dim: int = 128) -> dict:
+    """The serve fast path end to end through `db.execute` at B=32/G=4 on a
+    20k-doc arena (the PR-1 headline config): grouped+bucketed with the
+    result cache bypassed (cold), vs all-hit (cached), plus a cold
+    varying-batch-size stream isolating the recompilation overhead that
+    bucketing removes."""
+    ccfg = CorpusConfig(n_docs=n_docs, dim=dim)
+    db = RagDB(StoreConfig(capacity=1 << (int(np.ceil(np.log2(n_docs))) + 1),
+                           dim=dim))
+    db.ingest(make_corpus(ccfg))
+    rng = np.random.default_rng(0)
+    min_ts = ccfg.now_ts - 120 * DAY_S
+    sessions = [db.session(Principal(tenant_id=i % n_groups,
+                                     group_bits=0xFFFFFFFF))
+                for i in range(batch)]
+
+    def plans_for(qmat):
+        return [sessions[i].search(qmat[i], normalize=False)
+                .newer_than(min_ts).limit(k).using(engine).plan()
+                for i in range(batch)]
+
+    def norm(qmat):
+        return qmat / np.linalg.norm(qmat, axis=1, keepdims=True)
+
+    fixed = plans_for(norm(rng.standard_normal((batch, dim)).astype(np.float32)))
+    # cold: cache bypassed — grouped + bucketed device execution every time
+    t_cold = percentiles(timeit(lambda: db.execute(fixed, use_cache=False),
+                                iters=iters))
+    # cached: identical plans against an unchanged snapshot — all hits
+    t_hit = percentiles(timeit(lambda: db.execute(fixed), iters=iters))
+    # miss-path cost including key hashing: a fresh batch every iteration
+    fresh = [plans_for(norm(rng.standard_normal((batch, dim)).astype(np.float32)))
+             for _ in range(iters + 5)]
+    fi = [0]
+
+    def miss():
+        db.execute(fresh[fi[0] % len(fresh)])
+        fi[0] += 1
+
+    t_miss = percentiles(timeit(miss, iters=iters))
+
+    out = {"batch": batch, "unique_groups": n_groups, "n_docs": n_docs,
+           "grouped_cold_ms": t_cold, "cached_ms": t_hit,
+           "cache_miss_ms": t_miss,
+           "cache_speedup_p50": t_miss["p50"] / max(t_hit["p50"], 1e-9),
+           "recompile_stream": run_recompile_stream(db),
+           "shape_cache": {"hits": db.shapes.hits, "misses": db.shapes.misses},
+           "db_explain": db.explain()}
+    print(f"adaptive serving: B={batch} G={n_groups}  "
+          f"cold p50={t_cold['p50']:.2f}ms  miss p50={t_miss['p50']:.2f}ms  "
+          f"cache-hit p50={t_hit['p50']:.3f}ms  "
+          f"({out['cache_speedup_p50']:.0f}x hit-vs-cold)")
+    return out
+
+
+def run_recompile_stream(db, *, k: int = 7,
+                         sizes=(33, 35, 37, 39, 41, 43, 45, 47)) -> dict:
+    """One cold pass over a stream of distinct batch sizes, exact shapes vs
+    bucketed. Exact shapes compile one program per size; bucketed pads every
+    size to one bucket (64) and compiles once. k=7 keeps these programs
+    disjoint from every other section's, so both variants start cold."""
+    rng = np.random.default_rng(1)
+    snap = db.log.snapshot()
+    dim = snap["emb"].shape[1]
+    pred = Predicate(tenant=0)
+    batches = [rng.standard_normal((b, dim)).astype(np.float32) for b in sizes]
+
+    def one_pass(shapes):
+        t0 = time.perf_counter()
+        for q in batches:
+            run_grouped(snap, q, [pred] * q.shape[0], k, shapes=shapes)
+        return time.perf_counter() - t0
+
+    bucketed_first = one_pass(CompiledShapes())      # compiles bucket 64 once
+    exact_first = one_pass(None)                     # compiles all 8 sizes
+    # steady state: everything above is compiled now
+    t_exact = percentiles(timeit(lambda: one_pass(None), iters=10))
+    t_bucket = percentiles(timeit(lambda: one_pass(CompiledShapes()), iters=10))
+    out = {"sizes": list(sizes), "k": k,
+           "exact_first_pass_s": exact_first,
+           "bucketed_first_pass_s": bucketed_first,
+           "exact_steady_p50_ms": t_exact["p50"],
+           "bucketed_steady_p50_ms": t_bucket["p50"],
+           "first_pass_speedup": exact_first / max(bucketed_first, 1e-9)}
+    print(f"recompile stream ({len(sizes)} distinct batch sizes): "
+          f"exact first pass {exact_first * 1e3:.0f}ms "
+          f"(one compile per size), bucketed {bucketed_first * 1e3:.0f}ms "
+          f"(one compile total)  {out['first_pass_speedup']:.1f}x")
     return out
 
 

@@ -60,15 +60,18 @@ def build_stacks(corpus_cfg: CorpusConfig | None = None, *,
     return unified, split, corpus, (ccfg, scfg)
 
 
-def build_ragdb(corpus_cfg: CorpusConfig | None = None, *, corpus=None):
+def build_ragdb(corpus_cfg: CorpusConfig | None = None, *, corpus=None,
+                **ragdb_kwargs):
     """The unified stack behind the front door: RagDB + ingested corpus.
     Pass `corpus` to reuse one already built (e.g. by build_stacks) instead
-    of regenerating it."""
+    of regenerating it. Extra kwargs reach the RagDB constructor (e.g.
+    ``result_cache_size=0`` when a bench must measure the engine path cold
+    instead of the session cache)."""
     ccfg = corpus_cfg or CorpusConfig()
     scfg = bench_store_cfg(ccfg)
     if corpus is None:
         corpus = make_corpus(ccfg)
-    db = RagDB(scfg)
+    db = RagDB(scfg, **ragdb_kwargs)
     db.ingest(corpus)
     return db, corpus, (ccfg, scfg)
 

@@ -8,7 +8,8 @@
   executor.py  predicate-group batched execution; the single dispatch point
                for retrieval device calls
 """
-from repro.api.executor import ExecStats  # noqa: F401
-from repro.api.plan import LogicalPlan, PhysicalPlan  # noqa: F401
-from repro.api.planner import PlannerConfig, compile_plan  # noqa: F401
-from repro.api.ragdb import QueryBuilder, QueryResult, RagDB, Session  # noqa: F401
+from repro.api.executor import CompiledShapes, ExecStats  # noqa: F401
+from repro.api.plan import LogicalPlan, PhysicalPlan, bucket_rows  # noqa: F401
+from repro.api.planner import CostModel, PlannerConfig, compile_plan  # noqa: F401
+from repro.api.ragdb import (QueryBuilder, QueryResult, RagDB,  # noqa: F401
+                             ResultCache, Session)

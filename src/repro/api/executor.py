@@ -1,12 +1,17 @@
 """Physical-plan execution — the ONLY module that issues retrieval device
 calls for the front-door API (and, via shims, for TieredRouter and
-RAGEngine). Centralizing the dispatch is what makes the two headline
+RAGEngine). Centralizing the dispatch is what makes the three headline
 behaviors enforceable and testable:
 
   * predicate-group batching: a batch of B concurrent queries is grouped by
-    `PhysicalPlan.group_key` (predicate, k, engine) and each group runs as
-    ONE device program over the stacked query rows — B requests with G
-    unique predicate groups cost G device calls, not B;
+    `PhysicalPlan.group_key` (predicate, k, engine, route) and each group
+    runs as ONE device program over the stacked query rows — B requests with
+    G unique predicate groups cost G device calls, not B;
+  * bucketed batching: each group's row count is padded up to a power-of-two
+    bucket (`plan.bucket_rows`) so every batch size in a bucket reuses ONE
+    compiled program shape instead of recompiling per distinct size; the
+    resident shape working set is tracked by a small `CompiledShapes` LRU
+    whose hit/miss counters surface in `RagDB.explain()`;
   * tier merge: "hot+warm" plans probe the warm similarity tier and merge
     the two k-lists host-side, exactly as TieredRouter.query always did.
 
@@ -15,12 +20,13 @@ Tests count calls by monkeypatching `executor.unified_query`.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.plan import PhysicalPlan
+from repro.api.plan import PhysicalPlan, bucket_rows
 from repro.core.query import Predicate, unified_query
 from repro.core.store import Store
 
@@ -31,10 +37,68 @@ TIER_WARM = 1
 
 @dataclasses.dataclass
 class ExecStats:
+    """Per-RagDB execution counters (device work only — result-cache hits
+    never reach the executor and are counted by `ResultCache` itself)."""
     device_calls: int = 0         # retrieval programs launched on-device
     queries: int = 0              # logical queries answered
     hot_queries: int = 0
     warm_queries: int = 0
+    padded_rows: int = 0          # bucket-padding rows added across calls
+
+
+class CompiledShapes:
+    """Small LRU tracking the resident compiled retrieval-program shapes.
+
+    A shape is ``(engine, bucket_rows, k)``; bucketed batching guarantees
+    that any group whose shape is in this set reuses the already-compiled
+    program (XLA caches by shape). `touch()` returns True on a hit and
+    records the miss otherwise; evicting past ``cap`` models a bounded
+    compile cache, so a shape falling out of the working set is reported as
+    a recompile when it returns.
+
+    >>> shapes = CompiledShapes(cap=2)
+    >>> shapes.touch("ref", 8, 5)          # first sight: miss
+    False
+    >>> shapes.touch("ref", 8, 5)          # resident: hit
+    True
+    >>> shapes.touch("ref", 16, 5), shapes.touch("ref", 32, 5)  # evicts (8, 5)
+    (False, False)
+    >>> shapes.touch("ref", 8, 5)
+    False
+    >>> (shapes.hits, shapes.misses)
+    (1, 4)
+    """
+
+    def __init__(self, cap: int = 32):
+        self.cap = cap
+        self._lru: OrderedDict[tuple, None] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def touch(self, engine: str, bucket: int, k: int) -> bool:
+        key = (engine, bucket, k)
+        if key in self._lru:
+            self.hits += 1
+            self._lru.move_to_end(key)
+            return True
+        self.misses += 1
+        self._lru[key] = None
+        while len(self._lru) > self.cap:
+            self._lru.popitem(last=False)
+        return False
+
+
+def _pad_rows(q: np.ndarray, bucket: int) -> np.ndarray:
+    """Pad a (B, D) block with zero rows up to ``bucket`` rows (B <= bucket).
+    Retrieval is row-parallel, so padding rows cannot perturb real rows —
+    verified bit-exact in tests/test_adaptive.py."""
+    if q.shape[0] == bucket:
+        return q
+    return np.concatenate(
+        [q, np.zeros((bucket - q.shape[0], q.shape[1]), q.dtype)], axis=0)
 
 
 def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
@@ -50,11 +114,14 @@ def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
 
 def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
                 engine: str = "ref", *, sharded_fn=None,
-                stats: ExecStats | None = None):
+                stats: ExecStats | None = None,
+                shapes: CompiledShapes | None = None):
     """Predicate-group batched retrieval over one store.
 
     q: (B, D) host array, preds: B predicates (one per row). Rows sharing a
-    predicate are stacked and answered by one device call. Returns
+    predicate are stacked and answered by one device call; with ``shapes``
+    given, each group is padded to its power-of-two bucket so the device
+    program shape is reused across batch sizes. Returns
     (scores (B, k) f32, slots (B, k) i32, n_device_calls).
     """
     B = q.shape[0]
@@ -64,9 +131,17 @@ def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
     scores = np.full((B, k), np.float32(np.finfo(np.float32).min), np.float32)
     slots = np.full((B, k), -1, np.int32)
     for pred, idxs in groups.items():
-        s, sl = _dispatch(store, jnp.asarray(q[np.asarray(idxs)]), pred, k,
-                          engine, sharded_fn)
-        scores[idxs], slots[idxs] = np.asarray(s), np.asarray(sl)
+        q_g = np.asarray(q[np.asarray(idxs)], np.float32)
+        n_valid = q_g.shape[0]
+        if shapes is not None:
+            bucket = bucket_rows(n_valid)
+            shapes.touch(engine, bucket, k)
+            if stats is not None:
+                stats.padded_rows += bucket - n_valid
+            q_g = _pad_rows(q_g, bucket)
+        s, sl = _dispatch(store, jnp.asarray(q_g), pred, k, engine, sharded_fn)
+        s, sl = np.asarray(s), np.asarray(sl)
+        scores[idxs], slots[idxs] = s[:n_valid], sl[:n_valid]
     if stats is not None:
         stats.device_calls += len(groups)
         stats.queries += B
@@ -75,7 +150,15 @@ def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
 
 
 def merge_tiers(hs, hi, ws, wi, k: int):
-    """Merge hot and warm k-lists into the global top-k (host-side)."""
+    """Merge hot and warm k-lists into the global top-k (host-side).
+
+    >>> import numpy as np
+    >>> hs = np.array([[3.0, 1.0]]); hi = np.array([[7, 5]])
+    >>> ws = np.array([[2.0, 0.5]]); wi = np.array([[9, 4]])
+    >>> s, i, t = merge_tiers(hs, hi, ws, wi, k=3)
+    >>> i.tolist(), t.tolist()
+    ([[7, 9, 5]], [[0, 1, 0]])
+    """
     scores = np.concatenate([hs, ws], axis=1)
     slots = np.concatenate([hi, wi], axis=1)
     tiers = np.concatenate([np.full_like(hi, TIER_HOT),
@@ -87,33 +170,44 @@ def merge_tiers(hs, hi, ws, wi, k: int):
 
 def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
                  k: int, *, engine: str = "ref", probe_warm: bool = False,
-                 sharded_fn=None, stats: ExecStats | None = None):
+                 sharded_fn=None, stats: ExecStats | None = None,
+                 n_valid: int | None = None):
     """Single-predicate tiered retrieval (TieredRouter.query's engine room).
 
-    Returns (scores (B, k), slots (B, k), tiers (B, k)) as numpy arrays."""
+    ``n_valid`` is the count of real query rows when the caller padded q to
+    a bucket — only the hot device dispatch needs the bucketed shape; stats
+    count logical queries, and the host-side warm probe sees the UNPADDED
+    rows (a padding row's candidates rarely pass a constrained predicate
+    and would trigger the warm client's under-fill retries for nothing).
+    Returns (scores, slots, tiers) numpy arrays of q's full row count
+    without a warm probe, and of ``n_valid`` rows with one; callers slice
+    ``[:n_valid]``, which is exact either way."""
+    n_logical = q.shape[0] if n_valid is None else n_valid
     hs, hi = _dispatch(hot_store, q, pred, k, engine, sharded_fn)
     hs, hi = jax.device_get((hs, hi))
     if stats is not None:
         stats.device_calls += 1
-        stats.queries += q.shape[0]
-        stats.hot_queries += q.shape[0]
+        stats.queries += n_logical
+        stats.hot_queries += n_logical
     if not probe_warm:
         return hs, hi, np.full_like(hi, TIER_HOT)
     # the warm client's round trips (vector scan + metadata fetch, retries
     # included) are device programs too — count them, or device_calls would
     # under-report exactly when the expensive route runs
     rt0 = warm.stats.round_trips
-    ws, wi = warm.query(q, pred, k)
+    ws, wi = warm.query(q[:n_logical], pred, k)
     if stats is not None:
         stats.device_calls += warm.stats.round_trips - rt0
-        stats.warm_queries += q.shape[0]
-    return merge_tiers(hs, hi, ws, wi, k)
+        stats.warm_queries += n_logical
+    return merge_tiers(hs[:n_logical], hi[:n_logical], ws, wi, k)
 
 
 def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
-                  sharded_fn=None, stats: ExecStats | None = None):
+                  sharded_fn=None, stats: ExecStats | None = None,
+                  shapes: CompiledShapes | None = None):
     """Batched execution of compiled plans: group by `group_key`, one hot
-    device call per group, warm probe + merge for 'hot+warm' groups.
+    device call per group (padded to its pow2 bucket when ``shapes`` is
+    given), warm probe + merge for 'hot+warm' groups.
 
     Every plan must carry its query rows (`logical.q`, shape (B_i, D)).
     Returns (scores (B, k), slots (B, k), tiers (B, k)) with B = total query
@@ -145,10 +239,19 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
     tiers = np.full((B, k), TIER_HOT, np.int32)
     for key, idxs in groups.items():
         plan = row_plans[idxs[0]]
-        q_g = jnp.asarray(q_all[np.asarray(idxs)])
-        s, sl, tr = query_tiered(hot_store, warm, q_g, plan.pred, k,
-                                 engine=plan.engine,
+        q_g = q_all[np.asarray(idxs)]
+        n_valid = q_g.shape[0]
+        if shapes is not None:
+            bucket = bucket_rows(n_valid)
+            shapes.touch(plan.engine, bucket, k)
+            if stats is not None:
+                stats.padded_rows += bucket - n_valid
+            q_g = _pad_rows(q_g, bucket)
+        s, sl, tr = query_tiered(hot_store, warm, jnp.asarray(q_g), plan.pred,
+                                 k, engine=plan.engine,
                                  probe_warm=(plan.route == "hot+warm"),
-                                 sharded_fn=sharded_fn, stats=stats)
-        scores[idxs], slots[idxs], tiers[idxs] = s, sl, tr
+                                 sharded_fn=sharded_fn, stats=stats,
+                                 n_valid=n_valid)
+        scores[idxs], slots[idxs], tiers[idxs] = (s[:n_valid], sl[:n_valid],
+                                                  tr[:n_valid])
     return scores, slots, tiers

@@ -28,6 +28,19 @@ ANY_TENANT = -2
 ALL_BITS = 0xFFFFFFFF
 
 
+def bucket_rows(n: int) -> int:
+    """Smallest power of two >= ``n`` — the bucketed-batching shape policy.
+
+    Predicate-group batches are padded up to these buckets so every batch
+    size in [2^(b-1)+1, 2^b] reuses ONE compiled program shape instead of
+    recompiling per distinct size (executor.CompiledShapes).
+
+    >>> [bucket_rows(n) for n in (1, 2, 3, 4, 5, 9, 32, 33)]
+    [1, 2, 4, 4, 8, 16, 32, 64]
+    """
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class LogicalPlan:
     """What the caller asked for. Immutable; the query embedding travels
@@ -43,6 +56,11 @@ class LogicalPlan:
         default=None, compare=False, hash=False, repr=False)
 
     def predicate(self) -> Predicate:
+        """Lower the clause set to the kernel's runtime `Predicate`.
+
+        >>> LogicalPlan(tenant=3, min_ts=5, categories=(1, 2)).predicate()
+        Predicate(tenant=3, min_ts=5, cat_mask=6, acl_bits=4294967295)
+        """
         from repro.core.tenancy import category_mask
         cat_mask = (ALL_BITS if self.categories is None
                     else category_mask(self.categories))
@@ -51,7 +69,11 @@ class LogicalPlan:
 
     @property
     def constrained(self) -> bool:
-        """Any clause beyond pure similarity (drives tier routing)."""
+        """Any clause beyond pure similarity (drives tier routing).
+
+        >>> LogicalPlan().constrained, LogicalPlan(tenant=1).constrained
+        (False, True)
+        """
         return (self.tenant != ANY_TENANT or self.min_ts > 0
                 or self.categories is not None or self.acl_bits != ALL_BITS)
 
@@ -79,6 +101,9 @@ class PhysicalPlan:
     route: str                        # "hot" | "hot+warm"
     route_reason: str
     n_rows: int                       # hot-tier arena rows the scan covers
+    est_cost_ms: float | None = None  # cost-model estimate for the chosen
+                                      # engine at n_rows (None = no model)
+    cost_source: str = "static-thresholds"   # "measured" | "static-thresholds"
 
     @property
     def group_key(self) -> tuple:
@@ -101,11 +126,18 @@ class PhysicalPlan:
             clauses.append(f"category IN {set(lp.categories)}")
         if lp.acl_bits != ALL_BITS:
             clauses.append(f"acl & {lp.acl_bits:#x}")
+        rows = 1 if lp.q is None else int(np.atleast_2d(lp.q).shape[0])
+        if self.est_cost_ms is not None:
+            cost = f"~{self.est_cost_ms:.3f} ms/query est (measured curves)"
+        else:
+            cost = "static thresholds (no cost model loaded)"
         lines = [
             f"PhysicalPlan  top-{lp.k} over {self.n_rows} hot-tier rows",
             f"  predicate: {' AND '.join(clauses)}",
             f"  engine:    {self.engine:8s} ({self.engine_reason})",
             f"  route:     {self.route:8s} ({self.route_reason})",
             f"  batching:  predicate-group key {self.group_key!r}",
+            f"  bucket:    {rows} query rows -> {bucket_rows(rows)} (pow2 shape reuse)",
+            f"  cost:      {cost}",
         ]
         return "\n".join(lines)

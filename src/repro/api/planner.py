@@ -1,45 +1,188 @@
 """The planner: LogicalPlan -> PhysicalPlan.
 
-Deterministic compilation rules (documented in DESIGN.md §Planner):
+Compilation is deterministic and fully reported by ``explain()``.
 
-Engine selection — first match wins:
-  1. the builder's explicit `.using(engine)` hint;
-  2. "sharded"  if the RagDB was built with a device mesh and the hot arena
-     is at least `shard_min_rows` (the make_sharded_query path: per-shard
-     masked scan + constant-size O(shards·k) merge);
-  3. "pallas"   on a TPU backend once the arena crosses `pallas_min_rows`
-     (the fused filtered_topk kernel amortizes its launch there);
-  4. "ref"      otherwise (pure-jnp reference; fastest at small N and the
-     only engine on CPU test rigs).
+Engine selection — cost-based when measurements exist, threshold fallback
+otherwise:
+  * with a `CostModel` loaded into `PlannerConfig` (fitted from
+    ``results/bench_latency.json`` by ``benchmarks/bench_latency.py``), the
+    planner estimates per-query latency for every *available* engine (ref
+    always; pallas on a TPU backend; sharded with a device mesh) and picks
+    the cheapest — the reason string carries every estimate, so the choice
+    is auditable;
+  * without measurements (or when a candidate engine has no curve) the old
+    static rules apply, first match wins:
+      1. the builder's explicit `.using(engine)` hint;
+      2. "sharded"  if the RagDB was built with a device mesh and the hot
+         arena is at least `shard_min_rows`;
+      3. "pallas"   on a TPU backend once the arena crosses `pallas_min_rows`
+         (the fused filtered_topk kernel amortizes its launch there);
+      4. "ref"      otherwise (pure-jnp reference; the only engine on CPU).
 
 Tier routing — the paper's §7.3 invariant, previously buried inside
 `TieredRouter.query`:
   * multi-constraint queries that only need the hot window are answered by
-    the hot unified tier alone ("hot");
+    the hot unified tier alone ("hot") — warm rows are older than the hot
+    floor by placement, so the probe could not contribute;
   * everything else additionally probes the warm similarity tier and merges
     ("hot+warm") — unless the warm tier is empty, in which case probing it
-    could only return padding.
+    could only return padding. The route is a completeness rule, not a
+    heuristic, so the cost model only *annotates* it (estimated warm-probe
+    cost in the reason string); it never overrides it.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
+import os
 
 import jax
 
 from repro.api.plan import LogicalPlan, PhysicalPlan
 
+#: default location bench_latency writes its measurements to (cwd-relative,
+#: i.e. resolved from the repo root where benchmarks are run).
+DEFAULT_MEASUREMENTS = os.path.join("results", "bench_latency.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Measured per-engine latency curves: ``engine -> ((n_rows, p50_ms), ...)``.
+
+    Curves are stored as tuples (hashable, so a `PlannerConfig` stays frozen)
+    and interpolated log-log: retrieval cost is near power-law in arena rows,
+    so interpolating in log space is exact for linear scans and close for
+    everything else. Outside the measured range the end segment's slope is
+    extrapolated; a single-point curve extrapolates linearly in ``n_rows``
+    (a masked scan's cost is row-proportional).
+
+    >>> cm = CostModel(curves=(("ref", ((1000, 1.0), (4000, 4.0))),))
+    >>> round(cm.estimate_ms("ref", 2000), 3)
+    2.0
+    >>> round(cm.estimate_ms("ref", 8000), 3)
+    8.0
+    >>> cm.estimate_ms("pallas", 2000) is None
+    True
+    """
+    curves: tuple[tuple[str, tuple[tuple[int, float], ...]], ...] = ()
+    warm_probe_ms: float | None = None
+
+    def curve(self, engine: str) -> tuple[tuple[int, float], ...] | None:
+        """The measured (n_rows, p50_ms) points for ``engine``, or None."""
+        for name, pts in self.curves:
+            if name == engine:
+                return pts
+        return None
+
+    def estimate_ms(self, engine: str, n_rows: int) -> float | None:
+        """Estimated p50 latency (ms) of one query on ``engine`` at
+        ``n_rows`` arena rows; None when the engine has no curve."""
+        pts = self.curve(engine)
+        if not pts:
+            return None
+        pts = sorted(pts)
+        n = max(int(n_rows), 1)
+        if len(pts) == 1:
+            n0, t0 = pts[0]
+            return t0 * n / max(n0, 1)
+        xs = [math.log(max(p[0], 1)) for p in pts]
+        ys = [math.log(max(p[1], 1e-9)) for p in pts]
+        x = math.log(n)
+        # clamp to the end segments for extrapolation
+        j = 1
+        while j < len(xs) - 1 and x > xs[j]:
+            j += 1
+        x0, x1, y0, y1 = xs[j - 1], xs[j], ys[j - 1], ys[j]
+        slope = (y1 - y0) / (x1 - x0) if x1 != x0 else 0.0
+        return math.exp(y0 + slope * (x - x0))
+
+    @classmethod
+    def from_bench(cls, path: str | None = None) -> "CostModel | None":
+        """Load the ``cost_model`` section bench_latency saves; None when the
+        file or section is missing (the planner then falls back to the
+        static thresholds)."""
+        path = path or DEFAULT_MEASUREMENTS
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            return None
+        section = payload.get("cost_model")
+        if not section or not section.get("engines"):
+            return None
+        curves = tuple(
+            (eng, tuple((int(n), float(ms)) for n, ms in pts))
+            for eng, pts in sorted(section["engines"].items()) if pts)
+        if not curves:
+            return None
+        warm = section.get("warm_probe_ms")
+        return cls(curves=curves,
+                   warm_probe_ms=float(warm) if warm is not None else None)
+
 
 @dataclasses.dataclass(frozen=True)
 class PlannerConfig:
+    """Planner knobs. ``cost_model`` (when loaded) makes engine selection
+    cost-based; the row thresholds are the fallback rules.
+
+    >>> PlannerConfig().cost_model is None
+    True
+    """
     pallas_min_rows: int = 1 << 15    # fused-kernel launch amortization point
     shard_min_rows: int = 1 << 20     # below this a single device wins
+    cost_model: CostModel | None = None
+
+    @classmethod
+    def with_measured_costs(cls, path: str | None = None,
+                            **kwargs) -> "PlannerConfig":
+        """A config with `CostModel.from_bench(path)` loaded (None-safe:
+        missing measurements leave the static-threshold behavior)."""
+        return cls(cost_model=CostModel.from_bench(path), **kwargs)
+
+
+def _candidate_engines(has_mesh: bool) -> list[str]:
+    """Engines the current rig can actually run (ref always; pallas needs a
+    TPU backend; sharded needs a mesh-built RagDB)."""
+    cands = ["ref"]
+    if jax.default_backend() == "tpu":
+        cands.append("pallas")
+    if has_mesh:
+        cands.append("sharded")
+    return cands
 
 
 def choose_engine(logical: LogicalPlan, *, n_rows: int,
                   cfg: PlannerConfig = PlannerConfig(),
                   has_mesh: bool = False) -> tuple[str, str]:
+    """Pick the execution engine and an auditable reason string.
+
+    An explicit ``.using()`` hint always wins; then the cost model (if every
+    candidate engine has a measured curve); then the static thresholds.
+
+    >>> eng, why = choose_engine(LogicalPlan(k=5), n_rows=512)
+    >>> eng
+    'ref'
+    >>> cm = CostModel(curves=(("ref", ((1 << 10, 1.0), (1 << 20, 1000.0))),
+    ...                        ("sharded", ((1 << 10, 8.0), (1 << 20, 80.0)))))
+    >>> cfg = PlannerConfig(cost_model=cm)
+    >>> choose_engine(LogicalPlan(k=5), n_rows=1 << 20, cfg=cfg,
+    ...               has_mesh=True)[0]
+    'sharded'
+    >>> choose_engine(LogicalPlan(k=5), n_rows=1 << 10, cfg=cfg,
+    ...               has_mesh=True)[0]
+    'ref'
+    """
     if logical.engine is not None:
         return logical.engine, "caller hint (.using())"
+    cands = _candidate_engines(has_mesh)
+    cm = cfg.cost_model
+    if cm is not None:
+        ests = {e: cm.estimate_ms(e, n_rows) for e in cands}
+        if all(v is not None for v in ests.values()):
+            best = min(ests, key=lambda e: ests[e])
+            detail = ", ".join(f"{e} ~{ests[e]:.2f}ms" for e in cands)
+            return best, f"cost model: {detail}"
     if has_mesh and n_rows >= cfg.shard_min_rows:
         return "sharded", f"mesh present and {n_rows} rows >= {cfg.shard_min_rows}"
     if jax.default_backend() == "tpu" and n_rows >= cfg.pallas_min_rows:
@@ -48,23 +191,50 @@ def choose_engine(logical: LogicalPlan, *, n_rows: int,
 
 
 def choose_route(logical: LogicalPlan, *, hot_window_s: int, now_ts: int,
-                 warm_rows: int) -> tuple[str, str]:
+                 warm_rows: int,
+                 cost_model: CostModel | None = None) -> tuple[str, str]:
+    """Tier routing (paper §7.3). Semantics-driven — the warm probe runs
+    exactly when it could contribute rows; the cost model only annotates the
+    reason with the probe's measured price.
+
+    >>> choose_route(LogicalPlan(tenant=1, min_ts=950, k=3),
+    ...              hot_window_s=100, now_ts=1000, warm_rows=10)[0]
+    'hot'
+    >>> choose_route(LogicalPlan(k=3), hot_window_s=100, now_ts=1000,
+    ...              warm_rows=10)[0]
+    'hot+warm'
+    >>> choose_route(LogicalPlan(k=3), hot_window_s=100, now_ts=1000,
+    ...              warm_rows=0)
+    ('hot', 'warm tier empty')
+    """
     if warm_rows == 0:
         return "hot", "warm tier empty"
     recent_only = logical.min_ts >= now_ts - hot_window_s
     if logical.constrained and recent_only:
         return "hot", "constrained query within the hot window"
-    return "hot+warm", "long-tail similarity spills to the warm tier"
+    reason = "long-tail similarity spills to the warm tier"
+    if cost_model is not None and cost_model.warm_probe_ms is not None:
+        reason += f" (+~{cost_model.warm_probe_ms:.2f}ms measured warm probe)"
+    return "hot+warm", reason
 
 
 def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
                  now_ts: int, warm_rows: int,
                  cfg: PlannerConfig = PlannerConfig(),
                  has_mesh: bool = False) -> PhysicalPlan:
+    """Compile WHAT (LogicalPlan) into HOW (PhysicalPlan): engine + route +
+    the predicate-group batching key, with the cost estimate attached so
+    ``explain()`` can render it."""
     engine, engine_reason = choose_engine(logical, n_rows=n_rows, cfg=cfg,
                                           has_mesh=has_mesh)
     route, route_reason = choose_route(logical, hot_window_s=hot_window_s,
-                                       now_ts=now_ts, warm_rows=warm_rows)
+                                       now_ts=now_ts, warm_rows=warm_rows,
+                                       cost_model=cfg.cost_model)
+    est = (cfg.cost_model.estimate_ms(engine, n_rows)
+           if cfg.cost_model is not None else None)
     return PhysicalPlan(logical=logical, pred=logical.predicate(),
                         engine=engine, engine_reason=engine_reason,
-                        route=route, route_reason=route_reason, n_rows=n_rows)
+                        route=route, route_reason=route_reason, n_rows=n_rows,
+                        est_cost_ms=est,
+                        cost_source=("measured" if est is not None
+                                     else "static-thresholds"))

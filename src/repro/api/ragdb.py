@@ -27,11 +27,13 @@ group into one device program each (executor.run_grouped's contract).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.executor import ExecStats, execute_plans
+from repro.api.executor import CompiledShapes, ExecStats, execute_plans
 from repro.api.plan import ALL_BITS, ANY_TENANT, LogicalPlan, PhysicalPlan
 from repro.api.planner import PlannerConfig, compile_plan
 from repro.core.query import make_sharded_query
@@ -45,21 +47,99 @@ _FOREVER = (1 << 31) - 1     # hot window that never expires (single-tier mode)
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class QueryResult:
+    """What `QueryBuilder.run()` returns: result arrays plus the compiled
+    plan that produced them (`res.plan.explain()` for the audit trail)."""
     scores: np.ndarray           # (B, k) f32, NEG_INF beyond the fill
     slots: np.ndarray            # (B, k) i32 hot-tier slots, -1 padding
     tiers: np.ndarray            # (B, k) i32, 0 = hot, 1 = warm
     plan: PhysicalPlan
+    cached: bool = False         # True when served from the result cache
+
+
+class ResultCache:
+    """Snapshot-exact session result cache (LRU).
+
+    Keys are ``(plan group key, query digest, hot commit_count,
+    warm commit_count)``. Snapshot immutability makes invalidation exact and
+    trivial: a write can only be observed through a NEW snapshot, every
+    write bumps the owning tier's commit counter, and the counter is part of
+    the key — so a stale hit is impossible *by construction* (the paper's
+    zero-synchronization-inconsistency claim, applied to caching). There is
+    no TTL and no invalidation walk; old-snapshot entries simply stop being
+    addressed and age out of the LRU.
+
+    Hot-only plans key ``warm commit_count`` as -1 so warm-tier writes don't
+    evict results they provably cannot change.
+
+    >>> rc = ResultCache(cap=2)
+    >>> rc.put(("k1", 0), "r1"); rc.get(("k1", 0))
+    'r1'
+    >>> rc.get(("k1", 1)) is None     # a bumped commit counter never hits
+    True
+    >>> rc.put(("k2", 0), "r2"); rc.put(("k3", 0), "r3")   # evicts ("k1", 0)
+    >>> rc.get(("k1", 0)) is None
+    True
+    >>> (rc.hits, rc.misses)
+    (1, 2)
+    """
+
+    def __init__(self, cap: int = 256):
+        self.cap = cap
+        self._lru: OrderedDict[tuple, tuple] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def get(self, key: tuple):
+        hit = self._lru.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._lru.move_to_end(key)
+        return hit
+
+    def put(self, key: tuple, value) -> None:
+        self._lru[key] = value
+        self._lru.move_to_end(key)     # re-put of a resident key is a use
+        while len(self._lru) > self.cap:
+            self._lru.popitem(last=False)
 
 
 class RagDB:
     """Owns the storage engine (hot `TransactionLog` inside a `TieredRouter`,
     warm similarity tier, cold archive) plus the `TenantRegistry`, and is the
-    only object that executes query plans."""
+    only object that executes query plans.
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core.store import DocBatch, StoreConfig
+    >>> from repro.core.tenancy import Principal
+    >>> db = RagDB(StoreConfig(capacity=8, dim=4))
+    >>> db.ingest(DocBatch(
+    ...     emb=jnp.eye(3, 4), tenant=jnp.array([0, 0, 1]),
+    ...     category=jnp.array([0, 1, 0]), updated_at=jnp.array([10, 20, 30]),
+    ...     acl=jnp.array([1, 1, 1], jnp.uint32), doc_id=jnp.arange(3)))
+    >>> sess = db.session(Principal(tenant_id=0, group_bits=0x1))
+    >>> q = np.array([1.0, 0, 0, 0], np.float32)
+    >>> res = sess.search(q).limit(2).run()
+    >>> res.slots[0].tolist()        # doc 2 is tenant 1: structurally invisible
+    [0, 1]
+    >>> res.cached
+    False
+    >>> sess.search(q).limit(2).run().cached   # same snapshot: exact cache hit
+    True
+    >>> db.delete([0])                         # a write bumps commit_count ...
+    >>> sess.search(q).limit(2).run().cached   # ... so the hit is impossible
+    False
+    """
 
     def __init__(self, hot_cfg: StoreConfig, *, warm_cfg: StoreConfig | None = None,
                  hot_window_s: int | None = None, now_ts: int = 0,
                  planner_cfg: PlannerConfig = PlannerConfig(),
-                 mesh=None, shard_axes=None):
+                 mesh=None, shard_axes=None,
+                 result_cache_size: int = 256, shape_cache_size: int = 32):
         tiered = warm_cfg is not None
         if tiered and hot_window_s is None:
             raise ValueError("a tiered RagDB (warm_cfg given) needs "
@@ -78,6 +158,12 @@ class RagDB:
         self.mesh, self.shard_axes = mesh, shard_axes
         self.stats = ExecStats()
         self._sharded_fns: dict[int, object] = {}     # k -> compiled query
+        # adaptive serving fast path: bucketed program-shape reuse + the
+        # snapshot-exact result cache (size 0 disables either).
+        self.shapes = (CompiledShapes(shape_cache_size)
+                       if shape_cache_size else None)
+        self.result_cache = (ResultCache(result_cache_size)
+                             if result_cache_size else None)
 
     # -- storage facade --------------------------------------------------
     @property
@@ -212,22 +298,100 @@ class RagDB:
             self._sharded_fns[k] = fn
         return fn
 
-    def execute(self, plans: list[PhysicalPlan]):
+    def _result_key(self, plan: PhysicalPlan) -> tuple | None:
+        """Snapshot-exact cache key for one plan, or None when the plan is
+        uncacheable (no query rows). Hot-only plans pin the warm counter to
+        -1: warm writes provably cannot change their results."""
+        lp = plan.logical
+        if lp.q is None:
+            return None
+        q = np.ascontiguousarray(np.atleast_2d(lp.q), np.float32)
+        digest = hashlib.blake2b(q.tobytes(), digest_size=16).digest()
+        warm_commits = (self.router.warm.commit_count
+                        if plan.route == "hot+warm" else -1)
+        return (plan.group_key, q.shape, digest,
+                self.log.commit_count, warm_commits)
+
+    def execute(self, plans: list[PhysicalPlan], *, use_cache: bool = True):
         """Predicate-group batched execution; see executor.execute_plans.
-        Router stats stay coherent for callers watching the old counters."""
-        # only build the sharded program when a mesh exists; otherwise let
-        # the executor raise its "requires a mesh-built RagDB" error
-        needs_shard = (self.mesh is not None
-                       and any(p.engine == "sharded" for p in plans))
-        k = plans[0].logical.k if plans else 0
-        before_hot, before_warm = self.stats.hot_queries, self.stats.warm_queries
-        out = execute_plans(
-            self.log.snapshot(), self.router.warm, plans,
-            sharded_fn=self._sharded_fn(k) if needs_shard else None,
-            stats=self.stats)
-        self.router.stats.hot_queries += self.stats.hot_queries - before_hot
-        self.router.stats.warm_queries += self.stats.warm_queries - before_warm
-        return out
+
+        Plans whose (group key, query digest, commit counters) match a
+        cached entry are answered without any device work; the rest run as
+        one bucketed, grouped `execute_plans` call. Router stats stay
+        coherent for callers watching the old counters."""
+        per_plan: list[tuple | None] = [None] * len(plans)
+        rows = [1 if p.logical.q is None
+                else int(np.atleast_2d(p.logical.q).shape[0]) for p in plans]
+        misses: list[tuple[int, tuple | None]] = []
+        cache = self.result_cache if use_cache else None
+        for i, p in enumerate(plans):
+            key = self._result_key(p) if cache is not None else None
+            hit = cache.get(key) if key is not None else None
+            if hit is None:
+                misses.append((i, key))
+            else:
+                per_plan[i] = hit
+        if misses:
+            run_plans = [plans[i] for i, _ in misses]
+            # only build the sharded program when a mesh exists; otherwise
+            # let the executor raise its "requires a mesh-built RagDB" error
+            needs_shard = (self.mesh is not None
+                           and any(p.engine == "sharded" for p in run_plans))
+            k = run_plans[0].logical.k
+            before_hot = self.stats.hot_queries
+            before_warm = self.stats.warm_queries
+            s, sl, tr = execute_plans(
+                self.log.snapshot(), self.router.warm, run_plans,
+                sharded_fn=self._sharded_fn(k) if needs_shard else None,
+                stats=self.stats, shapes=self.shapes)
+            self.router.stats.hot_queries += self.stats.hot_queries - before_hot
+            self.router.stats.warm_queries += self.stats.warm_queries - before_warm
+            off = 0
+            for i, key in misses:
+                chunk = (s[off:off + rows[i]], sl[off:off + rows[i]],
+                         tr[off:off + rows[i]])
+                per_plan[i] = chunk
+                if cache is not None and key is not None:
+                    cache.put(key, chunk)
+                off += rows[i]
+        # concatenation copies, so cached arrays are never aliased to callers
+        return tuple(np.concatenate([c[j] for c in per_plan], axis=0)
+                     for j in range(3))
+
+    def explain(self) -> str:
+        """Session-level counters (the per-query twin is
+        `PhysicalPlan.explain()`); format documented in docs/api.md.
+
+        Lines: store watermarks, planner cost-model status, compiled-shape
+        LRU hit/miss, result-cache hit/miss, executor device-call totals."""
+        snap = self.log.snapshot()
+        cm = self.planner_cfg.cost_model
+        planner = ("cost model loaded "
+                   f"({len(cm.curves)} engine curve(s))" if cm is not None
+                   else "static thresholds (no cost model loaded)")
+        if self.shapes is not None:
+            shapes = (f"{len(self.shapes)} resident, "
+                      f"{self.shapes.hits} hits / {self.shapes.misses} misses")
+        else:
+            shapes = "disabled"
+        if self.result_cache is not None:
+            rc = self.result_cache
+            results = (f"{len(rc)} entries, "
+                       f"{rc.hits} hits / {rc.misses} misses")
+        else:
+            results = "disabled"
+        st = self.stats
+        return "\n".join([
+            f"RagDB  {snap['emb'].shape[0]} hot-tier rows "
+            f"({int(snap['n_live'])} live), {self.router.warm.n_docs} warm docs, "
+            f"commit_count={self.log.commit_count}",
+            f"  planner:      {planner}",
+            f"  shape cache:  {shapes}",
+            f"  result cache: {results}",
+            f"  exec stats:   {st.device_calls} device calls, "
+            f"{st.queries} queries ({st.hot_queries} hot, "
+            f"{st.warm_queries} warm), {st.padded_rows} padded rows",
+        ])
 
 
 class Session:
@@ -263,29 +427,46 @@ class QueryBuilder:
         return QueryBuilder(self._db, dataclasses.replace(self._logical, **changes))
 
     def newer_than(self, min_ts: int) -> "QueryBuilder":
+        """Recency clause: keep rows with ``updated_at >= min_ts``."""
         return self._with(min_ts=int(min_ts))
 
     def in_categories(self, categories) -> "QueryBuilder":
+        """Category clause: keep rows whose category id is in the set
+        (ids must be in [0, 32); validated here, where bad input enters)."""
         cats = tuple(sorted(set(int(c) for c in categories)))
         category_mask(cats)      # validate where the bad input enters
         return self._with(categories=cats)
 
     def limit(self, k: int) -> "QueryBuilder":
+        """LIMIT: return the top ``k`` qualifying rows per query."""
         return self._with(k=int(k))
 
     def using(self, engine: str) -> "QueryBuilder":
+        """Force an execution engine ("ref" | "pallas" | "sharded"),
+        overriding the planner's cost-based choice."""
         return self._with(engine=engine)
 
     def lower(self) -> LogicalPlan:
+        """The declarative LogicalPlan this chain lowers to (tenant/ACL
+        clauses already stamped from the session principal)."""
         return self._logical
 
     def plan(self) -> PhysicalPlan:
+        """Compile through the planner: engine + route + group key + cost."""
         return self._db.compile(self._logical)
 
     def explain(self) -> str:
+        """The compiled plan rendered SQL-EXPLAIN style (see docs/api.md
+        for the exact line format)."""
         return self.plan().explain()
 
     def run(self) -> QueryResult:
+        """Compile and execute; `QueryResult.cached` reports whether the
+        result came from the snapshot-exact session cache."""
         phys = self.plan()
+        rc = self._db.result_cache
+        hits0 = rc.hits if rc is not None else 0
         scores, slots, tiers = self._db.execute([phys])
-        return QueryResult(scores=scores, slots=slots, tiers=tiers, plan=phys)
+        cached = rc is not None and rc.hits > hits0
+        return QueryResult(scores=scores, slots=slots, tiers=tiers, plan=phys,
+                           cached=cached)

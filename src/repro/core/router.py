@@ -37,6 +37,21 @@ class RouteStats:
     cold_fetches: int = 0
 
 
+class TieredResult(tuple):
+    """The (scores, slots, tiers) triple `TieredRouter.query` returns, with
+    the planner's decisions attached as metadata: ``.engine`` is the engine
+    that actually ran ("ref" | "pallas" | "sharded") and ``.route`` the tier
+    route ("hot" | "hot+warm"). Callers that unpack three values keep
+    working; callers that need provenance no longer have to re-derive the
+    plan via a separate explain() call. Documented in docs/api.md."""
+
+    def __new__(cls, scores, slots, tiers, *, engine: str, route: str):
+        self = super().__new__(cls, (scores, slots, tiers))
+        self.engine = engine
+        self.route = route
+        return self
+
+
 class TieredRouter:
     def __init__(self, hot_cfg: StoreConfig, warm_cfg: StoreConfig, *,
                  hot_window_s: int, now_ts: int):
@@ -70,24 +85,32 @@ class TieredRouter:
 
     # -- query routing ---------------------------------------------------
     def query(self, q: jax.Array, pred: Predicate, k: int, *,
-              engine: str = "ref"):
+              engine: str | None = None) -> "TieredResult":
         """Compatibility shim over the front-door planner/executor (the
         routing rule itself now lives in repro.api.planner.choose_route):
         multi-constraint queries within the hot window stay hot-only;
-        long-tail similarity additionally probes the warm tier and merges."""
+        long-tail similarity additionally probes the warm tier and merges.
+
+        ``engine=None`` (the default) lets the planner choose; pass a name
+        to force one. The returned `TieredResult` unpacks as the usual
+        (scores, slots, tiers) triple and carries ``.engine`` / ``.route``
+        so callers can tell ref from pallas without a separate explain()."""
         # imported lazily: repro.api's package init imports this module
         from repro.api.executor import query_tiered
         from repro.api.plan import logical_from_predicate
-        from repro.api.planner import choose_route
+        from repro.api.planner import choose_engine, choose_route
 
         logical = logical_from_predicate(pred, k=k, engine=engine)
+        snap = self.hot.snapshot()
+        eng, _ = choose_engine(logical, n_rows=snap["emb"].shape[0])
         route, _ = choose_route(logical, hot_window_s=self.hot_window_s,
                                 now_ts=self.now_ts, warm_rows=self.warm.n_docs)
         self.stats.hot_queries += q.shape[0]
         if route == "hot+warm":
             self.stats.warm_queries += q.shape[0]
-        return query_tiered(self.hot.snapshot(), self.warm, q, pred, k,
-                            engine=engine, probe_warm=(route == "hot+warm"))
+        s, sl, tr = query_tiered(snap, self.warm, q, pred, k,
+                                 engine=eng, probe_warm=(route == "hot+warm"))
+        return TieredResult(s, sl, tr, engine=eng, route=route)
 
     def fetch_cold(self, doc_id: int):
         self.stats.cold_fetches += 1

@@ -135,6 +135,10 @@ class SplitStackClient:
         self._rng = np.random.default_rng(rng_seed)
         self._cursor = 0
         self._slot_of_doc: dict[int, int] = {}
+        # monotone write counter (bumped once per ingest/update/delete call):
+        # the front-door result cache keys warm-probing entries on it, so a
+        # warm-tier write exactly invalidates the results it could change.
+        self.commit_count = 0
         # host gap injected between the two write commits; models queue /
         # network / worker delay between the vector upsert and the metadata
         # upsert in a real deployment.
@@ -176,6 +180,7 @@ class SplitStackClient:
         self.stats.write_latencies_s.append(t2 - t0)
         for d in doc_ids:
             self._slot_of_doc.pop(int(d), None)
+        self.commit_count += 1
         return slot_list
 
     # -- writes: TWO separate commits -----------------------------------
@@ -202,6 +207,7 @@ class SplitStackClient:
         for i, d in enumerate(jax.device_get(batch.doc_id)):
             self._slot_of_doc[int(d)] = self._cursor + i
         self._cursor += m
+        self.commit_count += 1
 
     def update(self, doc_ids, new_emb, updated_at) -> None:
         slots = jnp.asarray([self._slot_of_doc[int(d)] for d in doc_ids], jnp.int32)
@@ -220,6 +226,7 @@ class SplitStackClient:
         self.cache.invalidate(np.asarray(slots))
         self.stats.inconsistency_windows_s.append(t2 - t1)
         self.stats.write_latencies_s.append(t2 - t0)
+        self.commit_count += 1
 
     # -- reads: vector search -> metadata fetch -> app-layer filter ------
     def _passes_filters(self, row: tuple, pred: Predicate, bug_active: bool) -> bool:

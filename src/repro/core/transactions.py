@@ -97,6 +97,10 @@ class TransactionLog:
         self._slot_of_doc: dict[int, int] = {}
         self._free_slots: list[int] = []      # tombstoned slots, LIFO recycled
         self.write_latencies_s: list[float] = []
+        # host mirror of the device commit_ts watermark: every commit bumps
+        # both, so (snapshot identity) == (commit_count value) without a
+        # device sync — the result cache keys on this.
+        self.commit_count = 0
 
     # -- reads ---------------------------------------------------------
     def snapshot(self) -> Store:
@@ -129,6 +133,7 @@ class TransactionLog:
         self.write_latencies_s.append(time.perf_counter() - t0)
         # single reference swap = the commit point
         self._store = new
+        self.commit_count += 1
         if n_recycled:
             del self._free_slots[len(self._free_slots) - n_recycled:]
         for s, d in zip(slot_list, jax.device_get(batch.doc_id)):
@@ -142,6 +147,7 @@ class TransactionLog:
         jax.block_until_ready(new["commit_ts"])
         self.write_latencies_s.append(time.perf_counter() - t0)
         self._store = new
+        self.commit_count += 1
 
     def delete(self, doc_ids) -> list[int]:
         """Tombstone the given docs. Returns the freed slots (one per unique
@@ -153,6 +159,7 @@ class TransactionLog:
         new = delete(self._store, jnp.asarray(slot_list, jnp.int32))
         jax.block_until_ready(new["commit_ts"])
         self._store = new
+        self.commit_count += 1
         for d in doc_ids:
             self._slot_of_doc.pop(int(d), None)
         # tombstoned slots return to the allocator (free-slot recycling)

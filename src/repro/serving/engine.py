@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.executor import run_grouped
+from repro.api.executor import CompiledShapes, run_grouped
 from repro.api.ragdb import RagDB
 from repro.core.store import Store
 from repro.core.tenancy import Principal, build_predicate
@@ -30,6 +30,9 @@ from repro.models import transformer as tfm
 
 @dataclasses.dataclass
 class Request:
+    """One user request: the authenticated principal, the query embedding,
+    the prompt, and the caller-visible predicate clauses (recency bound +
+    category list — tenant/ACL always come from the principal)."""
     principal: Principal
     query_emb: np.ndarray          # (D,) embedding of the user query
     prompt_tokens: np.ndarray      # (<=max_prompt,) int32
@@ -40,6 +43,8 @@ class Request:
 
 @dataclasses.dataclass
 class Response:
+    """Per-request serving output: retrieved-document provenance (slots,
+    scores, tiers), the generated tokens, and stage timings in ms."""
     doc_slots: np.ndarray          # (k,) retrieved doc slots (provenance);
                                    # each indexes the arena named by doc_tiers
     doc_scores: np.ndarray
@@ -51,7 +56,15 @@ class Response:
 
 
 class RAGEngine:
-    """Single-model, batched-request engine."""
+    """Single-model, batched-request engine.
+
+    Retrieval for a batch is predicate-group batched AND bucket-padded: the
+    B requests collapse into one device call per unique predicate group, and
+    each group's row count is padded to a power-of-two bucket so a varying
+    request mix reuses a small set of compiled program shapes (front-door
+    path: the RagDB's `shapes` cache; raw-store path: the engine's own).
+    `last_retrieval_device_calls` reports the grouped call count per batch.
+    """
 
     def __init__(self, store: Store | RagDB, cfg: tfm.TransformerConfig, params,
                  *, k: int = 4, max_prompt: int = 64, max_len: int = 128,
@@ -68,6 +81,7 @@ class RAGEngine:
         else:
             self.db = None
             self.store = store
+        self._shapes = CompiledShapes()    # raw-store path's bucketed shapes
         self.last_retrieval_device_calls = 0
         self.cfg = cfg
         self.params = params
@@ -135,6 +149,9 @@ class RAGEngine:
     # -- the serving step -------------------------------------------------
     def serve(self, requests: list[Request], *, greedy: bool = True,
               seed: int = 0) -> list[Response]:
+        """Serve a batch end to end: grouped+bucketed retrieval -> prompt
+        assembly -> batched prefill -> decode loop. Returns one `Response`
+        per request, in request order."""
         B = len(requests)
         t0 = time.perf_counter()
         # 1) retrieval: predicates are server-built, and the batch is
@@ -153,7 +170,8 @@ class RAGEngine:
                                      categories=r.categories)
                      for r in requests]
             scores, slots, n_calls = run_grouped(self.store, q, preds, self.k,
-                                                 engine=self.engine)
+                                                 engine=self.engine,
+                                                 shapes=self._shapes)
             tiers = np.zeros_like(slots)
             self.last_retrieval_device_calls = n_calls
         t1 = time.perf_counter()

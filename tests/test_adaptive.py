@@ -1,0 +1,340 @@
+"""The adaptive serving fast path (PR 2).
+
+Acceptance contracts:
+  * bucketed execution is a pure shape transform — results bit-identical to
+    exact-shape execution across every bucket boundary;
+  * the result cache is snapshot-exact — a hit is only possible against the
+    same (predicate group, query, commit counters), and any write bumps a
+    counter, so post-write queries recompute and match the uncached ref path
+    bit for bit;
+  * the planner's cost model picks the measured-cheapest engine and falls
+    back to the static thresholds when measurements are missing;
+  * `TieredRouter.query` surfaces the planner's engine/route choice in its
+    return metadata;
+  * explain() output follows the exact line format documented in docs/api.md.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CompiledShapes, LogicalPlan, RagDB
+from repro.api import executor as executor_mod
+from repro.api.plan import bucket_rows
+from repro.api.planner import CostModel, PlannerConfig, choose_engine
+from repro.core import Predicate, Principal, StoreConfig, unified_query_ref
+from repro.core.router import TieredResult
+from repro.data.corpus import DAY_S, CorpusConfig, make_corpus
+
+
+@pytest.fixture(scope="module")
+def db_stack():
+    ccfg = CorpusConfig(n_docs=1500, dim=16, n_tenants=4, n_categories=4)
+    db = RagDB(StoreConfig(capacity=2048, dim=16))
+    db.ingest(make_corpus(ccfg))
+    return db, ccfg
+
+
+# ---------------------------------------------------------------------------
+# bucketed batching
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", list(range(1, 10)) + [16, 17])
+def test_bucketed_bit_identical_across_boundaries(db_stack, rng, batch):
+    """Padding a group to its pow2 bucket must not perturb a single bit of
+    the real rows — checked on both sides of every small bucket boundary."""
+    db, ccfg = db_stack
+    snap = db.log.snapshot()
+    q = rng.standard_normal((batch, ccfg.dim)).astype(np.float32)
+    preds = [Predicate(tenant=1)] * batch
+    es, ei, _ = executor_mod.run_grouped(snap, q, preds, 5)           # exact
+    bs, bi, _ = executor_mod.run_grouped(snap, q, preds, 5,
+                                         shapes=CompiledShapes())    # bucketed
+    assert (es == bs).all() and (ei == bi).all()
+
+
+def test_bucketed_session_path_bit_identical(db_stack, rng):
+    """The front-door path (db.execute with its shape cache) returns exactly
+    what the raw ref call returns, for batch sizes needing padding."""
+    db, ccfg = db_stack
+    sess = db.session(Principal(tenant_id=2, group_bits=0xFFFFFFFF))
+    q = rng.standard_normal((5, ccfg.dim)).astype(np.float32)        # bucket 8
+    res = sess.search(q).limit(4).run()
+    qn = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-12)
+    s, sl = unified_query_ref(db.log.snapshot(), jnp.asarray(qn),
+                              res.plan.pred.as_array(), 4)
+    assert (np.asarray(sl) == res.slots).all()
+    assert (np.asarray(s) == res.scores).all()
+
+
+def test_shape_cache_buckets_collapse_batch_sizes(db_stack, rng):
+    """Every batch size in (2^(b-1), 2^b] maps to one resident shape."""
+    db, ccfg = db_stack
+    snap = db.log.snapshot()
+    shapes = CompiledShapes()
+    for b in (5, 6, 7, 8):                     # all land in bucket 8
+        q = rng.standard_normal((b, ccfg.dim)).astype(np.float32)
+        executor_mod.run_grouped(snap, q, [Predicate()] * b, 3, shapes=shapes)
+    assert len(shapes) == 1
+    assert (shapes.hits, shapes.misses) == (3, 1)
+
+
+def test_shape_cache_lru_eviction():
+    shapes = CompiledShapes(cap=2)
+    assert shapes.touch("ref", 4, 5) is False
+    assert shapes.touch("ref", 4, 5) is True
+    shapes.touch("ref", 8, 5)
+    shapes.touch("ref", 16, 5)                 # evicts bucket 4
+    assert shapes.touch("ref", 4, 5) is False  # re-entry counts as recompile
+    assert len(shapes) == 2
+
+
+def test_padded_rows_counted(db_stack, rng):
+    db, ccfg = db_stack
+    before = db.stats.padded_rows
+    sess = db.session(Principal(tenant_id=0, group_bits=0xFFFFFFFF))
+    q = rng.standard_normal((3, ccfg.dim)).astype(np.float32)        # bucket 4
+    sess.search(q).limit(2).run()
+    assert db.stats.padded_rows == before + 1
+
+
+# ---------------------------------------------------------------------------
+# snapshot-exact result cache
+# ---------------------------------------------------------------------------
+
+def _mini_db(rng, n=300, dim=8, capacity=512, **kwargs):
+    ccfg = CorpusConfig(n_docs=n, dim=dim, n_tenants=3, n_categories=4)
+    db = RagDB(StoreConfig(capacity=capacity, dim=dim), **kwargs)
+    db.ingest(make_corpus(ccfg))
+    return db, ccfg
+
+
+def test_result_cache_hits_same_snapshot(rng):
+    db, ccfg = _mini_db(rng)
+    sess = db.session(Principal(tenant_id=1, group_bits=0xFFFFFFFF))
+    q = rng.standard_normal(ccfg.dim).astype(np.float32)
+    r1 = sess.search(q).limit(4).run()
+    calls = db.stats.device_calls
+    r2 = sess.search(q).limit(4).run()
+    assert not r1.cached and r2.cached
+    assert db.stats.device_calls == calls          # hit did no device work
+    assert (r1.scores == r2.scores).all() and (r1.slots == r2.slots).all()
+    # a different query vector is a different key, never a false hit
+    r3 = sess.search(q + 1.0).limit(4).run()
+    assert not r3.cached
+
+
+def test_result_cache_invalidated_by_writes_bit_identical(rng):
+    """insert/delete bumps commit_count -> miss -> fresh results identical to
+    the uncached ref path (the satellite's acceptance contract)."""
+    from tests.test_core_store import make_batch
+    db, ccfg = _mini_db(rng)
+    sess = db.session(Principal(tenant_id=0, group_bits=0xFFFFFFFF))
+    q = rng.standard_normal(ccfg.dim).astype(np.float32)
+    run = lambda: sess.search(q).limit(5).run()
+    base = run()
+    assert run().cached
+    # INSERT: a new tenant-0 doc invalidates; the fresh result sees it
+    db.ingest(make_batch(rng, 1, ccfg.dim, tenant=0, start_id=10_000))
+    after_insert = run()
+    assert not after_insert.cached
+    # DELETE the current top hit: the cached entry must not resurface it
+    top = int(base.slots[0, 0])
+    top_doc = int(np.asarray(db.log.snapshot()["doc_id"])[top])
+    db.delete([top_doc])
+    after_delete = run()
+    assert not after_delete.cached
+    assert top not in after_delete.slots[0].tolist()
+    # bit-identity with the uncached ref path on the new snapshot
+    qn = np.atleast_2d(q)
+    qn = qn / np.maximum(np.linalg.norm(qn, axis=1, keepdims=True), 1e-12)
+    s, sl = unified_query_ref(db.log.snapshot(), jnp.asarray(qn),
+                              after_delete.plan.pred.as_array(), 5)
+    assert (np.asarray(sl) == after_delete.slots).all()
+    assert (np.asarray(s) == after_delete.scores).all()
+
+
+def test_result_cache_update_invalidates(rng):
+    db, ccfg = _mini_db(rng)
+    sess = db.session(Principal(tenant_id=1, group_bits=0xFFFFFFFF))
+    q = rng.standard_normal(ccfg.dim).astype(np.float32)
+    base = sess.search(q).limit(3).run()
+    top = int(base.slots[0, 0])
+    doc = int(np.asarray(db.log.snapshot()["doc_id"])[top])
+    db.update([doc], -q[None, :], [ccfg.now_ts])   # re-embed away from q
+    fresh = sess.search(q).limit(3).run()
+    assert not fresh.cached
+    assert fresh.slots[0, 0] != top
+
+
+def test_warm_writes_invalidate_only_warm_probing_plans(rng):
+    """hot+warm entries key on the warm commit counter; hot-only entries pin
+    it to -1 and survive warm-tier writes."""
+    ccfg = CorpusConfig(n_docs=400, dim=8, n_tenants=3)
+    scfg = StoreConfig(capacity=1024, dim=8)
+    db = RagDB(scfg, warm_cfg=scfg, hot_window_s=90 * DAY_S, now_ts=ccfg.now_ts)
+    corpus = make_corpus(ccfg)
+    db.ingest(corpus)
+    rng_q = np.random.default_rng(1)
+    q = rng_q.standard_normal(ccfg.dim).astype(np.float32)
+    admin = db.admin_session()
+    hot_only = lambda: (admin.search(q)
+                        .newer_than(ccfg.now_ts - 30 * DAY_S).limit(3).run())
+    merged = lambda: admin.search(q).limit(3).run()
+    assert hot_only().plan.route == "hot" and merged().plan.route == "hot+warm"
+    assert hot_only().cached and merged().cached
+    # delete one warm doc: warm commit_count bumps, hot commit_count doesn't
+    ts = np.asarray(corpus.updated_at)
+    warm_doc = int(np.asarray(corpus.doc_id)[np.argsort(ts)[0]])
+    assert db.router.warm.has_doc(warm_doc)
+    db.delete([warm_doc])
+    assert merged().cached is False       # warm-probing plan recomputes
+    assert hot_only().cached is True      # hot-only plan provably unaffected
+
+
+def test_result_cache_disabled(rng):
+    db, ccfg = _mini_db(rng, result_cache_size=0)
+    assert db.result_cache is None
+    sess = db.session(Principal(tenant_id=0, group_bits=0xFFFFFFFF))
+    q = rng.standard_normal(ccfg.dim).astype(np.float32)
+    assert not sess.search(q).limit(3).run().cached
+    assert not sess.search(q).limit(3).run().cached
+
+
+def test_cache_isolation_across_principals(rng):
+    """Two principals issuing the same vector never share an entry: the
+    group key carries the tenant/ACL clauses."""
+    db, ccfg = _mini_db(rng)
+    q = rng.standard_normal(ccfg.dim).astype(np.float32)
+    t0 = db.session(Principal(tenant_id=0, group_bits=0xFFFFFFFF))
+    t1 = db.session(Principal(tenant_id=1, group_bits=0xFFFFFFFF))
+    r0 = t0.search(q).limit(4).run()
+    r1 = t1.search(q).limit(4).run()
+    assert not r1.cached                  # different predicate group
+    tenant_of = np.asarray(db.log.snapshot()["tenant"])
+    assert (tenant_of[r0.slots[r0.slots >= 0]] == 0).all()
+    assert (tenant_of[r1.slots[r1.slots >= 0]] == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_picks_measured_cheapest():
+    cm = CostModel(curves=(("ref", ((1 << 10, 1.0), (1 << 20, 1000.0))),
+                           ("sharded", ((1 << 10, 8.0), (1 << 20, 80.0)))))
+    cfg = PlannerConfig(cost_model=cm)
+    eng, why = choose_engine(LogicalPlan(k=5), n_rows=1 << 20, cfg=cfg,
+                             has_mesh=True)
+    assert eng == "sharded" and "cost model" in why and "ref ~" in why
+    eng, _ = choose_engine(LogicalPlan(k=5), n_rows=1 << 10, cfg=cfg,
+                           has_mesh=True)
+    assert eng == "ref"
+
+
+def test_cost_model_falls_back_without_full_coverage():
+    """A candidate engine with no curve -> the static thresholds decide
+    (partial measurements must not silently bias the choice)."""
+    cm = CostModel(curves=(("ref", ((1 << 10, 1.0),)),))
+    cfg = PlannerConfig(cost_model=cm, shard_min_rows=1 << 20)
+    eng, why = choose_engine(LogicalPlan(k=5), n_rows=1 << 21, cfg=cfg,
+                             has_mesh=True)
+    assert eng == "sharded" and "cost model" not in why
+    eng, _ = choose_engine(LogicalPlan(k=5), n_rows=1 << 12, cfg=cfg,
+                           has_mesh=True)
+    assert eng == "ref"
+
+
+def test_cost_model_interpolation_and_single_point():
+    cm = CostModel(curves=(("ref", ((1000, 1.0), (4000, 4.0))),))
+    assert cm.estimate_ms("ref", 1000) == pytest.approx(1.0)
+    assert cm.estimate_ms("ref", 2000) == pytest.approx(2.0)    # log-log interp
+    assert cm.estimate_ms("ref", 8000) == pytest.approx(8.0)    # extrapolation
+    one = CostModel(curves=(("ref", ((1000, 2.0),)),))
+    assert one.estimate_ms("ref", 3000) == pytest.approx(6.0)   # row-linear
+    assert cm.estimate_ms("pallas", 1000) is None
+
+
+def test_cost_model_from_bench_roundtrip(tmp_path):
+    import json
+    path = tmp_path / "bench_latency.json"
+    path.write_text(json.dumps({
+        "cost_model": {"engines": {"ref": [[1024, 0.5], [4096, 2.0]]},
+                       "warm_probe_ms": 3.5}}))
+    cm = CostModel.from_bench(str(path))
+    assert cm is not None
+    assert cm.estimate_ms("ref", 1024) == pytest.approx(0.5)
+    assert cm.warm_probe_ms == pytest.approx(3.5)
+    assert CostModel.from_bench(str(tmp_path / "missing.json")) is None
+    cfg = PlannerConfig.with_measured_costs(str(path))
+    assert cfg.cost_model == cm
+
+
+def test_cost_estimate_lands_in_plan_and_explain(rng):
+    db, ccfg = _mini_db(rng)
+    cm = CostModel(curves=(("ref", ((256, 0.5), (4096, 4.0))),),
+                   warm_probe_ms=2.0)
+    db.planner_cfg = PlannerConfig(cost_model=cm)
+    sess = db.session(Principal(tenant_id=0, group_bits=0xFFFFFFFF))
+    plan = sess.search(rng.standard_normal(ccfg.dim).astype(np.float32)).plan()
+    assert plan.cost_source == "measured" and plan.est_cost_ms is not None
+    assert "ms/query est (measured curves)" in plan.explain()
+
+
+# ---------------------------------------------------------------------------
+# explain() formats (mirrors docs/api.md)
+# ---------------------------------------------------------------------------
+
+PLAN_EXPLAIN_FIELDS = ["predicate:", "engine:", "route:", "batching:",
+                       "bucket:", "cost:"]
+DB_EXPLAIN_FIELDS = ["planner:", "shape cache:", "result cache:",
+                     "exec stats:"]
+
+
+def test_plan_explain_matches_documented_format(db_stack, rng):
+    db, ccfg = db_stack
+    sess = db.session(Principal(tenant_id=1, group_bits=0xFFFFFFFF))
+    text = sess.search(rng.standard_normal(ccfg.dim).astype(np.float32)) \
+               .limit(4).explain()
+    lines = text.splitlines()
+    assert lines[0].startswith("PhysicalPlan  top-4 over ")
+    for line, field in zip(lines[1:], PLAN_EXPLAIN_FIELDS):
+        assert line.strip().startswith(field), (line, field)
+    assert "pow2 shape reuse" in text
+
+
+def test_db_explain_matches_documented_format(rng):
+    db, ccfg = _mini_db(rng)
+    sess = db.session(Principal(tenant_id=0, group_bits=0xFFFFFFFF))
+    q = rng.standard_normal(ccfg.dim).astype(np.float32)
+    sess.search(q).limit(3).run()
+    sess.search(q).limit(3).run()
+    text = db.explain()
+    lines = text.splitlines()
+    assert lines[0].startswith("RagDB  ")
+    for line, field in zip(lines[1:], DB_EXPLAIN_FIELDS):
+        assert line.strip().startswith(field), (line, field)
+    assert "1 hits" in text            # the second run() hit the result cache
+
+
+# ---------------------------------------------------------------------------
+# TieredRouter.query metadata (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_router_query_surfaces_engine_and_route(rng):
+    ccfg = CorpusConfig(n_docs=500, dim=8, n_tenants=3)
+    scfg = StoreConfig(capacity=1024, dim=8)
+    from repro.core.router import TieredRouter
+    router = TieredRouter(scfg, scfg, hot_window_s=90 * DAY_S,
+                          now_ts=ccfg.now_ts)
+    router.ingest(make_corpus(ccfg))
+    q = jnp.asarray(rng.standard_normal((2, ccfg.dim)).astype(np.float32))
+    res = router.query(q, Predicate(), 4)
+    assert isinstance(res, TieredResult)
+    assert res.engine == "ref"            # planner's choice on a CPU rig
+    assert res.route == "hot+warm"
+    scores, slots, tiers = res            # 3-tuple unpacking still works
+    assert scores.shape == slots.shape == tiers.shape == (2, 4)
+    res2 = router.query(q, Predicate(min_ts=ccfg.now_ts - 10 * DAY_S), 4)
+    assert res2.route == "hot"
+    forced = router.query(q, Predicate(), 4, engine="ref")
+    assert forced.engine == "ref"

@@ -1,0 +1,32 @@
+"""Doctest smoke for the front-door API and serving engine docstrings.
+
+Every ``>>>`` example in these modules is executed here, so the runnable
+examples referenced from docs/api.md cannot rot. (Equivalent to
+``pytest --doctest-modules src/repro/api`` but explicit about the module
+list, so adding a slow-to-import module elsewhere can't bloat tier-1.)
+"""
+import doctest
+
+import pytest
+
+import repro.api.executor
+import repro.api.plan
+import repro.api.planner
+import repro.api.ragdb
+import repro.serving.engine
+
+MODULES = [
+    repro.api.plan,
+    repro.api.planner,
+    repro.api.executor,
+    repro.api.ragdb,
+    repro.serving.engine,
+]
+
+
+@pytest.mark.parametrize("mod", MODULES, ids=lambda m: m.__name__)
+def test_module_doctests(mod):
+    result = doctest.testmod(mod, verbose=False)
+    assert result.attempted > 0 or mod is repro.serving.engine, \
+        f"{mod.__name__} lost its doctest examples"
+    assert result.failed == 0, f"{result.failed} doctest failure(s) in {mod.__name__}"

@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Docs link integrity: every relative markdown link in README.md, docs/,
+and the root *.md files must point at an existing file, and every #anchor
+must match a heading in the target (GitHub slug rules). External http(s)
+links are not fetched. Exit 1 on any broken link (the CI docs job runs
+this)."""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def md_files() -> list[str]:
+    out = [os.path.join(ROOT, f) for f in os.listdir(ROOT) if f.endswith(".md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        out += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                if f.endswith(".md")]
+    return sorted(out)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces -> dashes, drop punctuation."""
+    heading = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    with open(path) as f:
+        return {github_slug(h) for h in HEADING_RE.findall(f.read())}
+
+
+def check(path: str) -> list[str]:
+    errors = []
+    with open(path) as f:
+        text = f.read()
+    for link in LINK_RE.findall(text):
+        if link.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, anchor = link.partition("#")
+        target_path = (os.path.normpath(
+            os.path.join(os.path.dirname(path), target)) if target else path)
+        rel = os.path.relpath(path, ROOT)
+        if not os.path.exists(target_path):
+            errors.append(f"{rel}: broken link -> {link}")
+        elif anchor and target_path.endswith(".md") \
+                and github_slug(anchor) not in anchors_of(target_path):
+            errors.append(f"{rel}: missing anchor -> {link}")
+    return errors
+
+
+def main() -> int:
+    errors = [e for p in md_files() for e in check(p)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    checked = len(md_files())
+    print(f"checked {checked} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
