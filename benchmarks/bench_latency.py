@@ -21,9 +21,16 @@ Two adaptive-serving sections (PR 2) close the loop:
     (bucketed + grouped, cache bypassed vs cache hit), plus a cold
     varying-batch-size stream showing bucketed batching amortizing program
     compilation (exact shapes recompile per distinct size; buckets don't).
+
+The `ivf` section (PR 3) measures the sub-linear route: p50 vs nprobe at
+several corpus sizes with recall@10 against the exact scan, the planner's
+engine choice for an unconstrained group at each size, and the candidate-row
+fraction from explain(). Its default-nprobe curve joins the `cost_model`
+engines, so the planner prices the pruned scan from measurements too.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -36,6 +43,7 @@ from benchmarks.common import (PAPER, QUERY_TYPES, SESSION_QUERIES,
 from repro.api import RagDB
 from repro.api.executor import CompiledShapes, run_grouped
 from repro.core import Predicate, Principal, StoreConfig, unified_query
+from repro.core.ivf import ivf_query
 from repro.data.corpus import DAY_S, CorpusConfig, make_corpus, make_queries
 
 
@@ -88,7 +96,99 @@ def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
                warm_probe_ms=table["pure_similarity"]["stack_a"]["p50"]),
            "adaptive_serving": run_adaptive_serving(
                iters=max(iters // 4, 20), engine=engine, k=k)}
+    out["ivf"] = run_ivf_curves(iters=max(iters // 4, 20))
+    # the pruned scan joins the measured cost model: the next process's
+    # planner prices ivf-vs-ref from these curves
+    out["cost_model"]["engines"]["ivf"] = out["ivf"]["cost_curve"]
     save_result("bench_latency", out)
+    return out
+
+
+def run_ivf_curves(*, iters: int, k: int = 10, n_queries: int = 32,
+                   sizes=(5_000, 20_000, 50_000),
+                   nprobes=(2, 4, 8, 16)) -> dict:
+    """The sub-linear route, measured: p50 vs nprobe at several corpus sizes
+    with recall@10 against the exact ref scan over the same session path,
+    plus the planner's own choice for an unconstrained predicate group.
+
+    The default-nprobe points become the planner's "ivf" cost curve — and
+    the 50k row records the PR's acceptance bar: planner picks ivf, p50
+    >= 3x faster than exact at recall@10 >= 0.95, candidate rows < 25% of
+    the arena."""
+    out = {"k": k, "n_queries": n_queries, "sizes": {}, "cost_curve": []}
+    for n_docs in sizes:
+        db, _, (ccfg, scfg) = build_ragdb(CorpusConfig(n_docs=n_docs),
+                                          result_cache_size=0)
+        index = db.build_index()
+        admin = db.admin_session()
+        arena = scfg.capacity
+        qs = [np.asarray(q)[0] for q in make_queries(ccfg, n_queries, batch=1,
+                                                     seed=3)]
+        exact = [admin.search(q).limit(k).using("ref").run().slots[0]
+                 for q in qs]
+        qi = [0]
+
+        def ref_call():
+            admin.search(qs[qi[0] % n_queries]).limit(k).using("ref").run()
+            qi[0] += 1
+
+        p50_ref = percentiles(timeit(ref_call, iters=iters))["p50"]
+        plan = admin.search(qs[0]).limit(k).plan()
+        row = {"arena_rows": arena, "n_docs": n_docs,
+               "index": {"n_clusters": index.n_clusters,
+                         "cluster_cap": index.cluster_cap,
+                         "overflow": len(index.overflow)},
+               "ref_p50_ms": p50_ref, "nprobe": {},
+               "planner_engine": plan.engine,
+               "planner_reason": plan.engine_reason,
+               "explain": plan.explain()}
+        base_cfg = db.planner_cfg
+        for nprobe in nprobes:
+            db.planner_cfg = dataclasses.replace(base_cfg, ivf_nprobe=nprobe)
+            hits = 0
+            rows0 = db.stats.rows_scanned
+            for i, q in enumerate(qs):
+                res = admin.search(q).limit(k).using("ivf").run()
+                hits += len(set(res.slots[0].tolist())
+                            & set(exact[i].tolist()))
+            recall = hits / (k * n_queries)
+            cand_frac = (db.stats.rows_scanned - rows0) / (n_queries * arena)
+            qi[0] = 0
+
+            def ivf_call():
+                admin.search(qs[qi[0] % n_queries]).limit(k).using("ivf").run()
+                qi[0] += 1
+
+            p50 = percentiles(timeit(ivf_call, iters=iters))["p50"]
+            row["nprobe"][nprobe] = {
+                "p50_ms": p50, "recall_at_10": recall,
+                "candidate_frac_of_arena": cand_frac,
+                "speedup_vs_ref_p50": p50_ref / max(p50, 1e-9)}
+            print(f"ivf: N={n_docs:6d} nprobe={nprobe:3d}  "
+                  f"p50={p50:6.2f}ms (ref {p50_ref:6.2f}ms, "
+                  f"{p50_ref / max(p50, 1e-9):4.1f}x)  recall@10={recall:.3f}  "
+                  f"scan={cand_frac:5.1%} of arena")
+        db.planner_cfg = base_cfg
+        # the cost-model point is measured RAW (probe + fused scan on the
+        # snapshot), matching how run_engine_curves times the other engines
+        # — mixing session-path and device-call timings in one CostModel
+        # would bias the planner near the crossover
+        snap = db.log.snapshot()
+        pred = Predicate()
+        qi[0] = 0
+
+        def raw_ivf():
+            s, _ = ivf_query(snap, index, jnp.asarray(qs[qi[0] % n_queries][None, :]),
+                             pred, k, nprobe=index.cfg.nprobe)
+            jax.block_until_ready(s)
+            qi[0] += 1
+
+        raw_p50 = percentiles(timeit(raw_ivf, iters=iters))["p50"]
+        row["raw_p50_ms"] = raw_p50
+        out["cost_curve"].append([arena, raw_p50])
+        out["sizes"][str(n_docs)] = row
+        print(f"ivf: N={n_docs} planner chose {plan.engine!r} "
+              f"({plan.engine_reason})")
     return out
 
 

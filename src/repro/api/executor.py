@@ -44,6 +44,9 @@ class ExecStats:
     hot_queries: int = 0
     warm_queries: int = 0
     padded_rows: int = 0          # bucket-padding rows added across calls
+    rows_scanned: int = 0         # hot-tier arena rows scored across calls:
+                                  # arena N per exact scan, candidate rows
+                                  # per ivf probe — the auditable savings
 
 
 class CompiledShapes:
@@ -102,19 +105,61 @@ def _pad_rows(q: np.ndarray, bucket: int) -> np.ndarray:
 
 
 def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
-              engine: str, sharded_fn=None):
-    """One retrieval device program. `sharded_fn` is the cached
-    make_sharded_query callable when engine == 'sharded'."""
+              engine: str, sharded_fn=None, ivf=None, nprobe=None,
+              n_valid: int | None = None):
+    """One retrieval device program. Returns (scores, slots, rows_scanned)
+    where rows_scanned is the arena rows this program scored — the full
+    arena for the exact engines, the probed candidate set for ivf.
+
+    `sharded_fn` is the cached make_sharded_query callable when engine ==
+    'sharded'; `ivf`/`nprobe` are the IVFIndex and probe depth when engine
+    == 'ivf'; `n_valid` is the real row count when q is bucket-padded (the
+    probe union must come from real rows — zero padding rows would drag
+    arbitrary clusters into the union)."""
+    n_arena = store["emb"].shape[0]
     if engine == "sharded":
         if sharded_fn is None:
             raise ValueError("engine='sharded' requires a mesh-built RagDB")
-        return sharded_fn(store, q, pred.as_array())
-    return unified_query(store, q, pred, k, engine=engine)
+        s, sl = sharded_fn(store, q, pred.as_array())
+        return s, sl, n_arena
+    if engine == "ivf":
+        if ivf is None:
+            raise ValueError("engine='ivf' requires a built index — "
+                             "call RagDB.build_index() first")
+        from repro.kernels.ivf_probe.ops import ivf_probe
+        nv = q.shape[0] if n_valid is None else n_valid
+        exact = "pallas" if jax.default_backend() == "tpu" else "ref"
+        if (pred, k) in ivf.starved:
+            # learned: the WHOLE arena can't fill k for this predicate —
+            # probing first would be pure waste (memo clears on any write)
+            s, sl = unified_query(store, q, pred, k, engine=exact)
+            return s, sl, n_arena
+        clusters, _, rows = ivf.probe(np.asarray(q[:nv]),
+                                      nprobe or ivf.cfg.nprobe)
+        dev = ivf.device_arrays()
+        s, sl = ivf_probe(q, store["emb"], store["tenant"],
+                          store["updated_at"], store["category"],
+                          store["acl"], dev["members"], dev["overflow"],
+                          clusters, pred.as_array(), k)
+        # completeness net: a pruned scan can under-fill the k-list when
+        # qualifying rows sit outside the probed clusters (e.g. a tight
+        # recency bound, or a forced .using("ivf") on a selective
+        # predicate). An under-filled row falls back to ONE exact rescan —
+        # completeness beats speed, and the extra arena scan shows up in
+        # rows_scanned so the audit trail stays honest.
+        if bool((np.asarray(sl[:nv]) < 0).any()):
+            s, sl = unified_query(store, q, pred, k, engine=exact)
+            if bool((np.asarray(sl[:nv]) < 0).any()):
+                ivf.starved.add((pred, k))
+            return s, sl, rows + n_arena
+        return s, sl, rows
+    s, sl = unified_query(store, q, pred, k, engine=engine)
+    return s, sl, n_arena
 
 
 def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
-                engine: str = "ref", *, sharded_fn=None,
-                stats: ExecStats | None = None,
+                engine: str = "ref", *, sharded_fn=None, ivf=None,
+                nprobe=None, stats: ExecStats | None = None,
                 shapes: CompiledShapes | None = None):
     """Predicate-group batched retrieval over one store.
 
@@ -139,9 +184,12 @@ def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
             if stats is not None:
                 stats.padded_rows += bucket - n_valid
             q_g = _pad_rows(q_g, bucket)
-        s, sl = _dispatch(store, jnp.asarray(q_g), pred, k, engine, sharded_fn)
+        s, sl, rows = _dispatch(store, jnp.asarray(q_g), pred, k, engine,
+                                sharded_fn, ivf, nprobe, n_valid)
         s, sl = np.asarray(s), np.asarray(sl)
         scores[idxs], slots[idxs] = s[:n_valid], sl[:n_valid]
+        if stats is not None:
+            stats.rows_scanned += rows
     if stats is not None:
         stats.device_calls += len(groups)
         stats.queries += B
@@ -170,32 +218,36 @@ def merge_tiers(hs, hi, ws, wi, k: int):
 
 def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
                  k: int, *, engine: str = "ref", probe_warm: bool = False,
-                 sharded_fn=None, stats: ExecStats | None = None,
+                 sharded_fn=None, ivf=None, nprobe=None,
+                 stats: ExecStats | None = None,
                  n_valid: int | None = None):
     """Single-predicate tiered retrieval (TieredRouter.query's engine room).
 
     ``n_valid`` is the count of real query rows when the caller padded q to
     a bucket — only the hot device dispatch needs the bucketed shape; stats
-    count logical queries, and the host-side warm probe sees the UNPADDED
-    rows (a padding row's candidates rarely pass a constrained predicate
-    and would trigger the warm client's under-fill retries for nothing).
-    Returns (scores, slots, tiers) numpy arrays of q's full row count
-    without a warm probe, and of ``n_valid`` rows with one; callers slice
-    ``[:n_valid]``, which is exact either way."""
+    count logical queries, and the warm probe sees the UNPADDED rows (a
+    padding row's probe is pure waste). Returns (scores, slots, tiers)
+    numpy arrays of q's full row count without a warm probe, and of
+    ``n_valid`` rows with one; callers slice ``[:n_valid]``, which is exact
+    either way."""
     n_logical = q.shape[0] if n_valid is None else n_valid
-    hs, hi = _dispatch(hot_store, q, pred, k, engine, sharded_fn)
+    hs, hi, rows = _dispatch(hot_store, q, pred, k, engine, sharded_fn,
+                             ivf, nprobe, n_logical)
     hs, hi = jax.device_get((hs, hi))
     if stats is not None:
         stats.device_calls += 1
         stats.queries += n_logical
         stats.hot_queries += n_logical
+        stats.rows_scanned += rows
     if not probe_warm:
         return hs, hi, np.full_like(hi, TIER_HOT)
-    # the warm client's round trips (vector scan + metadata fetch, retries
-    # included) are device programs too — count them, or device_calls would
-    # under-report exactly when the expensive route runs
+    # the warm client's round trips are device programs too — count them, or
+    # device_calls would under-report exactly when the expensive route runs.
+    # The lowered predicate is PUSHED DOWN into the warm store: it filters
+    # server-side inside the scan instead of post-filtering host-side, so
+    # the probe is one round trip with no under-fill retries.
     rt0 = warm.stats.round_trips
-    ws, wi = warm.query(q[:n_logical], pred, k)
+    ws, wi = warm.query(q[:n_logical], pred, k, pushdown=True)
     if stats is not None:
         stats.device_calls += warm.stats.round_trips - rt0
         stats.warm_queries += n_logical
@@ -204,10 +256,11 @@ def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
 
 def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                   sharded_fn=None, stats: ExecStats | None = None,
-                  shapes: CompiledShapes | None = None):
+                  shapes: CompiledShapes | None = None, index=None):
     """Batched execution of compiled plans: group by `group_key`, one hot
     device call per group (padded to its pow2 bucket when ``shapes`` is
-    given), warm probe + merge for 'hot+warm' groups.
+    given), warm probe + merge for 'hot+warm' groups. ``index`` is the
+    RagDB's IVFIndex, consumed by groups whose plan chose engine 'ivf'.
 
     Every plan must carry its query rows (`logical.q`, shape (B_i, D)).
     Returns (scores (B, k), slots (B, k), tiers (B, k)) with B = total query
@@ -250,7 +303,8 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
         s, sl, tr = query_tiered(hot_store, warm, jnp.asarray(q_g), plan.pred,
                                  k, engine=plan.engine,
                                  probe_warm=(plan.route == "hot+warm"),
-                                 sharded_fn=sharded_fn, stats=stats,
+                                 sharded_fn=sharded_fn, ivf=index,
+                                 nprobe=plan.nprobe, stats=stats,
                                  n_valid=n_valid)
         scores[idxs], slots[idxs], tiers[idxs] = (s[:n_valid], sl[:n_valid],
                                                   tr[:n_valid])

@@ -96,7 +96,7 @@ class PhysicalPlan:
     """How the engine will answer it. Produced only by planner.compile_plan."""
     logical: LogicalPlan
     pred: Predicate                   # lowered clause set (the kernel contract)
-    engine: str                       # "ref" | "pallas" | "sharded"
+    engine: str                       # "ref" | "pallas" | "sharded" | "ivf"
     engine_reason: str
     route: str                        # "hot" | "hot+warm"
     route_reason: str
@@ -104,6 +104,9 @@ class PhysicalPlan:
     est_cost_ms: float | None = None  # cost-model estimate for the chosen
                                       # engine at n_rows (None = no model)
     cost_source: str = "static-thresholds"   # "measured" | "static-thresholds"
+    nprobe: int | None = None         # ivf engine: clusters probed per query
+    ivf_est: tuple | None = None      # ivf engine: (n_clusters, cluster_cap,
+                                      # est candidate rows scanned per probe)
 
     @property
     def group_key(self) -> tuple:
@@ -112,8 +115,9 @@ class PhysicalPlan:
         route is part of the key: two plans can lower to the same predicate
         (e.g. in_categories(range(32)) == no category clause) yet route
         differently, and grouping them would apply one plan's tiers to the
-        other's results."""
-        return (self.pred, self.logical.k, self.engine, self.route)
+        other's results. ``nprobe`` rides along so probe depths never mix
+        inside one ivf group."""
+        return (self.pred, self.logical.k, self.engine, self.route, self.nprobe)
 
     def explain(self) -> str:
         lp = self.logical
@@ -135,6 +139,15 @@ class PhysicalPlan:
             f"PhysicalPlan  top-{lp.k} over {self.n_rows} hot-tier rows",
             f"  predicate: {' AND '.join(clauses)}",
             f"  engine:    {self.engine:8s} ({self.engine_reason})",
+        ]
+        if self.engine == "ivf" and self.ivf_est is not None:
+            n_clusters, cap, est = self.ivf_est
+            pct = 100.0 * est / max(self.n_rows, 1)
+            lines.append(
+                f"  ivf:       nprobe={self.nprobe} of {n_clusters} clusters "
+                f"(cap {cap}) -> <={est} candidate rows of {self.n_rows} "
+                f"({pct:.1f}% of arena)")
+        lines += [
             f"  route:     {self.route:8s} ({self.route_reason})",
             f"  batching:  predicate-group key {self.group_key!r}",
             f"  bucket:    {rows} query rows -> {bucket_rows(rows)} (pow2 shape reuse)",

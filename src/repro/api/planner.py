@@ -7,17 +7,26 @@ otherwise:
   * with a `CostModel` loaded into `PlannerConfig` (fitted from
     ``results/bench_latency.json`` by ``benchmarks/bench_latency.py``), the
     planner estimates per-query latency for every *available* engine (ref
-    always; pallas on a TPU backend; sharded with a device mesh) and picks
-    the cheapest — the reason string carries every estimate, so the choice
-    is auditable;
+    always; pallas on a TPU backend; sharded with a device mesh; ivf when
+    the RagDB carries a built index) and picks the cheapest — the reason
+    string carries every estimate, so the choice is auditable;
   * without measurements (or when a candidate engine has no curve) the old
     static rules apply, first match wins:
       1. the builder's explicit `.using(engine)` hint;
-      2. "sharded"  if the RagDB was built with a device mesh and the hot
+      2. "ivf"      if the RagDB carries an index and the arena is at least
+         `ivf_min_rows` (pruned scan: p50 stops scaling with corpus size);
+      3. "sharded"  if the RagDB was built with a device mesh and the hot
          arena is at least `shard_min_rows`;
-      3. "pallas"   on a TPU backend once the arena crosses `pallas_min_rows`
+      4. "pallas"   on a TPU backend once the arena crosses `pallas_min_rows`
          (the fused filtered_topk kernel amortizes its launch there);
-      4. "ref"      otherwise (pure-jnp reference; the only engine on CPU).
+      5. "ref"      otherwise (pure-jnp reference; the only engine on CPU).
+
+  Selectivity guard: a pruned scan scores at most nprobe clusters' rows, so
+  a highly selective predicate (tenant / category / ACL clause) can
+  under-fill the k-list even when qualifying rows exist elsewhere in the
+  arena. Those plans fall back to an exact engine and the reason string
+  says so — completeness beats speed, the same priority order as tier
+  routing.
 
 Tier routing — the paper's §7.3 invariant, previously buried inside
 `TieredRouter.query`:
@@ -38,8 +47,9 @@ import math
 import os
 
 import jax
+import numpy as np
 
-from repro.api.plan import LogicalPlan, PhysicalPlan
+from repro.api.plan import ALL_BITS, ANY_TENANT, LogicalPlan, PhysicalPlan
 
 #: default location bench_latency writes its measurements to (cwd-relative,
 #: i.e. resolved from the repo root where benchmarks are run).
@@ -131,6 +141,8 @@ class PlannerConfig:
     """
     pallas_min_rows: int = 1 << 15    # fused-kernel launch amortization point
     shard_min_rows: int = 1 << 20     # below this a single device wins
+    ivf_min_rows: int = 1 << 12       # below this the exact scan is trivial
+    ivf_nprobe: int | None = None     # probe depth; None = the index default
     cost_model: CostModel | None = None
 
     @classmethod
@@ -141,24 +153,51 @@ class PlannerConfig:
         return cls(cost_model=CostModel.from_bench(path), **kwargs)
 
 
-def _candidate_engines(has_mesh: bool) -> list[str]:
+def _candidate_engines(has_mesh: bool, has_index: bool = False) -> list[str]:
     """Engines the current rig can actually run (ref always; pallas needs a
-    TPU backend; sharded needs a mesh-built RagDB)."""
+    TPU backend; sharded needs a mesh-built RagDB; ivf needs a built
+    index)."""
     cands = ["ref"]
     if jax.default_backend() == "tpu":
         cands.append("pallas")
     if has_mesh:
         cands.append("sharded")
+    if has_index:
+        cands.append("ivf")
     return cands
+
+
+def ivf_blocked_reason(logical: LogicalPlan) -> str | None:
+    """Why the planner must not route this plan through the pruned scan, or
+    None when ivf is admissible. The pruned scan only scores nprobe
+    clusters' rows, so a selective predicate can under-fill the k-list even
+    though qualifying rows exist outside the probed clusters — exactness
+    requires the exact engines there. The check runs on the LOWERED
+    predicate, so a no-op clause (e.g. in_categories(range(32)), which
+    lowers to the pass-all mask) doesn't forfeit the pruned scan. Recency
+    alone is admissible: the hot arena covers the bound by tier placement,
+    and a tight bound that still under-fills is completed by the executor's
+    exact-rescan net (see executor._dispatch)."""
+    pred = logical.predicate()
+    if pred.tenant != ANY_TENANT:
+        return "selective predicate (tenant clause) could under-fill the pruned scan"
+    if pred.cat_mask != ALL_BITS:
+        return "selective predicate (category clause) could under-fill the pruned scan"
+    if pred.acl_bits != ALL_BITS:
+        return "selective predicate (ACL clause) could under-fill the pruned scan"
+    return None
 
 
 def choose_engine(logical: LogicalPlan, *, n_rows: int,
                   cfg: PlannerConfig = PlannerConfig(),
-                  has_mesh: bool = False) -> tuple[str, str]:
+                  has_mesh: bool = False,
+                  has_index: bool = False) -> tuple[str, str]:
     """Pick the execution engine and an auditable reason string.
 
     An explicit ``.using()`` hint always wins; then the cost model (if every
-    candidate engine has a measured curve); then the static thresholds.
+    candidate engine has a measured curve); then the static thresholds. The
+    selectivity guard removes "ivf" from the candidates for constrained
+    plans (see `ivf_blocked_reason`) — the reason string records the skip.
 
     >>> eng, why = choose_engine(LogicalPlan(k=5), n_rows=512)
     >>> eng
@@ -172,22 +211,38 @@ def choose_engine(logical: LogicalPlan, *, n_rows: int,
     >>> choose_engine(LogicalPlan(k=5), n_rows=1 << 10, cfg=cfg,
     ...               has_mesh=True)[0]
     'ref'
+    >>> choose_engine(LogicalPlan(k=5), n_rows=1 << 16, has_index=True)[0]
+    'ivf'
+    >>> eng, why = choose_engine(LogicalPlan(tenant=3, k=5), n_rows=1 << 16,
+    ...                          has_index=True)
+    >>> eng, "ivf skipped" in why
+    ('ref', True)
     """
     if logical.engine is not None:
         return logical.engine, "caller hint (.using())"
-    cands = _candidate_engines(has_mesh)
+    cands = _candidate_engines(has_mesh, has_index)
+    note = ""
+    if "ivf" in cands:
+        blocked = ivf_blocked_reason(logical)
+        if blocked is not None:
+            cands.remove("ivf")
+            note = f"; ivf skipped: {blocked}"
     cm = cfg.cost_model
     if cm is not None:
         ests = {e: cm.estimate_ms(e, n_rows) for e in cands}
         if all(v is not None for v in ests.values()):
             best = min(ests, key=lambda e: ests[e])
             detail = ", ".join(f"{e} ~{ests[e]:.2f}ms" for e in cands)
-            return best, f"cost model: {detail}"
+            return best, f"cost model: {detail}{note}"
+    if "ivf" in cands and n_rows >= cfg.ivf_min_rows:
+        return "ivf", f"index present and {n_rows} rows >= {cfg.ivf_min_rows}"
     if has_mesh and n_rows >= cfg.shard_min_rows:
-        return "sharded", f"mesh present and {n_rows} rows >= {cfg.shard_min_rows}"
+        return "sharded", (f"mesh present and {n_rows} rows >= "
+                           f"{cfg.shard_min_rows}{note}")
     if jax.default_backend() == "tpu" and n_rows >= cfg.pallas_min_rows:
-        return "pallas", f"tpu backend and {n_rows} rows >= {cfg.pallas_min_rows}"
-    return "ref", f"{jax.default_backend()} backend, {n_rows} rows"
+        return "pallas", (f"tpu backend and {n_rows} rows >= "
+                          f"{cfg.pallas_min_rows}{note}")
+    return "ref", f"{jax.default_backend()} backend, {n_rows} rows{note}"
 
 
 def choose_route(logical: LogicalPlan, *, hot_window_s: int, now_ts: int,
@@ -221,20 +276,33 @@ def choose_route(logical: LogicalPlan, *, hot_window_s: int, now_ts: int,
 def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
                  now_ts: int, warm_rows: int,
                  cfg: PlannerConfig = PlannerConfig(),
-                 has_mesh: bool = False) -> PhysicalPlan:
+                 has_mesh: bool = False, index=None) -> PhysicalPlan:
     """Compile WHAT (LogicalPlan) into HOW (PhysicalPlan): engine + route +
     the predicate-group batching key, with the cost estimate attached so
-    ``explain()`` can render it."""
+    ``explain()`` can render it. ``index`` is the RagDB's `IVFIndex` (or
+    None): its presence adds "ivf" to the candidate engines, and ivf plans
+    carry nprobe + the candidate-row estimate for explain()."""
     engine, engine_reason = choose_engine(logical, n_rows=n_rows, cfg=cfg,
-                                          has_mesh=has_mesh)
+                                          has_mesh=has_mesh,
+                                          has_index=index is not None)
     route, route_reason = choose_route(logical, hot_window_s=hot_window_s,
                                        now_ts=now_ts, warm_rows=warm_rows,
                                        cost_model=cfg.cost_model)
     est = (cfg.cost_model.estimate_ms(engine, n_rows)
            if cfg.cost_model is not None else None)
+    nprobe = ivf_est = None
+    if engine == "ivf":
+        if index is None:
+            raise ValueError("engine='ivf' requires a built index — "
+                             "call RagDB.build_index() first")
+        nprobe = cfg.ivf_nprobe or index.cfg.nprobe
+        q_rows = 1 if logical.q is None else len(np.atleast_2d(logical.q))
+        ivf_est = (index.n_clusters, index.cluster_cap,
+                   index.candidate_rows(nprobe, rows=q_rows))
     return PhysicalPlan(logical=logical, pred=logical.predicate(),
                         engine=engine, engine_reason=engine_reason,
                         route=route, route_reason=route_reason, n_rows=n_rows,
                         est_cost_ms=est,
                         cost_source=("measured" if est is not None
-                                     else "static-thresholds"))
+                                     else "static-thresholds"),
+                        nprobe=nprobe, ivf_est=ivf_est)

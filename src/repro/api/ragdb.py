@@ -36,6 +36,7 @@ import numpy as np
 from repro.api.executor import CompiledShapes, ExecStats, execute_plans
 from repro.api.plan import ALL_BITS, ANY_TENANT, LogicalPlan, PhysicalPlan
 from repro.api.planner import PlannerConfig, compile_plan
+from repro.core.ivf import IVFConfig, IVFIndex, build_ivf
 from repro.core.query import make_sharded_query
 from repro.core.router import TieredRouter
 from repro.core.store import DocBatch, StoreConfig
@@ -164,6 +165,10 @@ class RagDB:
                        if shape_cache_size else None)
         self.result_cache = (ResultCache(result_cache_size)
                              if result_cache_size else None)
+        # ANN tier: hot-arena IVF index (build_index creates it); None means
+        # every plan scans exactly.
+        self.index: IVFIndex | None = None
+        self._index_auto = False      # was the last build auto-sized?
 
     # -- storage facade --------------------------------------------------
     @property
@@ -186,6 +191,7 @@ class RagDB:
         self.router.ingest(batch)
         for tid, n in charges:
             self.tenants.charge(tid, n)
+        self._maybe_rebuild_index()
 
     def update(self, doc_ids, new_emb, updated_at) -> None:
         """Re-embed documents wherever the router placed them (hot log or
@@ -216,6 +222,7 @@ class RagDB:
                                         [int(ts[i]) for i in stay])
             if promote:
                 self._promote_to_hot(sorted(promote), ids, emb, ts)
+        self._maybe_rebuild_index()
 
     def _promote_to_hot(self, idx: list[int], ids, emb, ts) -> None:
         """Move docs from the warm client to the hot log, carrying their
@@ -261,6 +268,7 @@ class RagDB:
         for tid in owners:
             if tid in self.tenants.doc_count and self.tenants.doc_count[tid] > 0:
                 self.tenants.doc_count[tid] -= 1
+        self._maybe_rebuild_index()
 
     def archive(self, doc_id: int, payload) -> None:
         self.router.archive(doc_id, payload)
@@ -270,6 +278,40 @@ class RagDB:
 
     def create_tenant(self, quota: int = 1 << 30) -> int:
         return self.tenants.create_tenant(quota)
+
+    # -- ANN tier (IVF index over the hot arena) --------------------------
+    def build_index(self, cfg: IVFConfig | None = None) -> IVFIndex:
+        """(Re)build the hot-arena IVF index and attach it for incremental
+        write-through maintenance. Adds "ivf" to the planner's candidate
+        engines. ``cfg=None`` auto-sizes n_clusters near sqrt(live rows).
+
+        Every (re)build bumps the index epoch — ivf-plan result-cache
+        entries key on it, so a rebuild (which changes which rows get
+        scored without any arena commit) can never serve a stale hit."""
+        snap = self.log.snapshot()
+        self._index_auto = cfg is None
+        if cfg is None:
+            # ~2*sqrt(N) clusters (pow2): fine enough that nprobe clusters
+            # stay well under a quarter of the arena, coarse enough that the
+            # centroid matmul stays negligible next to the pruned scan
+            n_live = max(int(snap["n_live"]), 1)
+            c = 1 << max(int(2 * n_live ** 0.5), 1).bit_length()
+            cfg = IVFConfig(n_clusters=max(8, min(c, n_live)))
+        epoch = self.index.epoch + 1 if self.index is not None else 0
+        self.index = build_ivf(snap, cfg, epoch=epoch)
+        self.log.ivf = self.index     # commits write through from here on
+        return self.index
+
+    def _maybe_rebuild_index(self) -> None:
+        """Drift rule: once incremental churn passes the configured fraction
+        of the built size, the centroids no longer describe the data —
+        rebuild (here synchronously; a deployment would hand this to a
+        background worker and swap the finished index in, which the
+        epoch-keyed cache makes safe at any moment). An auto-sized index
+        re-auto-sizes, so n_clusters tracks the grown corpus and the probe
+        stays sub-linear."""
+        if self.index is not None and self.index.needs_rebuild():
+            self.build_index(None if self._index_auto else self.index.cfg)
 
     # -- sessions (the only way to query) --------------------------------
     def session(self, principal: Principal) -> "Session":
@@ -287,7 +329,7 @@ class RagDB:
             logical, n_rows=snap["emb"].shape[0],
             hot_window_s=self.router.hot_window_s, now_ts=self.router.now_ts,
             warm_rows=self.router.warm.n_docs, cfg=self.planner_cfg,
-            has_mesh=self.mesh is not None)
+            has_mesh=self.mesh is not None, index=self.index)
 
     def _sharded_fn(self, k: int):
         fn = self._sharded_fns.get(k)
@@ -301,7 +343,10 @@ class RagDB:
     def _result_key(self, plan: PhysicalPlan) -> tuple | None:
         """Snapshot-exact cache key for one plan, or None when the plan is
         uncacheable (no query rows). Hot-only plans pin the warm counter to
-        -1: warm writes provably cannot change their results."""
+        -1: warm writes provably cannot change their results. ivf plans
+        additionally key on the index epoch — a rebuild changes which rows
+        get SCORED without any arena commit, so the commit counters alone
+        would wrongly keep serving pre-rebuild probe results."""
         lp = plan.logical
         if lp.q is None:
             return None
@@ -309,8 +354,11 @@ class RagDB:
         digest = hashlib.blake2b(q.tobytes(), digest_size=16).digest()
         warm_commits = (self.router.warm.commit_count
                         if plan.route == "hot+warm" else -1)
+        index_epoch = (self.index.epoch
+                       if plan.engine == "ivf" and self.index is not None
+                       else -1)
         return (plan.group_key, q.shape, digest,
-                self.log.commit_count, warm_commits)
+                self.log.commit_count, warm_commits, index_epoch)
 
     def execute(self, plans: list[PhysicalPlan], *, use_cache: bool = True):
         """Predicate-group batched execution; see executor.execute_plans.
@@ -343,7 +391,7 @@ class RagDB:
             s, sl, tr = execute_plans(
                 self.log.snapshot(), self.router.warm, run_plans,
                 sharded_fn=self._sharded_fn(k) if needs_shard else None,
-                stats=self.stats, shapes=self.shapes)
+                stats=self.stats, shapes=self.shapes, index=self.index)
             self.router.stats.hot_queries += self.stats.hot_queries - before_hot
             self.router.stats.warm_queries += self.stats.warm_queries - before_warm
             off = 0
@@ -363,7 +411,9 @@ class RagDB:
         `PhysicalPlan.explain()`); format documented in docs/api.md.
 
         Lines: store watermarks, planner cost-model status, compiled-shape
-        LRU hit/miss, result-cache hit/miss, executor device-call totals."""
+        LRU hit/miss, result-cache hit/miss, executor device-call totals
+        (rows scanned included — the pruning audit trail), ANN index
+        state."""
         snap = self.log.snapshot()
         cm = self.planner_cfg.cost_model
         planner = ("cost model loaded "
@@ -380,6 +430,13 @@ class RagDB:
                        f"{rc.hits} hits / {rc.misses} misses")
         else:
             results = "disabled"
+        if self.index is not None:
+            ix = self.index
+            index = (f"{ix.n_clusters} clusters (cap {ix.cluster_cap}, "
+                     f"{len(ix.overflow)} overflow), epoch {ix.epoch}, "
+                     f"churn {ix.churn}/{ix.n_at_build}")
+        else:
+            index = "none (exact scans only)"
         st = self.stats
         return "\n".join([
             f"RagDB  {snap['emb'].shape[0]} hot-tier rows "
@@ -390,7 +447,9 @@ class RagDB:
             f"  result cache: {results}",
             f"  exec stats:   {st.device_calls} device calls, "
             f"{st.queries} queries ({st.hot_queries} hot, "
-            f"{st.warm_queries} warm), {st.padded_rows} padded rows",
+            f"{st.warm_queries} warm), {st.padded_rows} padded rows, "
+            f"{st.rows_scanned} rows scanned",
+            f"  ivf index:    {index}",
         ])
 
 
@@ -442,8 +501,11 @@ class QueryBuilder:
         return self._with(k=int(k))
 
     def using(self, engine: str) -> "QueryBuilder":
-        """Force an execution engine ("ref" | "pallas" | "sharded"),
-        overriding the planner's cost-based choice."""
+        """Force an execution engine ("ref" | "pallas" | "sharded" | "ivf"),
+        overriding the planner's cost-based choice AND its ivf selectivity
+        guard (an under-filled probe is completed by the executor's exact
+        rescan, so forcing "ivf" trades speed, never completeness). "ivf"
+        requires `RagDB.build_index()` first."""
         return self._with(engine=engine)
 
     def lower(self) -> LogicalPlan:

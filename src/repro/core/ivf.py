@@ -4,11 +4,25 @@ HNSW (the paper's index) is pointer-chasing and does not map to the TPU
 memory system. The TPU-idiomatic equivalent of "don't scan everything" is
 IVF: a coarse quantizer (one small matmul over C centroids) selects nprobe
 clusters, and the fused filtered scan runs only over those clusters' rows.
-Cluster members live in a cluster-major padded arena so the probe is a dense
-gather of (nprobe, cap) tiles — VMEM-friendly, no host involvement.
 
-The predicate mask still runs INSIDE the probe scan: IVF changes which rows
-are scored, never which rows may be returned — isolation is preserved.
+Layout: a padded cluster-major MEMBER table (C, cap) of arena slot ids. The
+probe takes the deduplicated union of the predicate group's probed clusters
+and gathers those members' embeddings + metadata from the ARENA once per
+group (kernels/ivf_probe) — slot-indirect, so the arena stays the single
+source of truth and the index never carries a second copy of any column.
+
+Rows that don't fit their cluster's cap land in an explicit ``overflow``
+tail that every probe scans exactly — overfull clusters cost a little
+speed, never recall.
+
+The predicate mask still runs INSIDE the probe scan, on arena metadata:
+IVF changes which rows are scored, never which rows may be returned —
+isolation is preserved even against a corrupted member table.
+
+Maintenance is incremental: writes assign new rows to their nearest
+centroid (recycling member-table slots), `epoch` bumps on every (re)build so
+snapshot-keyed caches stay exact, and accumulated churn past
+``drift_rebuild_frac`` of the built size marks the index for a rebuild.
 """
 from __future__ import annotations
 
@@ -17,27 +31,28 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.query import NEG_INF, predicate_mask
 from repro.core.store import Store
-
-IVFIndex = dict[str, jax.Array]
 
 
 @dataclasses.dataclass(frozen=True)
 class IVFConfig:
     n_clusters: int = 64
     nprobe: int = 8
-    cluster_cap: int = 2048     # padded rows per cluster
+    cluster_cap: int | None = None   # padded rows per cluster; None = auto
+                                     # (largest built cluster, 128-rounded)
     kmeans_iters: int = 10
     seed: int = 0
+    drift_rebuild_frac: float = 0.25  # churn fraction that flags a rebuild
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _kmeans(emb: jax.Array, live: jax.Array, cfg: IVFConfig):
-    """Lloyd iterations over live rows; returns centroids (C, D) fp32."""
-    C = cfg.n_clusters
-    key = jax.random.PRNGKey(cfg.seed)
+@partial(jax.jit, static_argnames=("n_clusters", "iters", "seed"))
+def _kmeans(emb: jax.Array, live: jax.Array, n_clusters: int, iters: int,
+            seed: int):
+    """Spherical Lloyd iterations over live rows; centroids (C, D) f32."""
+    C = n_clusters
+    key = jax.random.PRNGKey(seed)
     # init: random live-ish rows (weighted by liveness)
     probs = live.astype(jnp.float32)
     probs = probs / jnp.maximum(probs.sum(), 1)
@@ -55,52 +70,211 @@ def _kmeans(emb: jax.Array, live: jax.Array, cfg: IVFConfig):
         norm = jnp.linalg.norm(new, axis=1, keepdims=True)
         return new / jnp.maximum(norm, 1e-12), None
 
-    cent, _ = jax.lax.scan(step, cent, None, length=cfg.kmeans_iters)
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
     return cent
 
 
-def build_ivf(store: Store, cfg: IVFConfig) -> IVFIndex:
-    """Cluster the live rows; cluster-major member table padded to cap."""
+def _pow2(n: int, floor: int = 1) -> int:
+    return 1 << max(max(int(n), floor) - 1, 0).bit_length()
+
+
+class IVFIndex:
+    """Host-managed coarse index over the hot arena.
+
+    Mutable on the host (incremental upkeep rides every commit), consumed on
+    device through cached mirrors (`device_arrays`) that invalidate on any
+    mutation. `epoch` identifies the centroid generation — result caches key
+    ivf-engine entries on it because a rebuild changes which rows get
+    *scored* without any arena commit.
+    """
+
+    def __init__(self, cfg: IVFConfig, centroids: np.ndarray,
+                 members: np.ndarray, fill: np.ndarray, overflow: list[int],
+                 n_at_build: int, epoch: int = 0):
+        self.cfg = cfg
+        self.centroids = centroids          # (C, D) f32, unit rows
+        self.members = members              # (C, cap) i32 arena slots, -1 pad
+        self.fill = fill                    # (C,) live entries per cluster
+        self.overflow = list(overflow)      # spilled slots — scanned exactly
+        self.n_at_build = n_at_build
+        self.epoch = epoch
+        self.churn = 0                      # incremental ops since (re)build
+        # predicates the WHOLE arena cannot fill k for (learned by the
+        # executor's exact-rescan net): probing them is pure waste, so the
+        # dispatch goes straight to the exact engine. Any data change can
+        # un-starve a predicate, so mutations clear the memo.
+        self.starved: set = set()
+        self._slot_pos: dict[int, tuple[int, int]] = {}
+        for c in range(members.shape[0]):
+            for p in range(int(fill[c])):
+                self._slot_pos[int(members[c, p])] = (c, p)
+        for i, s in enumerate(self.overflow):
+            self._slot_pos[int(s)] = (-1, i)
+        self._dev: dict | None = None
+
+    # -- shape facts ------------------------------------------------------
+    @property
+    def n_clusters(self) -> int:
+        return self.members.shape[0]
+
+    @property
+    def cluster_cap(self) -> int:
+        return self.members.shape[1]
+
+    @property
+    def overflow_padded(self) -> int:
+        """Device length of the overflow tail (pow2-bucketed for shape reuse)."""
+        return _pow2(len(self.overflow), 8) if self.overflow else 0
+
+    def candidate_rows(self, nprobe: int, rows: int = 1) -> int:
+        """Upper bound on rows ONE probe scans for a ``rows``-row batch —
+        execution dedups the union of all rows' probed clusters, and the
+        union is pow2-bucketed, so the bound is _pow2(min(rows*nprobe, C))
+        clusters (explain()'s estimate; grouped execution stacking several
+        plans unions further, each plan's explain bounds its own rows)."""
+        u = min(max(int(rows), 1) * max(1, min(int(nprobe), self.n_clusters)),
+                self.n_clusters)
+        return _pow2(u) * self.cluster_cap + self.overflow_padded
+
+    # -- device mirrors ---------------------------------------------------
+    def device_arrays(self) -> dict[str, jax.Array]:
+        """Cached device view; any mutation invalidates it whole (the full
+        (C, cap) table re-uploads on the next probe after a write). A
+        write-heavy TPU deployment would patch the touched rows in place
+        with .at[].set instead — tracked as a ROADMAP item; on the CPU rig
+        the transfer is a memcpy and simplicity wins."""
+        if self._dev is None:
+            over = np.full(self.overflow_padded, -1, np.int32)
+            over[:len(self.overflow)] = self.overflow
+            self._dev = {"centroids": jnp.asarray(self.centroids),
+                         "members": jnp.asarray(self.members),
+                         "overflow": jnp.asarray(over)}
+        return self._dev
+
+    # -- the coarse quantizer (host side: centroids are tiny) -------------
+    def probe(self, q: np.ndarray, nprobe: int):
+        """Deduplicated probed-cluster union for a batch of query rows.
+
+        Returns (clusters (U_pad,) i32 — pow2-bucketed, -1 padded;
+        n_probed — real clusters in the union; rows_scanned — padded
+        candidate rows the device program will score)."""
+        q = np.atleast_2d(np.asarray(q, np.float32))
+        nprobe = max(1, min(int(nprobe), self.n_clusters))
+        sims = q @ self.centroids.T                         # (B, C)
+        if nprobe < self.n_clusters:
+            top = np.argpartition(-sims, nprobe - 1, axis=1)[:, :nprobe]
+        else:
+            top = np.broadcast_to(np.arange(self.n_clusters), sims.shape)
+        uniq = np.unique(top)
+        clusters = np.full(_pow2(len(uniq)), -1, np.int32)
+        clusters[:len(uniq)] = uniq
+        rows = len(clusters) * self.cluster_cap + self.overflow_padded
+        return clusters, len(uniq), rows
+
+    # -- incremental maintenance (rides every commit) ----------------------
+    def add_rows(self, slots, emb) -> None:
+        """Assign fresh/re-embedded rows to their nearest centroid,
+        recycling member-table slots; overfull clusters spill to the
+        exact-scan overflow tail."""
+        slots = [int(s) for s in slots]
+        emb = np.asarray(emb, np.float32).reshape(len(slots), -1)
+        assign = np.argmax(emb @ self.centroids.T, axis=1)
+        for slot, c in zip(slots, assign):
+            if slot in self._slot_pos:      # re-embed: move, don't duplicate
+                self._remove(slot)
+            c = int(c)
+            if self.fill[c] < self.cluster_cap:
+                pos = int(self.fill[c])
+                self.members[c, pos] = slot
+                self.fill[c] += 1
+                self._slot_pos[slot] = (c, pos)
+            else:
+                self._slot_pos[slot] = (-1, len(self.overflow))
+                self.overflow.append(slot)
+            self.churn += 1
+        self._dev = None
+        self.starved.clear()
+
+    def remove_slots(self, slots) -> None:
+        for s in slots:
+            self._remove(int(s))
+            self.churn += 1
+        self._dev = None
+        self.starved.clear()
+
+    def _remove(self, slot: int) -> None:
+        ent = self._slot_pos.pop(slot, None)
+        if ent is None:
+            return
+        c, pos = ent
+        if c < 0:                            # overflow tail: swap-with-last
+            last = self.overflow.pop()
+            if pos < len(self.overflow):
+                self.overflow[pos] = last
+                self._slot_pos[last] = (-1, pos)
+        else:                                # member table: swap-with-last
+            last_pos = int(self.fill[c]) - 1
+            last_slot = int(self.members[c, last_pos])
+            self.members[c, last_pos] = -1
+            self.fill[c] = last_pos
+            if pos != last_pos:
+                self.members[c, pos] = last_slot
+                self._slot_pos[last_slot] = (c, pos)
+        self._dev = None
+
+    def needs_rebuild(self) -> bool:
+        """Drift rule: incremental churn past ``drift_rebuild_frac`` of the
+        built size means the centroids no longer describe the data."""
+        return self.churn > self.cfg.drift_rebuild_frac * max(self.n_at_build, 1)
+
+
+def build_ivf(store: Store, cfg: IVFConfig, *, epoch: int = 0) -> IVFIndex:
+    """Cluster the live rows into a cluster-major member table.
+
+    Fully vectorized (one argsort + searchsorted scatter — the old O(C*N)
+    Python loop is gone); rows beyond a cluster's cap spill into the
+    overflow tail, which probes scan exactly, so capacity pressure degrades
+    speed, never recall."""
     live = store["tenant"] >= 0
-    cent = _kmeans(store["emb"], live, cfg)
+    n_live = int(jnp.sum(live))
+    C = max(1, min(cfg.n_clusters, n_live))
+    cent = _kmeans(store["emb"], live, C, cfg.kmeans_iters, cfg.seed)
     sims = store["emb"].astype(jnp.float32) @ cent.T
-    assign = jnp.where(live, jnp.argmax(sims, axis=1), -1)
+    assign = np.asarray(jnp.where(live, jnp.argmax(sims, axis=1), -1))
 
-    # padded member table (host-side build; index construction is offline)
-    import numpy as np
-    assign_np = np.asarray(assign)
-    members = np.full((cfg.n_clusters, cfg.cluster_cap), -1, np.int32)
-    overflow = 0
-    for c in range(cfg.n_clusters):
-        rows = np.nonzero(assign_np == c)[0]
-        if len(rows) > cfg.cluster_cap:
-            overflow += len(rows) - cfg.cluster_cap
-            rows = rows[:cfg.cluster_cap]
-        members[c, :len(rows)] = rows
-    if overflow:
-        # production path: split hot clusters / raise cap; surfaced, not silent
-        import warnings
-        warnings.warn(f"IVF overflow: {overflow} rows dropped; raise cluster_cap")
-    return {"centroids": cent, "members": jnp.asarray(members)}
+    order = np.argsort(assign, kind="stable")
+    sorted_assign = assign[order]
+    first_live = np.searchsorted(sorted_assign, 0)
+    rows = order[first_live:].astype(np.int64)
+    ca = sorted_assign[first_live:]
+    counts = np.bincount(ca, minlength=C)
+    if cfg.cluster_cap is not None:
+        cap = cfg.cluster_cap
+    else:
+        cap = max(128, int(np.ceil(max(int(counts.max(initial=0)), 1) / 128)) * 128)
+    start = np.searchsorted(ca, np.arange(C))
+    pos = np.arange(len(rows)) - start[ca]
+    members = np.full((C, cap), -1, np.int32)
+    in_cap = pos < cap
+    members[ca[in_cap], pos[in_cap]] = rows[in_cap]
+    overflow = rows[~in_cap].astype(int).tolist()
+    fill = np.minimum(counts, cap).astype(np.int64)
+    return IVFIndex(cfg, np.asarray(cent), members, fill, overflow,
+                    n_at_build=len(rows), epoch=epoch)
 
 
-@partial(jax.jit, static_argnames=("k", "nprobe"))
-def ivf_query(store: Store, index: IVFIndex, q: jax.Array, pred: jax.Array,
-              k: int, nprobe: int):
-    """q: (B, D) -> (scores (B,k), slots (B,k)). Engine-level predicate mask
-    applies inside the probe scan."""
-    B = q.shape[0]
-    cap = index["members"].shape[1]
-    qf = q.astype(jnp.float32)
-    csims = qf @ index["centroids"].T                              # (B, C)
-    _, probe = jax.lax.top_k(csims, nprobe)                        # (B, nprobe)
-    cand = index["members"][probe].reshape(B, nprobe * cap)        # (B, P)
-    safe = jnp.maximum(cand, 0)
-    emb = store["emb"][safe].astype(jnp.float32)                   # (B, P, D)
-    scores = jnp.einsum("bd,bpd->bp", qf, emb)
-    mask = predicate_mask(store, pred)[safe] & (cand >= 0)
-    scores = jnp.where(mask, scores, NEG_INF)
-    top_scores, top_pos = jax.lax.top_k(scores, k)
-    top_slots = jnp.take_along_axis(cand, top_pos, axis=1)
-    top_slots = jnp.where(top_scores > NEG_INF, top_slots, -1)
-    return top_scores, top_slots
+def ivf_query(store: Store, index: IVFIndex, q: jax.Array, pred, k: int,
+              nprobe: int | None = None, *, use_kernel: bool | None = None):
+    """Single-call convenience over probe + fused scan (the executor drives
+    the two stages itself so it can count rows_scanned).
+
+    ``pred`` is a Predicate or its packed (4,) int32 array. Returns
+    (scores (B, k), ARENA slots (B, k))."""
+    from repro.core.query import Predicate
+    from repro.kernels.ivf_probe.ops import ivf_probe
+    pa = pred.as_array() if isinstance(pred, Predicate) else jnp.asarray(pred)
+    clusters, _, _ = index.probe(np.asarray(q), nprobe or index.cfg.nprobe)
+    dev = index.device_arrays()
+    return ivf_probe(q, store["emb"], store["tenant"], store["updated_at"],
+                     store["category"], store["acl"], dev["members"],
+                     dev["overflow"], clusters, pa, k, use_kernel=use_kernel)

@@ -42,6 +42,30 @@ def vector_topk(emb: jax.Array, valid: jax.Array, q: jax.Array, k: int):
     return jax.lax.top_k(scores, k)
 
 
+@partial(jax.jit, static_argnames=("k",))
+def vector_topk_filtered(emb: jax.Array, valid: jax.Array,
+                         meta: dict[str, jax.Array], q: jax.Array,
+                         pred: jax.Array, k: int):
+    """Predicate PUSHDOWN: the vector service accepts the lowered predicate
+    and masks inside the scan (what production vector DBs call metadata
+    filtering). One program, no over-fetch, no under-fill retries — and the
+    filter cannot be skipped by app code, so the warm tier inherits the
+    unified engine's isolation construction when queried this way."""
+    tenant = meta["tenant"]
+    keep = valid & (tenant >= 0)
+    keep &= (pred[0] == -2) | (tenant == pred[0])
+    keep &= meta["updated_at"] >= pred[1]
+    cat_mask = pred[2].view(jnp.uint32)
+    acl_bits = pred[3].view(jnp.uint32)
+    keep &= (jnp.left_shift(jnp.uint32(1),
+                            meta["category"].astype(jnp.uint32)) & cat_mask) != 0
+    keep &= (meta["acl"] & acl_bits) != 0
+    scores = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
+    scores = jnp.where(keep[None, :], scores, NEG_INF)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
+
+
 @jax.jit
 def vector_write(emb: jax.Array, valid: jax.Array, slots: jax.Array, new_emb: jax.Array):
     return emb.at[slots].set(new_emb), valid.at[slots].set(True)
@@ -245,11 +269,31 @@ class SplitStackClient:
             return False
         return True
 
-    def query(self, q: jax.Array, pred: Predicate, k: int):
-        """Returns (scores (B,k) np.float32, slots (B,k) np.int32, doc mask).
+    def query(self, q: jax.Array, pred: Predicate, k: int, *,
+              pushdown: bool = False):
+        """Returns (scores (B,k) np.float32, slots (B,k) np.int32).
 
-        Every round trip is counted; retries model the under-fill problem of
-        post-filtering (over-fetch never provably suffices)."""
+        ``pushdown=False`` (Stack A as the paper measured it): vector scan,
+        metadata fetch, app-layer post-filter, retry-on-underfill — every
+        round trip counted, the injectable filter bug reachable.
+
+        ``pushdown=True`` (the warm-tier route): the lowered predicate
+        travels INTO the vector scan (`vector_topk_filtered`) — one round
+        trip, exact fill, the app-layer filter (and its bug) out of the
+        loop. The front-door executor always probes the warm tier this way.
+        """
+        if pushdown:
+            k_eff = min(k, self.cfg.capacity)
+            s, i = vector_topk_filtered(self.emb, self.valid, self.meta, q,
+                                        pred.as_array(), k_eff)
+            self.stats.round_trips += 1
+            s, i = np.asarray(s), np.asarray(i)
+            if k_eff < k:
+                pad = ((0, 0), (0, k - k_eff))
+                s = np.pad(s, pad, constant_values=np.float32(
+                    jax.device_get(NEG_INF)))
+                i = np.pad(i, pad, constant_values=-1)
+            return s, i
         B = q.shape[0]
         bug_active = self._rng.random() < self.filter_bug_rate
         fetch = k * self.OVERFETCH

@@ -18,6 +18,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.store import DocBatch, Store, StoreConfig, normalize
 
@@ -101,6 +102,11 @@ class TransactionLog:
         # both, so (snapshot identity) == (commit_count value) without a
         # device sync — the result cache keys on this.
         self.commit_count = 0
+        # attached IVFIndex (RagDB.build_index sets it): commits write
+        # through — new rows join their nearest centroid, freed rows leave
+        # the member table — so the index never serves deleted slots and
+        # fresh rows are probeable without waiting for a rebuild.
+        self.ivf = None
 
     # -- reads ---------------------------------------------------------
     def snapshot(self) -> Store:
@@ -139,15 +145,20 @@ class TransactionLog:
         for s, d in zip(slot_list, jax.device_get(batch.doc_id)):
             self._slot_of_doc[int(d)] = s
         self._cursor += n_fresh
+        if self.ivf is not None:
+            self.ivf.add_rows(slot_list, np.asarray(batch.emb))
 
     def update(self, doc_ids, new_emb, updated_at) -> None:
-        slots = jnp.asarray([self._slot_of_doc[int(d)] for d in doc_ids], jnp.int32)
+        slot_list = [self._slot_of_doc[int(d)] for d in doc_ids]
+        slots = jnp.asarray(slot_list, jnp.int32)
         t0 = time.perf_counter()
         new = update(self._store, self.cfg, slots, new_emb, jnp.asarray(updated_at, jnp.int32))
         jax.block_until_ready(new["commit_ts"])
         self.write_latencies_s.append(time.perf_counter() - t0)
         self._store = new
         self.commit_count += 1
+        if self.ivf is not None:   # re-embedded rows move to their new centroid
+            self.ivf.add_rows(slot_list, np.asarray(new_emb))
 
     def delete(self, doc_ids) -> list[int]:
         """Tombstone the given docs. Returns the freed slots (one per unique
@@ -164,6 +175,8 @@ class TransactionLog:
             self._slot_of_doc.pop(int(d), None)
         # tombstoned slots return to the allocator (free-slot recycling)
         self._free_slots.extend(slot_list)
+        if self.ivf is not None:   # freed slots leave the member table too
+            self.ivf.remove_slots(slot_list)
         return slot_list
 
     @property

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the ivf_probe kernel.
+
+Contract shared with the Pallas kernel (ivf_probe.py): score ONLY the
+candidate rows a predicate group's probed clusters name, apply the
+engine-level predicate in the same pass, and return ARENA slots — the
+probe changes which rows are *scored*, never which rows may be *returned*.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(jnp.finfo(jnp.float32).min)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def ivf_probe_ref(q: jax.Array, cand_emb: jax.Array, cand_meta: jax.Array,
+                  pred: jax.Array, k: int):
+    """q: (B, D); cand_emb: (P, D) — the probed clusters' member rows,
+    gathered ONCE for the whole predicate group (never per query row);
+    cand_meta: (P, 5) int32 [tenant, updated_at, category, acl, arena_slot]
+    (slot < 0 marks member-table padding); pred: (4,) int32.
+    Returns (scores (B, k) f32, arena slots (B, k) i32, -1 past the fill)."""
+    tenant, ts, cat, acl, slot = (cand_meta[:, i] for i in range(5))
+    keep = slot >= 0                                      # member padding out
+    keep &= tenant >= 0                                   # tombstones out
+    keep &= (pred[0] == -2) | (tenant == pred[0])         # tenant isolation
+    keep &= ts >= pred[1]                                 # freshness
+    keep &= (jnp.left_shift(1, cat) & pred[2]) != 0       # category set
+    keep &= (acl & pred[3]) != 0                          # ACL groups
+    scores = q.astype(jnp.float32) @ cand_emb.astype(jnp.float32).T   # (B, P)
+    scores = jnp.where(keep[None, :], scores, NEG_INF)
+    top_s, top_pos = jax.lax.top_k(scores, k)
+    top_slots = jnp.take_along_axis(
+        jnp.broadcast_to(slot[None, :], scores.shape), top_pos, axis=1)
+    return top_s, jnp.where(top_s > NEG_INF, top_slots, -1)

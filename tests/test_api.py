@@ -157,9 +157,15 @@ def test_serve_batches_by_predicate_group(db_stack, rng, monkeypatch,
     tenants = [0, 1, 2, 0, 1, 2, 0, 1]
     reqs = _requests(rng, ccfg, tenants)
     calls = _count_calls(monkeypatch)
+    rows0 = db.stats.rows_scanned
     resps = engine.serve(reqs)
     assert calls["n"] == 3, f"expected 3 grouped device calls, saw {calls['n']}"
     assert engine.last_retrieval_device_calls == 3
+    if front_door:
+        # exact-scan regression guard by COUNT: each grouped call scans the
+        # whole arena exactly once — 3 groups, 3 full scans, nothing more
+        arena = db.log.snapshot()["emb"].shape[0]
+        assert db.stats.rows_scanned - rows0 == 3 * arena
     # grouped execution preserves per-request isolation and ordering
     tenant_of = np.asarray(corpus.tenant)
     for t, r in zip(tenants, resps):
@@ -174,8 +180,10 @@ def test_grouped_matches_looped(db_stack, rng, monkeypatch):
     snap = db.log.snapshot()
     q = rng.standard_normal((6, ccfg.dim)).astype(np.float32)
     preds = [Predicate(tenant=i % 2) for i in range(6)]
-    gs, gi, n_calls = executor_mod.run_grouped(snap, q, preds, 4)
+    stats = executor_mod.ExecStats()
+    gs, gi, n_calls = executor_mod.run_grouped(snap, q, preds, 4, stats=stats)
     assert n_calls == 2
+    assert stats.rows_scanned == 2 * snap["emb"].shape[0]
     for i, p in enumerate(preds):
         s, sl = unified_query_ref(snap, jnp.asarray(q[i:i + 1]), p.as_array(), 4)
         assert (np.asarray(sl)[0] == gi[i]).all()

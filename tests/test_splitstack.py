@@ -57,6 +57,38 @@ def test_split_leaks_under_forced_bug():
     assert (tenant_of[got_b] == 0).all()
 
 
+def test_pushdown_matches_postfilter_without_retries():
+    """Predicate pushdown (the warm-tier route) returns the same qualifying
+    set as the retry-until-full post-filter path, in ONE round trip."""
+    log, split, corpus, ccfg = _build()
+    q = make_queries(ccfg, 1, batch=2, seed=4)[0]
+    pred = Predicate(tenant=1, cat_mask=0b0110)
+    s_post, i_post = split.query(q, pred, k=5)
+    rt0, retry0 = split.stats.round_trips, split.stats.retries
+    s_push, i_push = split.query(q, pred, k=5, pushdown=True)
+    assert split.stats.round_trips == rt0 + 1
+    assert split.stats.retries == retry0
+    for b in range(2):
+        assert set(i_push[b][i_push[b] >= 0].tolist()) == \
+            set(i_post[b][i_post[b] >= 0].tolist())
+    # and it agrees with the unified engine's masked scan
+    s_u, i_u = unified_query(log.snapshot(), q, pred, k=5)
+    assert set(np.asarray(i_u).ravel().tolist()) == \
+        set(i_push.ravel().tolist())
+
+
+def test_pushdown_immune_to_app_layer_filter_bug():
+    """The injected tenant-filter bug lives in the app-layer post-filter;
+    pushdown evaluates the predicate inside the scan, out of its reach —
+    the warm tier inherits the unified engine's isolation construction."""
+    log, split, corpus, ccfg = _build(bug=1.0)
+    tenant_of = np.asarray(corpus.tenant)
+    q = make_queries(ccfg, 1, batch=1, seed=2)[0]
+    _, slots = split.query(q, Predicate(tenant=0), k=8, pushdown=True)
+    got = slots[0][slots[0] >= 0]
+    assert len(got) > 0 and (tenant_of[got] == 0).all()
+
+
 def test_cache_staleness_bounded_by_invalidation():
     log, split, corpus, ccfg = _build()
     rng = np.random.default_rng(3)
