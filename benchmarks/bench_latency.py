@@ -27,6 +27,13 @@ several corpus sizes with recall@10 against the exact scan, the planner's
 engine choice for an unconstrained group at each size, and the candidate-row
 fraction from explain(). Its default-nprobe curve joins the `cost_model`
 engines, so the planner prices the pruned scan from measurements too.
+
+The `group_sweep` section (PR 4) measures grouped-scan fusion: a B=64 batch
+with G distinct predicate groups, per-group loop (G arena streams) vs ONE
+fused grouped_topk scan, at G in {1, 2, 4, 8, 16} on the 50k-doc arena —
+with `rows_scanned` recorded both ways, so the G*N -> N claim is auditable
+by count. `tools/check_bench_regression.py` gates CI on the G=8 point.
+Run with ``--gsweep-only --out PATH`` for a fresh comparison file.
 """
 from __future__ import annotations
 
@@ -41,7 +48,8 @@ from benchmarks.common import (PAPER, QUERY_TYPES, SESSION_QUERIES,
                                build_ragdb, build_stacks, percentiles,
                                save_result, timeit)
 from repro.api import RagDB
-from repro.api.executor import CompiledShapes, run_grouped
+from repro.api.executor import (CompiledShapes, ExecStats, run_grouped,
+                                run_grouped_fused)
 from repro.core import Predicate, Principal, StoreConfig, unified_query
 from repro.core.ivf import ivf_query
 from repro.data.corpus import DAY_S, CorpusConfig, make_corpus, make_queries
@@ -100,7 +108,65 @@ def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
     # the pruned scan joins the measured cost model: the next process's
     # planner prices ivf-vs-ref from these curves
     out["cost_model"]["engines"]["ivf"] = out["ivf"]["cost_curve"]
+    out["group_sweep"] = run_group_sweep(iters=max(iters // 4, 20),
+                                         engine=engine, db=db, ccfg=ccfg)
     save_result("bench_latency", out)
+    return out
+
+
+def run_group_sweep(*, iters: int, engine: str = "ref", batch: int = 64,
+                    n_docs: int = 50_000, k: int = 5,
+                    gs=(1, 2, 4, 8, 16), db=None, ccfg=None) -> dict:
+    """Grouped-scan fusion, measured: a B-row batch carrying G distinct
+    predicate groups (one per tenant — the paper's query composition
+    explosion), answered by the per-group loop (G device programs, each
+    streaming the arena: rows_scanned = G*N) vs ONE fused grouped_topk
+    program (rows_scanned = N). The G=8 row is the PR's acceptance bar
+    (fused >= 3x lower p50) and the point
+    `tools/check_bench_regression.py` gates CI on.
+
+    Pass ``db``/``ccfg`` to reuse an already-ingested RagDB (run() does, so
+    the full bench builds the 50k corpus once); standalone callers get a
+    fresh ``n_docs``-doc arena."""
+    if db is None:
+        db, _, (ccfg, _) = build_ragdb(CorpusConfig(n_docs=n_docs),
+                                       result_cache_size=0)
+    n_docs = ccfg.n_docs
+    snap = db.log.snapshot()
+    arena = snap["emb"].shape[0]
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((batch, ccfg.dim)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    min_ts = ccfg.now_ts - 120 * DAY_S
+    out = {"batch": batch, "n_docs": n_docs, "arena_rows": arena, "k": k,
+           "engine": engine, "sweep": {}}
+    for g in gs:
+        preds = [Predicate(tenant=i % g, min_ts=min_ts) for i in range(batch)]
+        st_loop, st_fused = ExecStats(), ExecStats()
+        run_grouped(snap, q, preds, k, engine=engine, stats=st_loop)
+        run_grouped_fused(snap, q, preds, k, engine=engine, stats=st_fused)
+        t_loop = percentiles(timeit(
+            lambda: run_grouped(snap, q, preds, k, engine=engine),
+            iters=iters))
+        t_fused = percentiles(timeit(
+            lambda: run_grouped_fused(snap, q, preds, k, engine=engine),
+            iters=iters))
+        row = {"groups": g,
+               "looped_ms": t_loop, "fused_ms": t_fused,
+               "speedup_p50": t_loop["p50"] / max(t_fused["p50"], 1e-9),
+               "looped_rows_scanned": st_loop.rows_scanned,
+               "fused_rows_scanned": st_fused.rows_scanned,
+               "looped_device_calls": st_loop.device_calls,
+               "fused_device_calls": st_fused.device_calls}
+        assert st_fused.rows_scanned == arena, (
+            "fused grouped scan must stream the arena exactly once")
+        assert st_loop.rows_scanned == g * arena
+        out["sweep"][str(g)] = row
+        print(f"group sweep: G={g:3d}  looped p50={t_loop['p50']:7.2f}ms "
+              f"({g} scans, {st_loop.rows_scanned} rows)  "
+              f"fused p50={t_fused['p50']:7.2f}ms (1 scan, "
+              f"{st_fused.rows_scanned} rows)  "
+              f"{row['speedup_p50']:4.1f}x")
     return out
 
 
@@ -351,5 +417,32 @@ def run_batched_vs_looped(db, ccfg, *, iters: int, engine: str, k: int,
     return out
 
 
+def _main():
+    import argparse
+    import json
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--gsweep-only", action="store_true",
+                    help="run only the group_sweep section (CI regression "
+                         "gate); writes {'group_sweep': ...} to --out")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--gs", type=int, nargs="+", default=None,
+                    help="with --gsweep-only: group counts to measure "
+                         "(default 1 2 4 8 16; CI gates on 8 alone)")
+    ap.add_argument("--out", default=None,
+                    help="with --gsweep-only: output JSON path (default "
+                         "results/bench_latency.json is NOT touched)")
+    args = ap.parse_args()
+    if args.gsweep_only:
+        sweep = run_group_sweep(iters=args.iters or 20,
+                                gs=tuple(args.gs) if args.gs else
+                                (1, 2, 4, 8, 16))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"group_sweep": sweep}, f, indent=1)
+            print(f"wrote {args.out}")
+        return
+    run(**({"iters": args.iters} if args.iters else {}))
+
+
 if __name__ == "__main__":
-    run()
+    _main()

@@ -10,6 +10,7 @@
 """
 from repro.api.executor import CompiledShapes, ExecStats  # noqa: F401
 from repro.api.plan import LogicalPlan, PhysicalPlan, bucket_rows  # noqa: F401
-from repro.api.planner import CostModel, PlannerConfig, compile_plan  # noqa: F401
+from repro.api.planner import (CostModel, FusedGroup,  # noqa: F401
+                               PlannerConfig, compile_plan, fuse_batch)
 from repro.api.ragdb import (QueryBuilder, QueryResult, RagDB,  # noqa: F401
                              ResultCache, Session)

@@ -1,21 +1,31 @@
 """Physical-plan execution — the ONLY module that issues retrieval device
 calls for the front-door API (and, via shims, for TieredRouter and
-RAGEngine). Centralizing the dispatch is what makes the three headline
-behaviors enforceable and testable:
+RAGEngine). Centralizing the dispatch is what makes the headline behaviors
+enforceable and testable:
 
   * predicate-group batching: a batch of B concurrent queries is grouped by
     `PhysicalPlan.group_key` (predicate, k, engine, route) and each group
     runs as ONE device program over the stacked query rows — B requests with
     G unique predicate groups cost G device calls, not B;
-  * bucketed batching: each group's row count is padded up to a power-of-two
-    bucket (`plan.bucket_rows`) so every batch size in a bucket reuses ONE
-    compiled program shape instead of recompiling per distinct size; the
-    resident shape working set is tracked by a small `CompiledShapes` LRU
-    whose hit/miss counters surface in `RagDB.explain()`;
+  * grouped-scan fusion: exact-engine groups sharing a `fuse_key` (same k,
+    engine, route) collapse further into ONE `grouped_topk` program that
+    streams the arena once for ALL of them — `rows_scanned` drops from G*N
+    to N and G compiled programs become 1 (planner.fuse_batch decides,
+    `ExecStats.fused_groups / fused_scans` audit);
+  * async dispatch: every group's hot-tier device program (fused or not) is
+    launched before the FIRST `device_get`, and warm-tier probes are issued
+    while the hot scans are in flight — the per-group
+    launch->sync->launch->sync ladder is gone;
+  * bucketed batching: each dispatch unit's row count is padded up to a
+    power-of-two bucket (`plan.bucket_rows`) so every batch size in a bucket
+    reuses ONE compiled program shape instead of recompiling per distinct
+    size; the resident shape working set is tracked by a small
+    `CompiledShapes` LRU whose hit/miss counters surface in `RagDB.explain()`;
   * tier merge: "hot+warm" plans probe the warm similarity tier and merge
     the two k-lists host-side, exactly as TieredRouter.query always did.
 
-Tests count calls by monkeypatching `executor.unified_query`.
+Tests count calls by monkeypatching `executor.unified_query` (per-group
+scans) and `executor.unified_query_grouped` (fused scans).
 """
 from __future__ import annotations
 
@@ -27,7 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.plan import PhysicalPlan, bucket_rows
-from repro.core.query import Predicate, unified_query
+from repro.core.query import (BLOCK_ALL, Predicate, stack_predicates,
+                              unified_query, unified_query_grouped)
 from repro.core.store import Store
 
 #: tier tags in the returned `tiers` array
@@ -45,19 +56,24 @@ class ExecStats:
     warm_queries: int = 0
     padded_rows: int = 0          # bucket-padding rows added across calls
     rows_scanned: int = 0         # hot-tier arena rows scored across calls:
-                                  # arena N per exact scan, candidate rows
-                                  # per ivf probe — the auditable savings
+                                  # arena N per exact scan (ONCE per fused
+                                  # grouped scan, not once per group),
+                                  # candidate rows per ivf probe — the
+                                  # auditable savings
+    fused_groups: int = 0         # predicate groups answered by fused scans
+    fused_scans: int = 0          # fused grouped-scan programs launched
 
 
 class CompiledShapes:
     """Small LRU tracking the resident compiled retrieval-program shapes.
 
-    A shape is ``(engine, bucket_rows, k)``; bucketed batching guarantees
-    that any group whose shape is in this set reuses the already-compiled
-    program (XLA caches by shape). `touch()` returns True on a hit and
-    records the miss otherwise; evicting past ``cap`` models a bounded
-    compile cache, so a shape falling out of the working set is reported as
-    a recompile when it returns.
+    A shape is ``(engine, bucket_rows, k)`` — fused grouped scans append
+    their pow2-padded group count, since the (G, 4) predicate block is part
+    of the program shape. Bucketed batching guarantees that any group whose
+    shape is in this set reuses the already-compiled program (XLA caches by
+    shape). `touch()` returns True on a hit and records the miss otherwise;
+    evicting past ``cap`` models a bounded compile cache, so a shape falling
+    out of the working set is reported as a recompile when it returns.
 
     >>> shapes = CompiledShapes(cap=2)
     >>> shapes.touch("ref", 8, 5)          # first sight: miss
@@ -81,8 +97,9 @@ class CompiledShapes:
     def __len__(self) -> int:
         return len(self._lru)
 
-    def touch(self, engine: str, bucket: int, k: int) -> bool:
-        key = (engine, bucket, k)
+    def touch(self, engine: str, bucket: int, k: int,
+              groups: int | None = None) -> bool:
+        key = (engine, bucket, k, groups)
         if key in self._lru:
             self.hits += 1
             self._lru.move_to_end(key)
@@ -104,12 +121,23 @@ def _pad_rows(q: np.ndarray, bucket: int) -> np.ndarray:
         [q, np.zeros((bucket - q.shape[0], q.shape[1]), q.dtype)], axis=0)
 
 
-def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
-              engine: str, sharded_fn=None, ivf=None, nprobe=None,
-              n_valid: int | None = None):
-    """One retrieval device program. Returns (scores, slots, rows_scanned)
-    where rows_scanned is the arena rows this program scored — the full
-    arena for the exact engines, the probed candidate set for ivf.
+@dataclasses.dataclass
+class _Hot:
+    """One in-flight hot-tier device program: launched, NOT yet synced.
+    ``rescan`` carries the ivf completeness-net context so the under-fill
+    check (which must read results) happens at finish time, after every
+    other launch went out."""
+    s: jax.Array
+    sl: jax.Array
+    rows: int                     # arena rows this program scored
+    rescan: tuple | None = None   # (store, q, pred, k, exact_engine, nv, ivf)
+
+
+def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
+                engine: str, sharded_fn=None, ivf=None, nprobe=None,
+                n_valid: int | None = None) -> _Hot:
+    """Launch one retrieval device program WITHOUT syncing on its result
+    (jax dispatch is async: the arrays are futures until device_get).
 
     `sharded_fn` is the cached make_sharded_query callable when engine ==
     'sharded'; `ivf`/`nprobe` are the IVFIndex and probe depth when engine
@@ -121,7 +149,7 @@ def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
         if sharded_fn is None:
             raise ValueError("engine='sharded' requires a mesh-built RagDB")
         s, sl = sharded_fn(store, q, pred.as_array())
-        return s, sl, n_arena
+        return _Hot(s, sl, n_arena)
     if engine == "ivf":
         if ivf is None:
             raise ValueError("engine='ivf' requires a built index — "
@@ -133,7 +161,7 @@ def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
             # learned: the WHOLE arena can't fill k for this predicate —
             # probing first would be pure waste (memo clears on any write)
             s, sl = unified_query(store, q, pred, k, engine=exact)
-            return s, sl, n_arena
+            return _Hot(s, sl, n_arena)
         clusters, _, rows = ivf.probe(np.asarray(q[:nv]),
                                       nprobe or ivf.cfg.nprobe)
         dev = ivf.device_arrays()
@@ -141,33 +169,82 @@ def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
                           store["updated_at"], store["category"],
                           store["acl"], dev["members"], dev["overflow"],
                           clusters, pred.as_array(), k)
-        # completeness net: a pruned scan can under-fill the k-list when
-        # qualifying rows sit outside the probed clusters (e.g. a tight
-        # recency bound, or a forced .using("ivf") on a selective
-        # predicate). An under-filled row falls back to ONE exact rescan —
-        # completeness beats speed, and the extra arena scan shows up in
-        # rows_scanned so the audit trail stays honest.
-        if bool((np.asarray(sl[:nv]) < 0).any()):
-            s, sl = unified_query(store, q, pred, k, engine=exact)
-            if bool((np.asarray(sl[:nv]) < 0).any()):
-                ivf.starved.add((pred, k))
-            return s, sl, rows + n_arena
-        return s, sl, rows
+        return _Hot(s, sl, rows, rescan=(store, q, pred, k, exact, nv, ivf))
     s, sl = unified_query(store, q, pred, k, engine=engine)
-    return s, sl, n_arena
+    return _Hot(s, sl, n_arena)
+
+
+def _finish_hot(hot: _Hot) -> tuple[np.ndarray, np.ndarray]:
+    """Sync one launched program. The ivf completeness net runs HERE: a
+    pruned scan can under-fill the k-list when qualifying rows sit outside
+    the probed clusters (e.g. a tight recency bound, or a forced
+    .using("ivf") on a selective predicate). An under-filled row falls back
+    to ONE exact rescan — completeness beats speed, and the extra arena
+    scan shows up in `hot.rows` so the audit trail stays honest."""
+    s, sl = jax.device_get((hot.s, hot.sl))
+    if hot.rescan is not None:
+        store, q, pred, k, exact, nv, ivf = hot.rescan
+        if bool((sl[:nv] < 0).any()):
+            s, sl = unified_query(store, q, pred, k, engine=exact)
+            s, sl = jax.device_get((s, sl))
+            if bool((sl[:nv] < 0).any()):
+                ivf.starved.add((pred, k))
+            hot.rows += store["emb"].shape[0]
+    return s, sl
+
+
+def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
+              engine: str, sharded_fn=None, ivf=None, nprobe=None,
+              n_valid: int | None = None):
+    """One retrieval device program, launched and synced. Returns
+    (scores, slots, rows_scanned) where rows_scanned is the arena rows this
+    program scored — the full arena for the exact engines, the probed
+    candidate set (plus any completeness rescan) for ivf."""
+    hot = _launch_hot(store, q, pred, k, engine, sharded_fn, ivf, nprobe,
+                      n_valid)
+    s, sl = _finish_hot(hot)
+    return s, sl, hot.rows
+
+
+def _launch_grouped(store: Store, q: np.ndarray, gids: np.ndarray,
+                    preds: list[Predicate], k: int, engine: str, *,
+                    stats: ExecStats | None = None,
+                    shapes: CompiledShapes | None = None) -> _Hot:
+    """Launch ONE fused grouped scan answering every predicate group in
+    ``preds``. Pads query rows to their pow2 bucket (group id 0 — sliced
+    off) and the predicate stack to a pow2 group count with `BLOCK_ALL`
+    rows, so a varying group mix reuses a small set of compiled shapes."""
+    n_valid = q.shape[0]
+    g_real = len(preds)
+    g_bucket = bucket_rows(g_real)
+    preds = list(preds) + [BLOCK_ALL] * (g_bucket - g_real)
+    if shapes is not None:
+        bucket = bucket_rows(n_valid)
+        shapes.touch(engine, bucket, k, groups=g_bucket)
+        if stats is not None:
+            stats.padded_rows += bucket - n_valid
+        q = _pad_rows(q, bucket)
+        gids = np.concatenate(
+            [gids, np.zeros(bucket - n_valid, np.int32)])
+    s, sl = unified_query_grouped(store, jnp.asarray(q), jnp.asarray(gids),
+                                  stack_predicates(preds), k, engine=engine)
+    return _Hot(s, sl, store["emb"].shape[0])
 
 
 def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
                 engine: str = "ref", *, sharded_fn=None, ivf=None,
                 nprobe=None, stats: ExecStats | None = None,
                 shapes: CompiledShapes | None = None):
-    """Predicate-group batched retrieval over one store.
+    """Predicate-group batched retrieval over one store — the per-group
+    LOOP: one device call per unique predicate, each streaming the arena.
 
     q: (B, D) host array, preds: B predicates (one per row). Rows sharing a
     predicate are stacked and answered by one device call; with ``shapes``
     given, each group is padded to its power-of-two bucket so the device
     program shape is reused across batch sizes. Returns
     (scores (B, k) f32, slots (B, k) i32, n_device_calls).
+
+    `run_grouped_fused` is the scan-once alternative for exact engines.
     """
     B = q.shape[0]
     groups: dict[Predicate, list[int]] = {}
@@ -197,8 +274,44 @@ def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
     return scores, slots, len(groups)
 
 
+def run_grouped_fused(store: Store, q: np.ndarray, preds: list[Predicate],
+                      k: int, engine: str = "ref", *,
+                      stats: ExecStats | None = None,
+                      shapes: CompiledShapes | None = None):
+    """Scan-once counterpart of `run_grouped` for the exact engines: the G
+    unique predicates stack into one (G, 4) block and ONE fused
+    `grouped_topk` program answers every row — `rows_scanned` is the arena
+    N, not G*N. Same contract and return shape as `run_grouped`
+    (n_device_calls is always 1)."""
+    B = q.shape[0]
+    uniq: dict[Predicate, int] = {}
+    for p in preds:
+        if p not in uniq:
+            uniq[p] = len(uniq)
+    gids = np.asarray([uniq[p] for p in preds], np.int32)
+    hot = _launch_grouped(store, np.asarray(q, np.float32), gids,
+                          list(uniq), k, engine, stats=stats, shapes=shapes)
+    s, sl = _finish_hot(hot)
+    if stats is not None:
+        stats.device_calls += 1
+        stats.queries += B
+        stats.hot_queries += B
+        stats.rows_scanned += hot.rows
+        stats.fused_groups += len(uniq)
+        stats.fused_scans += 1
+    return np.asarray(s)[:B], np.asarray(sl)[:B], 1
+
+
 def merge_tiers(hs, hi, ws, wi, k: int):
     """Merge hot and warm k-lists into the global top-k (host-side).
+
+    On every hot+warm query's critical path, so the selection is
+    argpartition (O(m)) + a small sort of the k winners, not a full
+    argsort of the concatenated 2k-wide lists; ties break toward the
+    lowest concatenated column (hot before warm), deterministically — also
+    AT the k boundary, where raw argpartition would split tied scores
+    arbitrarily (the partition only bounds the kth value; the selection
+    among columns tied at that value is re-derived in column order).
 
     >>> import numpy as np
     >>> hs = np.array([[3.0, 1.0]]); hi = np.array([[7, 5]])
@@ -211,7 +324,23 @@ def merge_tiers(hs, hi, ws, wi, k: int):
     slots = np.concatenate([hi, wi], axis=1)
     tiers = np.concatenate([np.full_like(hi, TIER_HOT),
                             np.full_like(wi, TIER_WARM)], axis=1)
-    order = np.argsort(-scores, axis=1)[:, :k]
+    m = scores.shape[1]
+    if k < m:
+        # the partition only fixes the kth VALUE; select deterministically:
+        # every column strictly above it, then lowest columns tied at it
+        kth = np.take_along_axis(
+            scores, np.argpartition(-scores, k - 1, axis=1)[:, k - 1:k],
+            axis=1)                                        # (B, 1)
+        gt = scores > kth
+        eq = scores == kth
+        n_eq = k - gt.sum(axis=1, keepdims=True)
+        sel = gt | (eq & (np.cumsum(eq, axis=1) <= n_eq))
+        cols = np.nonzero(sel)[1].reshape(scores.shape[0], k)  # ascending
+        order = np.take_along_axis(
+            cols, np.argsort(-np.take_along_axis(scores, cols, axis=1),
+                             axis=1, kind="stable"), axis=1)
+    else:
+        order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
     gather = lambda a: np.take_along_axis(a, order, axis=1)
     return gather(scores), gather(slots), gather(tiers)
 
@@ -223,6 +352,10 @@ def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
                  n_valid: int | None = None):
     """Single-predicate tiered retrieval (TieredRouter.query's engine room).
 
+    The hot device program is LAUNCHED first and synced last: the warm probe
+    (its own host/device round trip) runs while the hot scan is in flight,
+    so the two tiers overlap instead of serializing.
+
     ``n_valid`` is the count of real query rows when the caller padded q to
     a bucket — only the hot device dispatch needs the bucketed shape; stats
     count logical queries, and the warm probe sees the UNPADDED rows (a
@@ -231,41 +364,58 @@ def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
     ``n_valid`` rows with one; callers slice ``[:n_valid]``, which is exact
     either way."""
     n_logical = q.shape[0] if n_valid is None else n_valid
-    hs, hi, rows = _dispatch(hot_store, q, pred, k, engine, sharded_fn,
-                             ivf, nprobe, n_logical)
-    hs, hi = jax.device_get((hs, hi))
+    hot = _launch_hot(hot_store, q, pred, k, engine, sharded_fn, ivf, nprobe,
+                      n_logical)
+    ws = wi = None
+    warm_calls = 0
+    if probe_warm:
+        # the warm client's round trips are device programs too — count
+        # them, or device_calls would under-report exactly when the
+        # expensive route runs. The lowered predicate is PUSHED DOWN into
+        # the warm store: it filters server-side inside the scan instead of
+        # post-filtering host-side, so the probe is one round trip with no
+        # under-fill retries.
+        rt0 = warm.stats.round_trips
+        ws, wi = warm.query(q[:n_logical], pred, k, pushdown=True)
+        warm_calls = warm.stats.round_trips - rt0
+    hs, hi = _finish_hot(hot)
     if stats is not None:
-        stats.device_calls += 1
+        stats.device_calls += 1 + warm_calls
         stats.queries += n_logical
         stats.hot_queries += n_logical
-        stats.rows_scanned += rows
+        stats.rows_scanned += hot.rows
+        if probe_warm:
+            stats.warm_queries += n_logical
     if not probe_warm:
         return hs, hi, np.full_like(hi, TIER_HOT)
-    # the warm client's round trips are device programs too — count them, or
-    # device_calls would under-report exactly when the expensive route runs.
-    # The lowered predicate is PUSHED DOWN into the warm store: it filters
-    # server-side inside the scan instead of post-filtering host-side, so
-    # the probe is one round trip with no under-fill retries.
-    rt0 = warm.stats.round_trips
-    ws, wi = warm.query(q[:n_logical], pred, k, pushdown=True)
-    if stats is not None:
-        stats.device_calls += warm.stats.round_trips - rt0
-        stats.warm_queries += n_logical
     return merge_tiers(hs[:n_logical], hi[:n_logical], ws, wi, k)
 
 
 def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                   sharded_fn=None, stats: ExecStats | None = None,
-                  shapes: CompiledShapes | None = None, index=None):
-    """Batched execution of compiled plans: group by `group_key`, one hot
-    device call per group (padded to its pow2 bucket when ``shapes`` is
-    given), warm probe + merge for 'hot+warm' groups. ``index`` is the
-    RagDB's IVFIndex, consumed by groups whose plan chose engine 'ivf'.
+                  shapes: CompiledShapes | None = None, index=None,
+                  planner_cfg=None):
+    """Batched execution of compiled plans, in three async phases:
+
+      1. LAUNCH — group plans by `group_key`, hand the distinct groups to
+         `planner.fuse_batch` (exact-engine groups sharing a fuse key
+         collapse into one grouped scan), and launch EVERY dispatch unit's
+         hot device program without syncing;
+      2. WARM — with all hot scans in flight, issue the warm-tier probes
+         for every 'hot+warm' group (per member predicate, pushed down);
+      3. FINISH — first `device_get` happens here: sync each unit, run any
+         ivf completeness rescans, merge tiers, scatter into row order.
+
+    ``index`` is the RagDB's IVFIndex, consumed by groups whose plan chose
+    engine 'ivf'; ``planner_cfg`` supplies the fusion rule's knobs and cost
+    model (None = planner defaults, fusion on at >= 2 groups).
 
     Every plan must carry its query rows (`logical.q`, shape (B_i, D)).
     Returns (scores (B, k), slots (B, k), tiers (B, k)) with B = total query
     rows across plans, in plan order. All plans must share one k.
     """
+    from repro.api.planner import PlannerConfig, fuse_batch
+
     ks = {p.logical.k for p in plans}
     if len(ks) != 1:
         raise ValueError(f"batched execution needs a single k, got {sorted(ks)}")
@@ -286,26 +436,82 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
     groups: dict[tuple, list[int]] = {}
     for i, p in enumerate(row_plans):
         groups.setdefault(p.group_key, []).append(i)
+    reps = {key: row_plans[idxs[0]] for key, idxs in groups.items()}
+    units = fuse_batch(list(reps.values()),
+                       cfg=planner_cfg or PlannerConfig())
 
+    # -- phase 1: launch every hot program (no device_get yet) -----------
+    # each entry: (unit, member row-index lists, real row count, _Hot)
+    inflight = []
+    for unit in units:
+        member_idxs = [groups[p.group_key] for p in unit.plans]
+        if unit.fused:
+            idxs = [i for m in member_idxs for i in m]
+            gids = np.concatenate(
+                [np.full(len(m), g, np.int32)
+                 for g, m in enumerate(member_idxs)])
+            hot = _launch_grouped(hot_store, q_all[np.asarray(idxs)], gids,
+                                  [p.pred for p in unit.plans], k,
+                                  unit.plans[0].engine, stats=stats,
+                                  shapes=shapes)
+            if stats is not None:
+                stats.fused_groups += len(unit.plans)
+                stats.fused_scans += 1
+        else:
+            (plan,) = unit.plans
+            (idxs,) = member_idxs
+            q_g = q_all[np.asarray(idxs)]
+            n_valid = q_g.shape[0]
+            if shapes is not None:
+                bucket = bucket_rows(n_valid)
+                shapes.touch(plan.engine, bucket, k)
+                if stats is not None:
+                    stats.padded_rows += bucket - n_valid
+                q_g = _pad_rows(q_g, bucket)
+            hot = _launch_hot(hot_store, jnp.asarray(q_g), plan.pred, k,
+                              plan.engine, sharded_fn, index, plan.nprobe,
+                              n_valid)
+        inflight.append((unit, member_idxs, hot))
+        if stats is not None:
+            n_rows_unit = sum(len(m) for m in member_idxs)
+            stats.device_calls += 1
+            stats.queries += n_rows_unit
+            stats.hot_queries += n_rows_unit
+
+    # -- phase 2: warm probes while the hot scans are in flight ----------
+    warm_results: list[list[tuple] | None] = []
+    for unit, member_idxs, _ in inflight:
+        if unit.plans[0].route != "hot+warm":
+            warm_results.append(None)
+            continue
+        probes = []
+        for plan, m in zip(unit.plans, member_idxs):
+            rt0 = warm.stats.round_trips
+            ws, wi = warm.query(q_all[np.asarray(m)], plan.pred, k,
+                                pushdown=True)
+            if stats is not None:
+                stats.device_calls += warm.stats.round_trips - rt0
+                stats.warm_queries += len(m)
+            probes.append((ws, wi))
+        warm_results.append(probes)
+
+    # -- phase 3: first device_get, tier merges, scatter -----------------
     scores = np.full((B, k), np.float32(np.finfo(np.float32).min), np.float32)
     slots = np.full((B, k), -1, np.int32)
     tiers = np.full((B, k), TIER_HOT, np.int32)
-    for key, idxs in groups.items():
-        plan = row_plans[idxs[0]]
-        q_g = q_all[np.asarray(idxs)]
-        n_valid = q_g.shape[0]
-        if shapes is not None:
-            bucket = bucket_rows(n_valid)
-            shapes.touch(plan.engine, bucket, k)
-            if stats is not None:
-                stats.padded_rows += bucket - n_valid
-            q_g = _pad_rows(q_g, bucket)
-        s, sl, tr = query_tiered(hot_store, warm, jnp.asarray(q_g), plan.pred,
-                                 k, engine=plan.engine,
-                                 probe_warm=(plan.route == "hot+warm"),
-                                 sharded_fn=sharded_fn, ivf=index,
-                                 nprobe=plan.nprobe, stats=stats,
-                                 n_valid=n_valid)
-        scores[idxs], slots[idxs], tiers[idxs] = (s[:n_valid], sl[:n_valid],
-                                                  tr[:n_valid])
+    for (unit, member_idxs, hot), probes in zip(inflight, warm_results):
+        hs, hi = _finish_hot(hot)
+        if stats is not None:
+            stats.rows_scanned += hot.rows
+        off = 0
+        for gi, m in enumerate(member_idxs):
+            span = slice(off, off + len(m))
+            if probes is None:
+                s_m, sl_m = hs[span], hi[span]
+                t_m = np.full_like(sl_m, TIER_HOT)
+            else:
+                ws, wi = probes[gi]
+                s_m, sl_m, t_m = merge_tiers(hs[span], hi[span], ws, wi, k)
+            scores[m], slots[m], tiers[m] = s_m, sl_m, t_m
+            off += len(m)
     return scores, slots, tiers

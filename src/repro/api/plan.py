@@ -119,6 +119,23 @@ class PhysicalPlan:
         inside one ivf group."""
         return (self.pred, self.logical.k, self.engine, self.route, self.nprobe)
 
+    @property
+    def fusable(self) -> bool:
+        """Whether this plan's scan can join a fused grouped scan. Only the
+        exact full-arena engines qualify: they stream the same rows under
+        different predicates, so G of them collapse into one
+        `grouped_topk` program. ivf scans per-group candidate sets and
+        sharded owns its own collective — both stay on their engines."""
+        return self.engine in ("ref", "pallas")
+
+    @property
+    def fuse_key(self) -> tuple:
+        """Distinct predicate groups sharing this key are candidates for ONE
+        fused grouped scan (planner.fuse_batch): same LIMIT k, same engine,
+        same tier route — the predicates themselves are what the grouped
+        kernel keeps apart."""
+        return (self.logical.k, self.engine, self.route)
+
     def explain(self) -> str:
         lp = self.logical
         clauses = ["live (tenant >= 0)"]
@@ -150,6 +167,15 @@ class PhysicalPlan:
         lines += [
             f"  route:     {self.route:8s} ({self.route_reason})",
             f"  batching:  predicate-group key {self.group_key!r}",
+        ]
+        if self.fusable:
+            lines.append(
+                f"  fusion:    eligible — groups sharing fuse key "
+                f"{self.fuse_key!r} scan once")
+        else:
+            lines.append(
+                f"  fusion:    not eligible ({self.engine} runs per group)")
+        lines += [
             f"  bucket:    {rows} query rows -> {bucket_rows(rows)} (pow2 shape reuse)",
             f"  cost:      {cost}",
         ]

@@ -143,6 +143,10 @@ class PlannerConfig:
     shard_min_rows: int = 1 << 20     # below this a single device wins
     ivf_min_rows: int = 1 << 12       # below this the exact scan is trivial
     ivf_nprobe: int | None = None     # probe depth; None = the index default
+    fuse_min_groups: int = 2          # grouped-scan fusion floor: batches with
+                                      # at least this many exact-engine groups
+                                      # sharing a fuse key scan once (a huge
+                                      # value disables fusion)
     cost_model: CostModel | None = None
 
     @classmethod
@@ -151,6 +155,83 @@ class PlannerConfig:
         """A config with `CostModel.from_bench(path)` loaded (None-safe:
         missing measurements leave the static-threshold behavior)."""
         return cls(cost_model=CostModel.from_bench(path), **kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedGroup:
+    """One hot-tier dispatch unit after batch-level fusion: either several
+    predicate groups answered by ONE fused grouped scan (``fused=True``) or
+    a single group on its own engine. ``plans`` holds one representative
+    `PhysicalPlan` per member predicate group, in batch order; ``reason`` is
+    the auditable fusion decision (mirrors the engine/route reason strings)."""
+    plans: tuple
+    fused: bool
+    reason: str
+
+
+def fuse_batch(plans, *, cfg: PlannerConfig = PlannerConfig()) -> list[FusedGroup]:
+    """Batch-level fusion rule: collapse exact-engine predicate groups that
+    share a `fuse_key` (same k, engine, tier route) into one grouped scan.
+
+    ``plans`` is one representative `PhysicalPlan` per DISTINCT predicate
+    group in the batch (executor.execute_plans dedups by group_key first).
+    Groups whose engine scans per-group candidate sets (ivf) or owns a
+    collective (sharded) stay on their engines; exact groups fuse when at
+    least ``cfg.fuse_min_groups`` of them share a fuse key — the arena then
+    streams once for all of them instead of once per group
+    (`rows_scanned` G*N -> N, G compiled programs -> 1).
+
+    With a cost model loaded the decision is priced from the engine's
+    measured curve: a fused scan costs ~one scan at ``n_rows`` where the
+    loop costs G of them, and the reason string carries both estimates.
+
+    >>> from repro.api.plan import LogicalPlan, PhysicalPlan
+    >>> mk = lambda t: PhysicalPlan(
+    ...     logical=LogicalPlan(tenant=t, k=5),
+    ...     pred=LogicalPlan(tenant=t, k=5).predicate(), engine="ref",
+    ...     engine_reason="", route="hot", route_reason="", n_rows=1024)
+    >>> units = fuse_batch([mk(0), mk(1), mk(2)])
+    >>> len(units), units[0].fused, len(units[0].plans)
+    (1, True, 3)
+    >>> [u.fused for u in fuse_batch([mk(0)])]
+    [False]
+    """
+    order: list[tuple] = []                    # first-occurrence unit order
+    buckets: dict[tuple, list] = {}
+    for p in plans:
+        key = ("fuse", p.fuse_key) if p.fusable else ("solo", id(p))
+        if key not in buckets:
+            buckets[key] = []
+            order.append(key)
+        buckets[key].append(p)
+    units: list[FusedGroup] = []
+    for key in order:
+        group = buckets[key]
+        gsz = len(group)
+        if key[0] == "solo":
+            (p,) = group
+            units.append(FusedGroup((p,), False,
+                                    f"{p.engine} engine runs per group"))
+            continue
+        if gsz < cfg.fuse_min_groups:
+            for p in group:
+                units.append(FusedGroup(
+                    (p,), False,
+                    f"{gsz} group(s) share fuse key {p.fuse_key!r} "
+                    f"< fuse_min_groups={cfg.fuse_min_groups}"))
+            continue
+        k, engine, route = group[0].fuse_key
+        n_rows = group[0].n_rows
+        est = (cfg.cost_model.estimate_ms(engine, n_rows)
+               if cfg.cost_model is not None else None)
+        if est is not None:
+            reason = (f"cost model: one fused scan ~{est:.2f}ms replaces "
+                      f"{gsz} looped scans ~{gsz * est:.2f}ms at {n_rows} rows")
+        else:
+            reason = (f"{gsz} exact groups share (k={k}, engine={engine!r}, "
+                      f"route={route!r}): one scan replaces {gsz}")
+        units.append(FusedGroup(tuple(group), True, reason))
+    return units
 
 
 def _candidate_engines(has_mesh: bool, has_index: bool = False) -> list[str]:

@@ -22,7 +22,9 @@ from the principal before the planner ever sees the query — the same
 server-side construction `tenancy.build_predicate` enforces, now at the API
 boundary. Batched callers (the serving engine) lower one plan per request
 and hand them to `db.execute`, which collapses plans sharing a predicate
-group into one device program each (executor.run_grouped's contract).
+group into one device program each, fuses exact-engine groups sharing
+(k, engine, route) into ONE grouped arena scan, and launches every device
+program before the first sync (executor.execute_plans' contract).
 """
 from __future__ import annotations
 
@@ -361,11 +363,14 @@ class RagDB:
                 self.log.commit_count, warm_commits, index_epoch)
 
     def execute(self, plans: list[PhysicalPlan], *, use_cache: bool = True):
-        """Predicate-group batched execution; see executor.execute_plans.
+        """Predicate-group batched, fusion-aware, async execution; see
+        executor.execute_plans.
 
         Plans whose (group key, query digest, commit counters) match a
         cached entry are answered without any device work; the rest run as
-        one bucketed, grouped `execute_plans` call. Router stats stay
+        one bucketed, grouped `execute_plans` call — exact-engine groups
+        sharing a fuse key collapse into one grouped scan, and every hot
+        program launches before the first device sync. Router stats stay
         coherent for callers watching the old counters."""
         per_plan: list[tuple | None] = [None] * len(plans)
         rows = [1 if p.logical.q is None
@@ -391,7 +396,8 @@ class RagDB:
             s, sl, tr = execute_plans(
                 self.log.snapshot(), self.router.warm, run_plans,
                 sharded_fn=self._sharded_fn(k) if needs_shard else None,
-                stats=self.stats, shapes=self.shapes, index=self.index)
+                stats=self.stats, shapes=self.shapes, index=self.index,
+                planner_cfg=self.planner_cfg)
             self.router.stats.hot_queries += self.stats.hot_queries - before_hot
             self.router.stats.warm_queries += self.stats.warm_queries - before_warm
             off = 0
@@ -412,8 +418,9 @@ class RagDB:
 
         Lines: store watermarks, planner cost-model status, compiled-shape
         LRU hit/miss, result-cache hit/miss, executor device-call totals
-        (rows scanned included — the pruning audit trail), ANN index
-        state."""
+        (rows scanned included — the pruning audit trail), grouped-scan
+        fusion totals (groups fused -> scans launched — the bandwidth audit
+        trail), ANN index state."""
         snap = self.log.snapshot()
         cm = self.planner_cfg.cost_model
         planner = ("cost model loaded "
@@ -449,6 +456,9 @@ class RagDB:
             f"{st.queries} queries ({st.hot_queries} hot, "
             f"{st.warm_queries} warm), {st.padded_rows} padded rows, "
             f"{st.rows_scanned} rows scanned",
+            f"  grouped scan: fused {st.fused_groups} groups -> "
+            f"{st.fused_scans} scans "
+            f"({max(st.fused_groups - st.fused_scans, 0)} arena scans saved)",
             f"  ivf index:    {index}",
         ])
 

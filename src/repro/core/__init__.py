@@ -11,7 +11,8 @@
   router.py       3-tier hot/warm/cold deployment router (paper §7.3)
 """
 from repro.core.ivf import IVFConfig, IVFIndex, build_ivf, ivf_query  # noqa: F401
-from repro.core.query import Predicate, unified_query, unified_query_ref  # noqa: F401
+from repro.core.query import (Predicate, unified_query,  # noqa: F401
+                              unified_query_grouped, unified_query_ref)
 from repro.core.store import DocBatch, Store, StoreConfig, empty  # noqa: F401
 from repro.core.tenancy import Principal, TenantRegistry, build_predicate  # noqa: F401
 from repro.core.transactions import TransactionLog  # noqa: F401

@@ -22,7 +22,10 @@ isolation is preserved even against a corrupted member table.
 Maintenance is incremental: writes assign new rows to their nearest
 centroid (recycling member-table slots), `epoch` bumps on every (re)build so
 snapshot-keyed caches stay exact, and accumulated churn past
-``drift_rebuild_frac`` of the built size marks the index for a rebuild.
+``drift_rebuild_frac`` of the built size marks the index for a rebuild. The
+device mirror is maintained incrementally too: a write patches only the
+touched member-table rows in place on the next probe (upload bytes scale
+with the write, not the table — see `IVFIndex.device_arrays`).
 """
 from __future__ import annotations
 
@@ -82,10 +85,12 @@ class IVFIndex:
     """Host-managed coarse index over the hot arena.
 
     Mutable on the host (incremental upkeep rides every commit), consumed on
-    device through cached mirrors (`device_arrays`) that invalidate on any
-    mutation. `epoch` identifies the centroid generation — result caches key
-    ivf-engine entries on it because a rebuild changes which rows get
-    *scored* without any arena commit.
+    device through cached mirrors (`device_arrays`) that are PATCHED in
+    place: a write marks the member-table rows it touched and the next probe
+    uploads only those rows (`.at[rows].set`), so upload bytes scale with
+    the write, not with the (C, cap) table. `epoch` identifies the centroid
+    generation — result caches key ivf-engine entries on it because a
+    rebuild changes which rows get *scored* without any arena commit.
     """
 
     def __init__(self, cfg: IVFConfig, centroids: np.ndarray,
@@ -111,6 +116,15 @@ class IVFIndex:
         for i, s in enumerate(self.overflow):
             self._slot_pos[int(s)] = (-1, i)
         self._dev: dict | None = None
+        # incremental-mirror bookkeeping: writes mark the touched member-table
+        # rows (cluster ids) dirty instead of dropping the whole mirror, and
+        # device_arrays patches only those rows in place. The byte counter is
+        # the auditable trail a write-heavy deployment watches.
+        self._dirty_clusters: set[int] = set()
+        self._overflow_dirty = False
+        self.mirror_uploads = 0           # full mirror uploads
+        self.mirror_patches = 0           # in-place row patches
+        self.mirror_bytes_uploaded = 0    # cumulative host->device bytes
 
     # -- shape facts ------------------------------------------------------
     @property
@@ -137,18 +151,43 @@ class IVFIndex:
         return _pow2(u) * self.cluster_cap + self.overflow_padded
 
     # -- device mirrors ---------------------------------------------------
+    def _overflow_device(self) -> jax.Array:
+        over = np.full(self.overflow_padded, -1, np.int32)
+        over[:len(self.overflow)] = self.overflow
+        return jnp.asarray(over)
+
     def device_arrays(self) -> dict[str, jax.Array]:
-        """Cached device view; any mutation invalidates it whole (the full
-        (C, cap) table re-uploads on the next probe after a write). A
-        write-heavy TPU deployment would patch the touched rows in place
-        with .at[].set instead — tracked as a ROADMAP item; on the CPU rig
-        the transfer is a memcpy and simplicity wins."""
+        """Cached device view, maintained INCREMENTALLY: a write marks only
+        the member-table rows (clusters) it touched, and the next probe
+        patches those rows in place with ``.at[rows].set`` instead of
+        re-uploading the whole (C, cap) table — upload bytes scale with the
+        write, not the index (the ROADMAP write-heavy-deployment item;
+        asserted by count in tests/test_ivf_engine.py). The overflow tail
+        re-uploads whole when touched (it is pow2-padded and small); a
+        padded-length change forces that anyway. Centroids only change on
+        rebuild, which constructs a fresh index (and mirror)."""
         if self._dev is None:
-            over = np.full(self.overflow_padded, -1, np.int32)
-            over[:len(self.overflow)] = self.overflow
+            over = self._overflow_device()
             self._dev = {"centroids": jnp.asarray(self.centroids),
                          "members": jnp.asarray(self.members),
-                         "overflow": jnp.asarray(over)}
+                         "overflow": over}
+            self.mirror_uploads += 1
+            self.mirror_bytes_uploaded += (self.centroids.nbytes
+                                           + self.members.nbytes
+                                           + over.nbytes)
+        else:
+            if self._dirty_clusters:
+                rows = np.asarray(sorted(self._dirty_clusters), np.int64)
+                self._dev["members"] = self._dev["members"].at[
+                    jnp.asarray(rows)].set(jnp.asarray(self.members[rows]))
+                self.mirror_patches += 1
+                self.mirror_bytes_uploaded += self.members[rows].nbytes
+            if self._overflow_dirty:
+                over = self._overflow_device()
+                self._dev["overflow"] = over
+                self.mirror_bytes_uploaded += over.nbytes
+        self._dirty_clusters.clear()
+        self._overflow_dirty = False
         return self._dev
 
     # -- the coarse quantizer (host side: centroids are tiny) -------------
@@ -188,18 +227,18 @@ class IVFIndex:
                 self.members[c, pos] = slot
                 self.fill[c] += 1
                 self._slot_pos[slot] = (c, pos)
+                self._dirty_clusters.add(c)
             else:
                 self._slot_pos[slot] = (-1, len(self.overflow))
                 self.overflow.append(slot)
+                self._overflow_dirty = True
             self.churn += 1
-        self._dev = None
         self.starved.clear()
 
     def remove_slots(self, slots) -> None:
         for s in slots:
             self._remove(int(s))
             self.churn += 1
-        self._dev = None
         self.starved.clear()
 
     def _remove(self, slot: int) -> None:
@@ -212,6 +251,7 @@ class IVFIndex:
             if pos < len(self.overflow):
                 self.overflow[pos] = last
                 self._slot_pos[last] = (-1, pos)
+            self._overflow_dirty = True
         else:                                # member table: swap-with-last
             last_pos = int(self.fill[c]) - 1
             last_slot = int(self.members[c, last_pos])
@@ -220,7 +260,7 @@ class IVFIndex:
             if pos != last_pos:
                 self.members[c, pos] = last_slot
                 self._slot_pos[last_slot] = (c, pos)
-        self._dev = None
+            self._dirty_clusters.add(c)
 
     def needs_rebuild(self) -> bool:
         """Drift rule: incremental churn past ``drift_rebuild_frac`` of the

@@ -163,3 +163,46 @@ def unified_query(store: Store, q: jax.Array, pred: Predicate, k: int,
         return filtered_topk(q, store["emb"], store["tenant"], store["updated_at"],
                              store["category"], store["acl"], pa, k)
     raise ValueError(f"unknown engine {engine!r}")
+
+
+#: Blocker predicate for padding a stacked (G, 4) predicate list to a pow2
+#: group count: tenant -3 matches no live row (live rows have tenant >= 0 and
+#: -3 is not the "any tenant" sentinel -2), so a padding group masks the
+#: whole arena and — since no real query row carries its group id — cannot
+#: perturb any real group's results.
+BLOCK_ALL = Predicate(tenant=-3)
+
+
+def stack_predicates(preds) -> jax.Array:
+    """Stack lowered predicates into the (G, 4) int32 array the grouped scan
+    consumes (each row is `Predicate.as_array()`, so the per-predicate
+    device cache is reused).
+
+    >>> stack_predicates([Predicate(), Predicate(tenant=3)]).shape
+    (2, 4)
+    """
+    return jnp.stack([p.as_array() for p in preds])
+
+
+def unified_query_grouped(store: Store, q: jax.Array, gids, preds, k: int,
+                          engine: str = "ref"):
+    """Grouped front door: ONE arena scan answers every predicate group.
+
+    q: (B, D) stacked query rows across ALL groups; gids: (B,) int32 group
+    id per row; preds: a list of G `Predicate`s (or a pre-stacked (G, 4)
+    int32 array). Per query row the result is exactly
+    ``unified_query(store, q[row], preds[gids[row]], k)`` — the fused scan
+    changes how many times the arena streams (once, not G times), never
+    what any row may see. Returns (scores (B, k), slots (B, k))."""
+    from repro.kernels.grouped_topk.ops import grouped_topk
+    pa = (stack_predicates(preds) if isinstance(preds, (list, tuple))
+          else jnp.asarray(preds, jnp.int32))
+    if engine == "ref":
+        use_kernel = False
+    elif engine == "pallas":
+        use_kernel = True
+    else:
+        raise ValueError(f"unknown grouped engine {engine!r}")
+    return grouped_topk(q, store["emb"], store["tenant"], store["updated_at"],
+                        store["category"], store["acl"], gids, pa, k,
+                        use_kernel=use_kernel)

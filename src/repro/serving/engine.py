@@ -63,7 +63,11 @@ class RAGEngine:
     each group's row count is padded to a power-of-two bucket so a varying
     request mix reuses a small set of compiled program shapes (front-door
     path: the RagDB's `shapes` cache; raw-store path: the engine's own).
-    `last_retrieval_device_calls` reports the grouped call count per batch.
+    Through the front door the exact-engine groups fuse further: groups
+    sharing (k, engine, route) run as ONE grouped_topk scan, so a
+    multi-tenant batch streams the arena once, not once per tenant.
+    `last_retrieval_device_calls` reports the call count per batch (1 when
+    the whole batch fused).
     """
 
     def __init__(self, store: Store | RagDB, cfg: tfm.TransformerConfig, params,
@@ -156,8 +160,9 @@ class RAGEngine:
         t0 = time.perf_counter()
         # 1) retrieval: predicates are server-built, and the batch is
         # predicate-group batched — requests sharing a predicate run as ONE
-        # device program over their stacked query rows, so the batch costs
-        # (unique predicate groups) device calls instead of B.
+        # device program over their stacked query rows, and (front-door
+        # path) exact-engine groups fuse into ONE grouped scan, so the
+        # batch streams the arena once instead of once per group.
         q = np.stack([r.query_emb for r in requests]).astype(np.float32)
         q /= np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-12)
         if self.db is not None:

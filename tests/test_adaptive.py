@@ -285,9 +285,9 @@ def test_cost_estimate_lands_in_plan_and_explain(rng):
 # ---------------------------------------------------------------------------
 
 PLAN_EXPLAIN_FIELDS = ["predicate:", "engine:", "route:", "batching:",
-                       "bucket:", "cost:"]
+                       "fusion:", "bucket:", "cost:"]
 DB_EXPLAIN_FIELDS = ["planner:", "shape cache:", "result cache:",
-                     "exec stats:", "ivf index:"]
+                     "exec stats:", "grouped scan:", "ivf index:"]
 
 
 def test_plan_explain_matches_documented_format(db_stack, rng):

@@ -4,9 +4,10 @@ Acceptance contract of the API redesign:
   * a builder-API query returns results bit-identical to the equivalent
     direct `unified_query_ref` call;
   * `explain()` reports the chosen engine and tier route;
-  * `RAGEngine.serve` issues exactly (unique predicate groups) retrieval
-    device calls per batch — counted by monkeypatching the executor's single
-    dispatch point;
+  * `RAGEngine.serve` through the front door fuses the batch's exact-engine
+    predicate groups into ONE grouped scan (the raw-store compat path still
+    issues one call per group) — counted by monkeypatching the executor's
+    two dispatch points;
   * tier routing decisions match the paper's §7.3 invariant.
 """
 import jax
@@ -121,14 +122,22 @@ def test_logical_from_predicate_roundtrip():
 
 
 def _count_calls(monkeypatch):
-    calls = {"n": 0}
+    """Counts both executor dispatch points: per-group scans
+    (`unified_query`) and fused grouped scans (`unified_query_grouped`)."""
+    calls = {"n": 0, "grouped": 0}
     real = executor_mod.unified_query
+    real_grouped = executor_mod.unified_query_grouped
 
     def counting(*args, **kwargs):
         calls["n"] += 1
         return real(*args, **kwargs)
 
+    def counting_grouped(*args, **kwargs):
+        calls["grouped"] += 1
+        return real_grouped(*args, **kwargs)
+
     monkeypatch.setattr(executor_mod, "unified_query", counting)
+    monkeypatch.setattr(executor_mod, "unified_query_grouped", counting_grouped)
     return calls
 
 
@@ -158,14 +167,22 @@ def test_serve_batches_by_predicate_group(db_stack, rng, monkeypatch,
     reqs = _requests(rng, ccfg, tenants)
     calls = _count_calls(monkeypatch)
     rows0 = db.stats.rows_scanned
+    fused0 = db.stats.fused_scans
     resps = engine.serve(reqs)
-    assert calls["n"] == 3, f"expected 3 grouped device calls, saw {calls['n']}"
-    assert engine.last_retrieval_device_calls == 3
+    arena = db.log.snapshot()["emb"].shape[0]
     if front_door:
-        # exact-scan regression guard by COUNT: each grouped call scans the
-        # whole arena exactly once — 3 groups, 3 full scans, nothing more
-        arena = db.log.snapshot()["emb"].shape[0]
-        assert db.stats.rows_scanned - rows0 == 3 * arena
+        # the 3 exact-engine groups share (k, engine, route) -> the planner
+        # fuses them into ONE grouped scan: 1 device call, and the arena is
+        # streamed ONCE (rows_scanned == N, not 3*N) — the bandwidth
+        # regression guard, by count
+        assert (calls["n"], calls["grouped"]) == (0, 1), calls
+        assert engine.last_retrieval_device_calls == 1
+        assert db.stats.rows_scanned - rows0 == arena
+        assert db.stats.fused_scans == fused0 + 1
+    else:
+        # raw-store compat path: still one per-group call each
+        assert (calls["n"], calls["grouped"]) == (3, 0), calls
+        assert engine.last_retrieval_device_calls == 3
     # grouped execution preserves per-request isolation and ordering
     tenant_of = np.asarray(corpus.tenant)
     for t, r in zip(tenants, resps):

@@ -314,3 +314,44 @@ def test_rebuild_epoch_invalidates_ivf_entries(rng):
     # exact-engine entries are epoch-independent and still hit
     ref = admin.search(q).limit(5).using("ref").run()
     assert admin.search(q).limit(5).using("ref").run().cached
+
+
+def test_device_mirror_patches_in_place(rng):
+    """IVF device-mirror granularity (ROADMAP item): a write patches only
+    the touched member-table rows on the next probe — upload bytes scale
+    with the write, not the (C, cap) table — and the patched mirror stays
+    equal to the host truth."""
+    from tests.test_core_store import make_batch
+    db, ccfg = _db(n_docs=3000, dim=16)
+    ix = db.index
+    admin = db.admin_session()
+    q = np.asarray(make_queries(ccfg, 1, seed=21))[0][0]
+    admin.search(q).limit(5).using("ivf").run()          # full upload
+    assert ix.mirror_uploads == 1 and ix.mirror_patches == 0
+    full_bytes = ix.mirror_bytes_uploaded
+    assert full_bytes >= ix.members.nbytes
+
+    db.ingest(make_batch(rng, 2, ccfg.dim, tenant=0, start_id=80_000))
+    admin.search(q + 0.01).limit(5).using("ivf").run()   # patched upload
+    patch_bytes = ix.mirror_bytes_uploaded - full_bytes
+    assert ix.mirror_uploads == 1, "a write must NOT re-upload the mirror"
+    assert ix.mirror_patches >= 1
+    assert 0 < patch_bytes <= 2 * ix.cluster_cap * 4 + 1024, (
+        f"patch uploaded {patch_bytes}B; expected <= the touched rows")
+    assert patch_bytes * 4 < ix.members.nbytes, "upload bytes must shrink"
+    # the patched mirror is the host truth, bit for bit
+    dev = ix.device_arrays()
+    assert np.array_equal(np.asarray(dev["members"]), ix.members)
+    over = np.asarray(dev["overflow"])
+    assert set(over[over >= 0].tolist()) == set(ix.overflow)
+
+    # a delete that touches a member row patches too (swap-with-last)
+    victim = int(np.asarray(db.log.snapshot()["doc_id"])[ix.members[
+        ix.members >= 0][0]])
+    before = ix.mirror_bytes_uploaded
+    db.delete([victim])
+    admin.search(q + 0.02).limit(5).using("ivf").run()
+    assert ix.mirror_uploads == 1
+    assert ix.mirror_bytes_uploaded - before < ix.members.nbytes
+    dev = ix.device_arrays()
+    assert np.array_equal(np.asarray(dev["members"]), ix.members)

@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""CI gate for the grouped-scan fusion win: compare a FRESH bench_latency
+`group_sweep` section against the COMMITTED one and fail on regression.
+
+Usage:
+    python tools/check_bench_regression.py FRESH.json [COMMITTED.json]
+        [--at-g 8] [--threshold 0.25] [--min-speedup 1.5]
+
+Checks, at the gated group count (default G=8, the PR's acceptance point):
+  1. fused p50 regression: fresh fused p50 must not exceed the committed
+     fused p50 by more than --threshold (default 25%). The comparison is
+     MACHINE-NORMALIZED by default: the fresh fused p50 is rescaled by
+     (committed looped p50 / fresh looped p50) before comparing, so a CI
+     runner that is uniformly slower (or faster) than the machine that
+     produced the committed file cancels out and only a fused-path-specific
+     slowdown trips the gate (--absolute restores the raw comparison);
+  2. the bandwidth invariant BY COUNT: the fresh fused scan streamed the
+     arena exactly once (fused_rows_scanned == arena_rows) while the loop
+     streamed it G times — a pruning regression fails regardless of timing;
+  3. the fused path still beats the per-group loop by --min-speedup (a slack
+     floor, not the paper-rig bar: CI machines are noisy, so the hard >= 3x
+     claim is asserted where it was measured, in results/bench_latency.json).
+
+Exit code 0 = pass, 1 = regression, 2 = malformed/missing input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_COMMITTED = os.path.join(os.path.dirname(__file__), "..", "results",
+                                 "bench_latency.json")
+
+
+def load_sweep(path: str) -> dict:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    sweep = payload.get("group_sweep")
+    if not sweep or "sweep" not in sweep:
+        print(f"error: {path} has no group_sweep section", file=sys.stderr)
+        sys.exit(2)
+    return sweep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly measured JSON "
+                    "(bench_latency --gsweep-only --out PATH)")
+    ap.add_argument("committed", nargs="?", default=DEFAULT_COMMITTED,
+                    help="baseline JSON (default: results/bench_latency.json)")
+    ap.add_argument("--at-g", type=int, default=8,
+                    help="group count to gate on (default 8)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fused-p50 regression vs the committed "
+                         "baseline (default 0.25 = 25%%)")
+    ap.add_argument("--min-speedup", type=float, default=1.5,
+                    help="fresh fused-vs-looped p50 floor (default 1.5)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw wall-clock instead of normalizing by "
+                         "the looped baseline (only meaningful when fresh "
+                         "and committed ran on the same machine)")
+    args = ap.parse_args(argv)
+
+    fresh = load_sweep(args.fresh)
+    committed = load_sweep(args.committed)
+    g = str(args.at_g)
+    for name, sweep in (("fresh", fresh), ("committed", committed)):
+        if g not in sweep["sweep"]:
+            print(f"error: {name} sweep has no G={g} row "
+                  f"(has {sorted(sweep['sweep'])})", file=sys.stderr)
+            return 2
+
+    f_row, c_row = fresh["sweep"][g], committed["sweep"][g]
+    f_p50 = f_row["fused_ms"]["p50"]
+    c_p50 = c_row["fused_ms"]["p50"]
+    speedup = f_row["speedup_p50"]
+    arena = fresh["arena_rows"]
+    ok = True
+
+    print(f"group_sweep gate at G={g} (B={fresh['batch']}, "
+          f"arena={arena} rows):")
+    if args.absolute:
+        cmp_p50, how = f_p50, "raw"
+    else:
+        # cancel uniform machine-speed differences via the looped baseline
+        machine = (c_row["looped_ms"]["p50"]
+                   / max(f_row["looped_ms"]["p50"], 1e-9))
+        cmp_p50 = f_p50 * machine
+        how = f"looped-normalized x{machine:.2f}"
+    ratio = cmp_p50 / max(c_p50, 1e-9)
+    print(f"  fused p50: fresh {f_p50:.2f}ms ({how}: {cmp_p50:.2f}ms) vs "
+          f"committed {c_p50:.2f}ms ({(ratio - 1) * 100:+.1f}%, threshold "
+          f"+{args.threshold * 100:.0f}%)")
+    if ratio > 1 + args.threshold:
+        print("  FAIL: fused p50 regressed past the threshold")
+        ok = False
+
+    print(f"  rows scanned: fused {f_row['fused_rows_scanned']} "
+          f"(arena {arena}), looped {f_row['looped_rows_scanned']} "
+          f"(expect {args.at_g * arena})")
+    if f_row["fused_rows_scanned"] != arena:
+        print("  FAIL: fused scan no longer streams the arena exactly once")
+        ok = False
+    if f_row["looped_rows_scanned"] != args.at_g * arena:
+        print("  FAIL: looped baseline row count is off — sweep is not "
+              "measuring G full scans")
+        ok = False
+
+    print(f"  fused-vs-looped speedup: {speedup:.2f}x "
+          f"(floor {args.min_speedup:.2f}x)")
+    if speedup < args.min_speedup:
+        print("  FAIL: fusion no longer pays for itself")
+        ok = False
+
+    print("PASS" if ok else "REGRESSION")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
