@@ -34,6 +34,19 @@ fused grouped_topk scan, at G in {1, 2, 4, 8, 16} on the 50k-doc arena —
 with `rows_scanned` recorded both ways, so the G*N -> N claim is auditable
 by count. `tools/check_bench_regression.py` gates CI on the G=8 point.
 Run with ``--gsweep-only --out PATH`` for a fresh comparison file.
+
+The `hybrid` section (PR 5) measures the lexical workload: fused one-pass
+dense+BM25 (`kernels.hybrid_score`) vs the split two-scan+host-merge
+baseline (`index.lexical.twoscan`) at N in {5k, 20k, 50k} — an "open" row
+(no predicate, generous pushdown baseline: isolates the pure fusion win)
+and a "composed" row (tenant+recency predicate, faithful Stack-A baseline
+with app-layer post-filter and the over-fetch retry ladder: the paper's
+crossover, reproduced for lexical+vector fusion) — plus keyword-anchored
+recall@10 hybrid vs dense-only through the full session path, and the
+planner's own engine choice for a match() query. The open fused curve
+joins the `cost_model` engines. `tools/check_bench_regression.py
+--hybrid-only` gates CI on the composed 50k point and the recall ordering.
+Run with ``--hybrid-only --out PATH`` for a fresh comparison file.
 """
 from __future__ import annotations
 
@@ -52,7 +65,12 @@ from repro.api.executor import (CompiledShapes, ExecStats, run_grouped,
                                 run_grouped_fused)
 from repro.core import Predicate, Principal, StoreConfig, unified_query
 from repro.core.ivf import ivf_query
-from repro.data.corpus import DAY_S, CorpusConfig, make_corpus, make_queries
+from repro.core.query import stack_predicates
+from repro.data.corpus import (DAY_S, CorpusConfig, make_corpus,
+                               make_keyword_queries, make_queries)
+from repro.index.lexical import LexicalConfig
+from repro.index.lexical.twoscan import two_scan_hybrid
+from repro.kernels.hybrid_score.ops import hybrid_score
 
 
 def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
@@ -110,7 +128,108 @@ def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
     out["cost_model"]["engines"]["ivf"] = out["ivf"]["cost_curve"]
     out["group_sweep"] = run_group_sweep(iters=max(iters // 4, 20),
                                          engine=engine, db=db, ccfg=ccfg)
+    out["hybrid"] = run_hybrid_section(iters=max(iters // 4, 20))
+    # the fused hybrid scan joins the measured cost model: the planner
+    # prices (and explain() annotates) match() plans from these curves
+    out["cost_model"]["engines"]["hybrid"] = out["hybrid"]["cost_curve"]
     save_result("bench_latency", out)
+    return out
+
+
+def run_hybrid_section(*, iters: int, k: int = 10, batch: int = 8,
+                       sizes=(5_000, 20_000, 50_000),
+                       n_recall: int = 24) -> dict:
+    """The lexical workload, measured: fused one-pass dense+BM25 vs the
+    split two-scan+host-merge baseline, per corpus size.
+
+    Two rows per size mirror the paper's Table-1 crossover:
+      * "open"     — no predicate; the baseline gets GENEROUS pushdown
+                     sidecars, so the gap is pure fusion overhead
+                     (2 scans + 2 rescore gathers + host merge vs 1 pass);
+      * "composed" — tenant+recency predicate; the baseline runs the
+                     faithful split pipeline (unfiltered sidecars,
+                     app-layer post-filter, over-fetch retry ladder) — the
+                     regime the hybrid engine exists for. The 50k row is
+                     the PR's acceptance bar (fused >= 1.5x) and the point
+                     `check_bench_regression.py --hybrid-only` gates.
+
+    Keyword-anchored recall@10 (hybrid vs dense-only, full session path)
+    and the planner's engine choice for a match() query are recorded per
+    size; the open fused curve is saved in `CostModel.from_bench` shape."""
+    out = {"k": k, "batch": batch, "n_recall": n_recall, "sizes": {},
+           "cost_curve": []}
+    for n_docs in sizes:
+        ccfg = CorpusConfig(n_docs=n_docs)
+        db, corpus, (ccfg, scfg) = build_ragdb(
+            ccfg, result_cache_size=0,
+            lexical_cfg=LexicalConfig(vocab_size=ccfg.vocab_size,
+                                      doc_terms=ccfg.doc_terms))
+        arena = scfg.capacity
+        q, qterms_list, relevant = make_keyword_queries(
+            ccfg, corpus, max(batch, n_recall), seed=9)
+        Q = q[:batch]
+        QT = np.asarray([[t[0]] for t in qterms_list[:batch]], np.int32)
+        snap = db.log.snapshot()
+        lex = db.lex.snapshot()
+        gids = np.zeros(batch, np.int32)
+        composed = Predicate(tenant=3, min_ts=ccfg.now_ts - 120 * DAY_S)
+        row = {"arena_rows": arena, "n_docs": n_docs}
+        for label, pred, pushdown in (("open", Predicate(), True),
+                                      ("composed", composed, False)):
+            preds = stack_predicates([pred])
+
+            def fused():
+                s, _ = hybrid_score(
+                    Q, snap["emb"], snap["tenant"], snap["updated_at"],
+                    snap["category"], snap["acl"], lex["terms"],
+                    lex["lexnorm"], lex["idf"], gids, preds, QT, k)
+                jax.block_until_ready(s)
+
+            def twoscan():
+                two_scan_hybrid(snap, lex, Q, QT, pred, k,
+                                pushdown=pushdown)
+
+            t_f = percentiles(timeit(fused, iters=iters))
+            t_t = percentiles(timeit(twoscan, iters=iters))
+            row[label] = {
+                "fused_ms": t_f, "twoscan_ms": t_t,
+                "baseline": "pushdown sidecars" if pushdown
+                            else "post-filter + retry ladder",
+                "speedup_p50": t_t["p50"] / max(t_f["p50"], 1e-9)}
+            print(f"hybrid: N={n_docs:6d} {label:9s} "
+                  f"fused p50={t_f['p50']:7.2f}ms  "
+                  f"two-scan p50={t_t['p50']:7.2f}ms  "
+                  f"{row[label]['speedup_p50']:4.2f}x")
+        # recall@10, full session path: dense-only vs hybrid on the
+        # keyword-anchored grid (the workload's reason to exist)
+        doc_ids = np.asarray(snap["doc_id"])
+        admin = db.admin_session()
+
+        def recall(match: bool) -> float:
+            total = 0.0
+            for i in range(n_recall):
+                b = admin.search(q[i])
+                if match:
+                    b = b.match(qterms_list[i])
+                res = b.limit(10).run()
+                got = {int(doc_ids[s]) for s in res.slots[0] if s >= 0}
+                rel = set(relevant[i].tolist())
+                total += len(got & rel) / min(10, len(rel))
+            return total / n_recall
+
+        row["recall_at_10"] = {"dense": recall(False),
+                               "hybrid": recall(True)}
+        plan = admin.search(q[0]).match(qterms_list[0]).limit(k).plan()
+        assert plan.engine == "hybrid", plan.engine
+        row["planner_engine"] = plan.engine
+        row["explain"] = plan.explain()
+        assert "fusion:    score mix" in row["explain"]
+        out["cost_curve"].append([arena, row["open"]["fused_ms"]["p50"]])
+        out["sizes"][str(n_docs)] = row
+        print(f"hybrid: N={n_docs} recall@10 dense="
+              f"{row['recall_at_10']['dense']:.3f} hybrid="
+              f"{row['recall_at_10']['hybrid']:.3f}  planner engine="
+              f"{plan.engine!r}")
     return out
 
 
@@ -424,13 +543,20 @@ def _main():
     ap.add_argument("--gsweep-only", action="store_true",
                     help="run only the group_sweep section (CI regression "
                          "gate); writes {'group_sweep': ...} to --out")
+    ap.add_argument("--hybrid-only", action="store_true",
+                    help="run only the hybrid section (CI regression "
+                         "gate); writes {'hybrid': ...} to --out")
     ap.add_argument("--iters", type=int, default=None)
     ap.add_argument("--gs", type=int, nargs="+", default=None,
                     help="with --gsweep-only: group counts to measure "
                          "(default 1 2 4 8 16; CI gates on 8 alone)")
+    ap.add_argument("--sizes", type=int, nargs="+", default=None,
+                    help="with --hybrid-only: corpus sizes to measure "
+                         "(default 50000 alone — the gated point)")
     ap.add_argument("--out", default=None,
-                    help="with --gsweep-only: output JSON path (default "
-                         "results/bench_latency.json is NOT touched)")
+                    help="with --gsweep-only/--hybrid-only: output JSON "
+                         "path (default results/bench_latency.json is NOT "
+                         "touched)")
     args = ap.parse_args()
     if args.gsweep_only:
         sweep = run_group_sweep(iters=args.iters or 20,
@@ -439,6 +565,15 @@ def _main():
         if args.out:
             with open(args.out, "w") as f:
                 json.dump({"group_sweep": sweep}, f, indent=1)
+            print(f"wrote {args.out}")
+        return
+    if args.hybrid_only:
+        section = run_hybrid_section(
+            iters=args.iters or 20,
+            sizes=tuple(args.sizes) if args.sizes else (50_000,))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"hybrid": section}, f, indent=1)
             print(f"wrote {args.out}")
         return
     run(**({"iters": args.iters} if args.iters else {}))

@@ -62,14 +62,22 @@ class ExecStats:
                                   # auditable savings
     fused_groups: int = 0         # predicate groups answered by fused scans
     fused_scans: int = 0          # fused grouped-scan programs launched
+    padded_groups: int = 0        # BLOCK_ALL blocker lanes launched for pow2
+                                  # group padding (k=0 semantics: asserted
+                                  # to allocate no result rows)
+    terms_scanned: int = 0        # postings lanes streamed by hybrid scans
+                                  # (N * doc_terms per one-pass scan) — the
+                                  # lexical bandwidth audit trail
 
 
 class CompiledShapes:
     """Small LRU tracking the resident compiled retrieval-program shapes.
 
     A shape is ``(engine, bucket_rows, k)`` — fused grouped scans append
-    their pow2-padded group count, since the (G, 4) predicate block is part
-    of the program shape. Bucketed batching guarantees that any group whose
+    their pow2-padded group count (the (G, 4) predicate block is part of
+    the program shape), and hybrid scans additionally their score-mix
+    identity (fusion mode + query-term-count bucket + weights, which bake
+    into the compiled program). Bucketed batching guarantees that any group whose
     shape is in this set reuses the already-compiled program (XLA caches by
     shape). `touch()` returns True on a hit and records the miss otherwise;
     evicting past ``cap`` models a bounded compile cache, so a shape falling
@@ -98,8 +106,8 @@ class CompiledShapes:
         return len(self._lru)
 
     def touch(self, engine: str, bucket: int, k: int,
-              groups: int | None = None) -> bool:
-        key = (engine, bucket, k, groups)
+              groups: int | None = None, lex=None) -> bool:
+        key = (engine, bucket, k, groups, lex)
         if key in self._lru:
             self.hits += 1
             self._lru.move_to_end(key)
@@ -126,11 +134,18 @@ class _Hot:
     """One in-flight hot-tier device program: launched, NOT yet synced.
     ``rescan`` carries the ivf completeness-net context so the under-fill
     check (which must read results) happens at finish time, after every
-    other launch went out."""
+    other launch went out. ``pad_check`` is the real row count of a fused
+    grouped launch whose padding rows point at a BLOCK_ALL blocker lane:
+    finish asserts those rows allocated no result rows (k=0 semantics).
+    ``extra`` carries the second per-signal list of an unfused-rrf hybrid
+    launch (synced into ``extra_np`` at finish)."""
     s: jax.Array
     sl: jax.Array
     rows: int                     # arena rows this program scored
     rescan: tuple | None = None   # (store, q, pred, k, exact_engine, nv, ivf)
+    pad_check: int | None = None  # first padded (blocker-lane) row index
+    extra: tuple | None = None    # (lex_s, lex_i) futures (hybrid rrf lists)
+    extra_np: tuple | None = None # synced extra
 
 
 def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
@@ -182,6 +197,16 @@ def _finish_hot(hot: _Hot) -> tuple[np.ndarray, np.ndarray]:
     to ONE exact rescan — completeness beats speed, and the extra arena
     scan shows up in `hot.rows` so the audit trail stays honest."""
     s, sl = jax.device_get((hot.s, hot.sl))
+    if hot.extra is not None:
+        hot.extra_np = tuple(np.asarray(a) for a in jax.device_get(hot.extra))
+        if hot.pad_check is not None:
+            assert (hot.extra_np[1][hot.pad_check:] == -1).all(), (
+                "blocker-lane padding rows allocated result rows (lex list)")
+    if hot.pad_check is not None and sl.shape[0] > hot.pad_check:
+        # padded rows point at a BLOCK_ALL blocker lane: their k-lists must
+        # be empty — a hit here means a padding lane allocated result rows
+        assert (sl[hot.pad_check:] == -1).all(), (
+            "blocker-lane padding rows allocated result rows")
     if hot.rescan is not None:
         store, q, pred, k, exact, nv, ivf = hot.rescan
         if bool((sl[:nv] < 0).any()):
@@ -206,29 +231,95 @@ def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
     return s, sl, hot.rows
 
 
+def _pad_group_launch(q: np.ndarray, gids: np.ndarray,
+                      preds: list[Predicate], k: int, engine: str, *,
+                      stats: ExecStats | None,
+                      shapes: CompiledShapes | None, lex=None):
+    """Shared bucket/blocker padding for fused grouped launches.
+
+    Pads the predicate stack to a pow2 group count with `BLOCK_ALL` rows
+    and (when ``shapes`` tracks program-shape reuse) the query rows to
+    their pow2 bucket. Padding query rows point at a BLOCKER lane — never
+    a real group — so a padded lane carries k=0 semantics: it can match no
+    row, allocates no result rows (asserted via `_Hot.pad_check` at
+    finish), and cannot waste a real group's predicate on dead queries.
+    When row padding is needed and every lane is real, one extra blocker
+    bucket is opened to hold the padding rows.
+
+    Returns (q, gids, preds, n_valid) with every array launch-ready."""
+    n_valid = q.shape[0]
+    g_real = len(preds)
+    bucket = bucket_rows(n_valid) if shapes is not None else n_valid
+    g_bucket = bucket_rows(g_real)
+    if bucket > n_valid and g_bucket == g_real:
+        g_bucket = bucket_rows(g_real + 1)   # open a lane for the blocker
+    preds = list(preds) + [BLOCK_ALL] * (g_bucket - g_real)
+    if stats is not None:
+        stats.padded_groups += g_bucket - g_real
+    if shapes is not None:
+        shapes.touch(engine, bucket, k, groups=g_bucket, lex=lex)
+        if stats is not None:
+            stats.padded_rows += bucket - n_valid
+        q = _pad_rows(q, bucket)
+        gids = np.concatenate(
+            [gids, np.full(bucket - n_valid, g_real, np.int32)])
+    return q, gids, preds, n_valid
+
+
 def _launch_grouped(store: Store, q: np.ndarray, gids: np.ndarray,
                     preds: list[Predicate], k: int, engine: str, *,
                     stats: ExecStats | None = None,
                     shapes: CompiledShapes | None = None) -> _Hot:
     """Launch ONE fused grouped scan answering every predicate group in
-    ``preds``. Pads query rows to their pow2 bucket (group id 0 — sliced
-    off) and the predicate stack to a pow2 group count with `BLOCK_ALL`
-    rows, so a varying group mix reuses a small set of compiled shapes."""
-    n_valid = q.shape[0]
-    g_real = len(preds)
-    g_bucket = bucket_rows(g_real)
-    preds = list(preds) + [BLOCK_ALL] * (g_bucket - g_real)
-    if shapes is not None:
-        bucket = bucket_rows(n_valid)
-        shapes.touch(engine, bucket, k, groups=g_bucket)
-        if stats is not None:
-            stats.padded_rows += bucket - n_valid
-        q = _pad_rows(q, bucket)
-        gids = np.concatenate(
-            [gids, np.zeros(bucket - n_valid, np.int32)])
+    ``preds``. Pads query rows to their pow2 bucket (pointed at a blocker
+    lane — sliced off AND asserted empty) and the predicate stack to a
+    pow2 group count with `BLOCK_ALL` rows, so a varying group mix reuses
+    a small set of compiled shapes."""
+    q, gids, preds, n_valid = _pad_group_launch(
+        q, gids, preds, k, engine, stats=stats, shapes=shapes)
     s, sl = unified_query_grouped(store, jnp.asarray(q), jnp.asarray(gids),
                                   stack_predicates(preds), k, engine=engine)
-    return _Hot(s, sl, store["emb"].shape[0])
+    return _Hot(s, sl, store["emb"].shape[0], pad_check=n_valid)
+
+
+def _launch_hybrid(store: Store, lex_snap: dict, q: np.ndarray,
+                   gids: np.ndarray, preds: list[Predicate],
+                   qterms: np.ndarray, k: int, *, mode: str,
+                   w_dense: float, w_lex: float, rrf_c: float,
+                   lists: bool = False,
+                   stats: ExecStats | None = None,
+                   shapes: CompiledShapes | None = None,
+                   lex_key=None) -> _Hot:
+    """Launch ONE fused hybrid dense+BM25 scan answering every predicate
+    group in ``preds`` — the hybrid engine's only dispatch shape (a single
+    group is G=1). ``lex_snap`` is `LexicalArena.snapshot()`; ``qterms``
+    is (B, QT) int32 per-row query terms, already bucketed to the plan's
+    query-term-count bucket. ``lists=True`` (rrf + tiered route) keeps the
+    two per-signal lists unfused: dense rides `_Hot.s/.sl`, bm25 rides
+    `_Hot.extra`, and the finish phase rank-fuses after the tier merges."""
+    from repro.kernels.hybrid_score.ops import hybrid_score
+    q, gids, preds, n_valid = _pad_group_launch(
+        q, gids, preds, k, "hybrid", stats=stats, shapes=shapes, lex=lex_key)
+    if q.shape[0] != qterms.shape[0]:
+        qterms = np.concatenate(
+            [qterms, np.full((q.shape[0] - qterms.shape[0], qterms.shape[1]),
+                             -1, np.int32)])
+    out = hybrid_score(jnp.asarray(q), store["emb"], store["tenant"],
+                       store["updated_at"], store["category"], store["acl"],
+                       lex_snap["terms"], lex_snap["lexnorm"],
+                       lex_snap["idf"], jnp.asarray(gids),
+                       stack_predicates(preds), jnp.asarray(qterms), k,
+                       mode=mode, w_dense=w_dense, w_lex=w_lex, rrf_c=rrf_c,
+                       lists=lists)
+    n_arena = store["emb"].shape[0]
+    if stats is not None:
+        stats.terms_scanned += n_arena * int(lex_snap["terms"].shape[1])
+    if lists:
+        d_s, d_i, l_s, l_i = out
+        return _Hot(d_s, d_i, n_arena, pad_check=n_valid,
+                    extra=(l_s, l_i))
+    s, sl = out
+    return _Hot(s, sl, n_arena, pad_check=n_valid)
 
 
 def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
@@ -345,6 +436,38 @@ def merge_tiers(hs, hi, ws, wi, k: int):
     return gather(scores), gather(slots), gather(tiers)
 
 
+def _rrf_merge_np(ds, di, dt, ls, li, lt, k: int, c: float):
+    """Host-side reciprocal-rank fusion of two TIER-MERGED per-signal
+    k-lists (numpy twin of kernels.hybrid_score.ref.rrf_fuse, with tier
+    tags carried through): candidates are identified by (slot, tier) — the
+    hot and warm tiers are separate arenas, so a bare slot number is
+    ambiguous across the merge. A candidate in both lists is represented
+    by its dense-list copy; ties break dense-first then rank order,
+    deterministically (stable argsort over the [dense | lex] concat)."""
+    neg = np.float32(np.finfo(np.float32).min)
+    kd, kl = di.shape[1], li.shape[1]
+    rd = (1.0 / (c + np.arange(1, kd + 1))).astype(np.float32)
+    rl = (1.0 / (c + np.arange(1, kl + 1))).astype(np.float32)
+    d_valid = di >= 0
+    l_valid = li >= 0
+    cross = ((di[:, :, None] == li[:, None, :])
+             & (dt[:, :, None] == lt[:, None, :])
+             & d_valid[:, :, None] & l_valid[:, None, :])
+    d_score = (np.where(d_valid, rd[None, :], neg)
+               + (cross * rl[None, None, :]).sum(axis=2, dtype=np.float32))
+    in_dense = cross.any(axis=1)
+    l_score = np.where(l_valid & ~in_dense, rl[None, :], neg)
+    all_s = np.concatenate([d_score, l_score], axis=1)
+    all_i = np.concatenate([di, li], axis=1)
+    all_t = np.concatenate([dt, lt], axis=1)
+    order = np.argsort(-all_s, axis=1, kind="stable")[:, :k]
+    gather = lambda a: np.take_along_axis(a, order, axis=1)
+    s, sl, tr = gather(all_s), gather(all_i), gather(all_t)
+    live = s > neg
+    return (np.where(live, s, neg), np.where(live, sl, -1),
+            np.where(live, tr, TIER_HOT))
+
+
 def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
                  k: int, *, engine: str = "ref", probe_warm: bool = False,
                  sharded_fn=None, ivf=None, nprobe=None,
@@ -391,24 +514,40 @@ def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
     return merge_tiers(hs[:n_logical], hi[:n_logical], ws, wi, k)
 
 
+def _qterms_rows(row_plans, idxs, qt_bucket: int) -> np.ndarray:
+    """Per-row query-term matrix for a hybrid dispatch: row i's plan
+    supplies its lowered match() ids, padded with -1 to the unit's
+    query-term-count bucket (part of the fuse key, so every member fits)."""
+    qt = np.full((len(idxs), qt_bucket), -1, np.int32)
+    for r, i in enumerate(idxs):
+        t = row_plans[i].logical.match_terms or ()
+        qt[r, :len(t)] = t
+    return qt
+
+
 def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                   sharded_fn=None, stats: ExecStats | None = None,
                   shapes: CompiledShapes | None = None, index=None,
-                  planner_cfg=None):
+                  planner_cfg=None, lex=None):
     """Batched execution of compiled plans, in three async phases:
 
       1. LAUNCH — group plans by `group_key`, hand the distinct groups to
          `planner.fuse_batch` (exact-engine groups sharing a fuse key
-         collapse into one grouped scan), and launch EVERY dispatch unit's
-         hot device program without syncing;
+         collapse into one grouped scan; hybrid groups sharing a score mix
+         collapse into one fused dense+BM25 scan), and launch EVERY
+         dispatch unit's hot device program without syncing;
       2. WARM — with all hot scans in flight, issue the warm-tier probes
-         for every 'hot+warm' group (per member predicate, pushed down);
+         for every 'hot+warm' group (per member predicate, pushed down —
+         hybrid groups push the lexical clause down too);
       3. FINISH — first `device_get` happens here: sync each unit, run any
-         ivf completeness rescans, merge tiers, scatter into row order.
+         ivf completeness rescans, merge tiers (rrf-mode hybrid merges per
+         SIGNAL across tiers, then rank-fuses), scatter into row order.
 
     ``index`` is the RagDB's IVFIndex, consumed by groups whose plan chose
-    engine 'ivf'; ``planner_cfg`` supplies the fusion rule's knobs and cost
-    model (None = planner defaults, fusion on at >= 2 groups).
+    engine 'ivf'; ``lex`` the RagDB's hot-tier `LexicalArena`, consumed by
+    engine-'hybrid' groups; ``planner_cfg`` supplies the fusion rule's
+    knobs and cost model (None = planner defaults, fusion on at >= 2
+    groups).
 
     Every plan must carry its query rows (`logical.q`, shape (B_i, D)).
     Returns (scores (B, k), slots (B, k), tiers (B, k)) with B = total query
@@ -445,7 +584,30 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
     inflight = []
     for unit in units:
         member_idxs = [groups[p.group_key] for p in unit.plans]
-        if unit.fused:
+        rep = unit.plans[0]
+        if rep.engine == "hybrid":
+            # hybrid always dispatches through the grouped fused scan (a
+            # single predicate group is simply G=1): ONE pass computes
+            # dense + BM25 + predicate masks for every member group
+            if lex is None:
+                raise ValueError("engine='hybrid' requires a lexical arena "
+                                 "— construct the RagDB with lexical_cfg")
+            idxs = [i for m in member_idxs for i in m]
+            gids = np.concatenate(
+                [np.full(len(m), g, np.int32)
+                 for g, m in enumerate(member_idxs)])
+            mode, qt_bucket, w_d, w_l = rep.lex
+            hot = _launch_hybrid(
+                hot_store, lex.snapshot(), q_all[np.asarray(idxs)], gids,
+                [p.pred for p in unit.plans],
+                _qterms_rows(row_plans, idxs, qt_bucket), k, mode=mode,
+                w_dense=w_d, w_lex=w_l, rrf_c=lex.cfg.rrf_c,
+                lists=(mode == "rrf" and rep.route == "hot+warm"),
+                stats=stats, shapes=shapes, lex_key=rep.lex)
+            if stats is not None and unit.fused:
+                stats.fused_groups += len(unit.plans)
+                stats.fused_scans += 1
+        elif unit.fused:
             idxs = [i for m in member_idxs for i in m]
             gids = np.concatenate(
                 [np.full(len(m), g, np.int32)
@@ -487,12 +649,27 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
         probes = []
         for plan, m in zip(unit.plans, member_idxs):
             rt0 = warm.stats.round_trips
-            ws, wi = warm.query(q_all[np.asarray(m)], plan.pred, k,
-                                pushdown=True)
+            if plan.engine == "hybrid":
+                # warm-tier LEXICAL pushdown: predicate AND query terms
+                # travel into the warm scan — one round trip, and the
+                # warm rows are scored by the same fused formula (global
+                # idf/avgdl), so the tier merge compares like with like
+                mode, qt_bucket, w_d, w_l = plan.lex
+                res = warm.query_hybrid(
+                    q_all[np.asarray(m)],
+                    _qterms_rows(row_plans, m, qt_bucket), plan.pred, k,
+                    mode=mode, w_dense=w_d, w_lex=w_l,
+                    rrf_c=lex.cfg.rrf_c, lists=(mode == "rrf"))
+                if stats is not None and warm.lex is not None:
+                    stats.terms_scanned += (warm.cfg.capacity
+                                            * warm.lex.cfg.doc_terms)
+                probes.append(res)
+            else:
+                probes.append(warm.query(q_all[np.asarray(m)], plan.pred, k,
+                                         pushdown=True))
             if stats is not None:
                 stats.device_calls += warm.stats.round_trips - rt0
                 stats.warm_queries += len(m)
-            probes.append((ws, wi))
         warm_results.append(probes)
 
     # -- phase 3: first device_get, tier merges, scatter -----------------
@@ -509,6 +686,18 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
             if probes is None:
                 s_m, sl_m = hs[span], hi[span]
                 t_m = np.full_like(sl_m, TIER_HOT)
+            elif hot.extra_np is not None:
+                # rrf hybrid across tiers: merge per SIGNAL first (hot and
+                # warm dense lists into one, hot and warm bm25 lists into
+                # one), then rank-fuse — ranks are only meaningful over the
+                # complete per-signal candidate list
+                w_ds, w_di, w_ls, w_li = probes[gi]
+                ds, di, dt = merge_tiers(hs[span], hi[span], w_ds, w_di, k)
+                h_ls, h_li = hot.extra_np
+                ls2, li2, lt2 = merge_tiers(h_ls[span], h_li[span],
+                                            w_ls, w_li, k)
+                s_m, sl_m, t_m = _rrf_merge_np(ds, di, dt, ls2, li2, lt2, k,
+                                               lex.cfg.rrf_c)
             else:
                 ws, wi = probes[gi]
                 s_m, sl_m, t_m = merge_tiers(hs[span], hi[span], ws, wi, k)

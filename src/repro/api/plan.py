@@ -52,6 +52,10 @@ class LogicalPlan:
     categories: tuple[int, ...] | None = None   # in_categories()
     k: int = 10                       # limit()
     engine: str | None = None         # using(); None = planner's choice
+    match_terms: tuple[int, ...] | None = None  # match(): lowered term ids
+    fusion: str = "wsum"              # fuse(): "wsum" | "rrf" score mix
+    w_dense: float = 1.0              # fuse(): weighted-sum dense weight
+    w_lex: float = 1.0                # fuse(): weighted-sum BM25 weight
     q: np.ndarray | None = dataclasses.field(
         default=None, compare=False, hash=False, repr=False)
 
@@ -97,6 +101,7 @@ class PhysicalPlan:
     logical: LogicalPlan
     pred: Predicate                   # lowered clause set (the kernel contract)
     engine: str                       # "ref" | "pallas" | "sharded" | "ivf"
+                                      # | "hybrid"
     engine_reason: str
     route: str                        # "hot" | "hot+warm"
     route_reason: str
@@ -107,6 +112,9 @@ class PhysicalPlan:
     nprobe: int | None = None         # ivf engine: clusters probed per query
     ivf_est: tuple | None = None      # ivf engine: (n_clusters, cluster_cap,
                                       # est candidate rows scanned per probe)
+    lex: tuple | None = None          # hybrid engine: (fusion mode,
+                                      # query-term-count bucket, w_dense,
+                                      # w_lex) — the score-mix identity
 
     @property
     def group_key(self) -> tuple:
@@ -116,25 +124,32 @@ class PhysicalPlan:
         (e.g. in_categories(range(32)) == no category clause) yet route
         differently, and grouping them would apply one plan's tiers to the
         other's results. ``nprobe`` rides along so probe depths never mix
-        inside one ivf group."""
-        return (self.pred, self.logical.k, self.engine, self.route, self.nprobe)
+        inside one ivf group, and ``lex`` (fusion mode + query-term-count
+        bucket + weights) so hybrid groups only ever stack rows whose
+        compiled shape AND score semantics agree — the actual term ids are
+        per-row data, exactly like the query embedding."""
+        return (self.pred, self.logical.k, self.engine, self.route,
+                self.nprobe, self.lex)
 
     @property
     def fusable(self) -> bool:
-        """Whether this plan's scan can join a fused grouped scan. Only the
-        exact full-arena engines qualify: they stream the same rows under
-        different predicates, so G of them collapse into one
-        `grouped_topk` program. ivf scans per-group candidate sets and
-        sharded owns its own collective — both stay on their engines."""
-        return self.engine in ("ref", "pallas")
+        """Whether this plan's scan can join a fused grouped scan. The
+        exact full-arena engines qualify — including "hybrid", whose kernel
+        takes the same (G, 4) stacked predicates + per-row group ids as
+        grouped_topk — because they stream the same rows under different
+        predicates, so G of them collapse into one program. ivf scans
+        per-group candidate sets and sharded owns its own collective —
+        both stay on their engines."""
+        return self.engine in ("ref", "pallas", "hybrid")
 
     @property
     def fuse_key(self) -> tuple:
         """Distinct predicate groups sharing this key are candidates for ONE
         fused grouped scan (planner.fuse_batch): same LIMIT k, same engine,
-        same tier route — the predicates themselves are what the grouped
-        kernel keeps apart."""
-        return (self.logical.k, self.engine, self.route)
+        same tier route, same score mix (``lex`` — None for dense engines,
+        so dense and hybrid groups never fuse together) — the predicates
+        themselves are what the grouped kernel keeps apart."""
+        return (self.logical.k, self.engine, self.route, self.lex)
 
     def explain(self) -> str:
         lp = self.logical
@@ -147,6 +162,8 @@ class PhysicalPlan:
             clauses.append(f"category IN {set(lp.categories)}")
         if lp.acl_bits != ALL_BITS:
             clauses.append(f"acl & {lp.acl_bits:#x}")
+        if lp.match_terms is not None:
+            clauses.append(f"match({len(lp.match_terms)} terms)")
         rows = 1 if lp.q is None else int(np.atleast_2d(lp.q).shape[0])
         if self.est_cost_ms is not None:
             cost = f"~{self.est_cost_ms:.3f} ms/query est (measured curves)"
@@ -168,7 +185,15 @@ class PhysicalPlan:
             f"  route:     {self.route:8s} ({self.route_reason})",
             f"  batching:  predicate-group key {self.group_key!r}",
         ]
-        if self.fusable:
+        if self.engine == "hybrid" and self.lex is not None:
+            mode, qt_bucket, w_d, w_l = self.lex
+            mix = (f"wsum({w_d:g}*dense + {w_l:g}*bm25)" if mode == "wsum"
+                   else "rrf(dense-rank, bm25-rank)")
+            lines.append(
+                f"  fusion:    score mix {mix} over "
+                f"{len(lp.match_terms or ())} term(s) -> bucket {qt_bucket}; "
+                f"groups sharing fuse key scan once")
+        elif self.fusable:
             lines.append(
                 f"  fusion:    eligible — groups sharing fuse key "
                 f"{self.fuse_key!r} scan once")

@@ -3,7 +3,11 @@
 Compilation is deterministic and fully reported by ``explain()``.
 
 Engine selection — cost-based when measurements exist, threshold fallback
-otherwise:
+otherwise. One clause overrides the contest: a match() clause compiles to
+the "hybrid" engine unconditionally (and its absence makes "hybrid"
+unreachable) — only that engine scores the lexical signal, so routing a
+match() query anywhere else would silently change what the query MEANS,
+and the planner refuses rather than drop a clause:
   * with a `CostModel` loaded into `PlannerConfig` (fitted from
     ``results/bench_latency.json`` by ``benchmarks/bench_latency.py``), the
     planner estimates per-query latency for every *available* engine (ref
@@ -49,7 +53,8 @@ import os
 import jax
 import numpy as np
 
-from repro.api.plan import ALL_BITS, ANY_TENANT, LogicalPlan, PhysicalPlan
+from repro.api.plan import (ALL_BITS, ANY_TENANT, LogicalPlan, PhysicalPlan,
+                            bucket_rows)
 
 #: default location bench_latency writes its measurements to (cwd-relative,
 #: i.e. resolved from the repo root where benchmarks are run).
@@ -220,7 +225,7 @@ def fuse_batch(plans, *, cfg: PlannerConfig = PlannerConfig()) -> list[FusedGrou
                     f"{gsz} group(s) share fuse key {p.fuse_key!r} "
                     f"< fuse_min_groups={cfg.fuse_min_groups}"))
             continue
-        k, engine, route = group[0].fuse_key
+        k, engine, route, _lex = group[0].fuse_key
         n_rows = group[0].n_rows
         est = (cfg.cost_model.estimate_ms(engine, n_rows)
                if cfg.cost_model is not None else None)
@@ -272,13 +277,17 @@ def ivf_blocked_reason(logical: LogicalPlan) -> str | None:
 def choose_engine(logical: LogicalPlan, *, n_rows: int,
                   cfg: PlannerConfig = PlannerConfig(),
                   has_mesh: bool = False,
-                  has_index: bool = False) -> tuple[str, str]:
+                  has_index: bool = False,
+                  has_lex: bool = False) -> tuple[str, str]:
     """Pick the execution engine and an auditable reason string.
 
-    An explicit ``.using()`` hint always wins; then the cost model (if every
-    candidate engine has a measured curve); then the static thresholds. The
-    selectivity guard removes "ivf" from the candidates for constrained
-    plans (see `ivf_blocked_reason`) — the reason string records the skip.
+    A match() clause short-circuits to "hybrid" (the only engine that
+    scores the lexical signal; anything else would silently drop the
+    clause). Otherwise an explicit ``.using()`` hint wins; then the cost
+    model (if every candidate engine has a measured curve); then the static
+    thresholds. The selectivity guard removes "ivf" from the candidates for
+    constrained plans (see `ivf_blocked_reason`) — the reason string
+    records the skip.
 
     >>> eng, why = choose_engine(LogicalPlan(k=5), n_rows=512)
     >>> eng
@@ -298,7 +307,35 @@ def choose_engine(logical: LogicalPlan, *, n_rows: int,
     ...                          has_index=True)
     >>> eng, "ivf skipped" in why
     ('ref', True)
+    >>> choose_engine(LogicalPlan(match_terms=(3, 7), k=5), n_rows=512,
+    ...               has_lex=True)[0]
+    'hybrid'
     """
+    # a match() clause is a CORRECTNESS requirement, not a speed choice:
+    # only the hybrid engine scores the lexical signal, so every other
+    # engine would silently drop the clause — the planner refuses instead
+    if logical.match_terms is not None:
+        if not has_lex:
+            raise ValueError("match() requires a lexical arena — construct "
+                             "the RagDB with lexical_cfg")
+        if logical.engine not in (None, "hybrid"):
+            raise ValueError(
+                f"a match() query must run on the hybrid engine, "
+                f"not .using({logical.engine!r}) — drop the hint or the "
+                f"match() clause")
+        reason = "match() clause — fused dense+BM25 one-pass scan"
+        cm = cfg.cost_model
+        est = cm.estimate_ms("hybrid", n_rows) if cm is not None else None
+        if est is not None:
+            reason += f" (cost model: ~{est:.2f}ms)"
+        return "hybrid", reason
+    if logical.engine == "hybrid":
+        raise ValueError("engine='hybrid' requires a match() clause — "
+                         "there is no lexical signal to fuse")
+    if (logical.fusion, logical.w_dense, logical.w_lex) != ("wsum", 1.0, 1.0):
+        raise ValueError("fuse() requires a match() clause — without one "
+                         "there is no lexical signal to mix, and silently "
+                         "ignoring the knobs would misreport the ranking")
     if logical.engine is not None:
         return logical.engine, "caller hint (.using())"
     cands = _candidate_engines(has_mesh, has_index)
@@ -328,10 +365,14 @@ def choose_engine(logical: LogicalPlan, *, n_rows: int,
 
 def choose_route(logical: LogicalPlan, *, hot_window_s: int, now_ts: int,
                  warm_rows: int,
-                 cost_model: CostModel | None = None) -> tuple[str, str]:
+                 cost_model: CostModel | None = None,
+                 warm_lex: bool = False) -> tuple[str, str]:
     """Tier routing (paper §7.3). Semantics-driven — the warm probe runs
     exactly when it could contribute rows; the cost model only annotates the
-    reason with the probe's measured price.
+    reason with the probe's measured price. A match() query can only spill
+    warm when the warm tier carries lexical lanes (``warm_lex``) — probing
+    a lanes-less warm store would score its rows dense-only, silently
+    changing the clause's meaning mid-merge.
 
     >>> choose_route(LogicalPlan(tenant=1, min_ts=950, k=3),
     ...              hot_window_s=100, now_ts=1000, warm_rows=10)[0]
@@ -342,9 +383,14 @@ def choose_route(logical: LogicalPlan, *, hot_window_s: int, now_ts: int,
     >>> choose_route(LogicalPlan(k=3), hot_window_s=100, now_ts=1000,
     ...              warm_rows=0)
     ('hot', 'warm tier empty')
+    >>> choose_route(LogicalPlan(k=3, match_terms=(5,)), hot_window_s=100,
+    ...              now_ts=1000, warm_rows=10)
+    ('hot', 'warm tier has no lexical lanes — hybrid stays hot')
     """
     if warm_rows == 0:
         return "hot", "warm tier empty"
+    if logical.match_terms is not None and not warm_lex:
+        return "hot", "warm tier has no lexical lanes — hybrid stays hot"
     recent_only = logical.min_ts >= now_ts - hot_window_s
     if logical.constrained and recent_only:
         return "hot", "constrained query within the hot window"
@@ -357,21 +403,38 @@ def choose_route(logical: LogicalPlan, *, hot_window_s: int, now_ts: int,
 def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
                  now_ts: int, warm_rows: int,
                  cfg: PlannerConfig = PlannerConfig(),
-                 has_mesh: bool = False, index=None) -> PhysicalPlan:
+                 has_mesh: bool = False, index=None,
+                 lex=None, warm_lex: bool = False) -> PhysicalPlan:
     """Compile WHAT (LogicalPlan) into HOW (PhysicalPlan): engine + route +
     the predicate-group batching key, with the cost estimate attached so
     ``explain()`` can render it. ``index`` is the RagDB's `IVFIndex` (or
     None): its presence adds "ivf" to the candidate engines, and ivf plans
-    carry nprobe + the candidate-row estimate for explain()."""
+    carry nprobe + the candidate-row estimate for explain(). ``lex`` is the
+    hot tier's `LexicalArena` (or None): its presence admits match()
+    clauses, which compile to the "hybrid" engine with the score-mix
+    identity (fusion mode, query-term-count bucket, weights) stamped into
+    the group key; ``warm_lex`` says whether the warm tier carries lanes
+    (hybrid plans only spill warm when it does)."""
     engine, engine_reason = choose_engine(logical, n_rows=n_rows, cfg=cfg,
                                           has_mesh=has_mesh,
-                                          has_index=index is not None)
+                                          has_index=index is not None,
+                                          has_lex=lex is not None)
     route, route_reason = choose_route(logical, hot_window_s=hot_window_s,
                                        now_ts=now_ts, warm_rows=warm_rows,
-                                       cost_model=cfg.cost_model)
+                                       cost_model=cfg.cost_model,
+                                       warm_lex=warm_lex)
     est = (cfg.cost_model.estimate_ms(engine, n_rows)
            if cfg.cost_model is not None else None)
-    nprobe = ivf_est = None
+    nprobe = ivf_est = lex_key = None
+    if engine == "hybrid":
+        qt_bucket = bucket_rows(len(logical.match_terms))
+        # rrf ranks ignore the weights — normalize them out of the identity
+        # so rrf groups differing only in unused weights still fuse
+        if logical.fusion == "wsum":
+            lex_key = ("wsum", qt_bucket, float(logical.w_dense),
+                       float(logical.w_lex))
+        else:
+            lex_key = ("rrf", qt_bucket, 1.0, 1.0)
     if engine == "ivf":
         if index is None:
             raise ValueError("engine='ivf' requires a built index — "
@@ -386,4 +449,4 @@ def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
                         est_cost_ms=est,
                         cost_source=("measured" if est is not None
                                      else "static-thresholds"),
-                        nprobe=nprobe, ivf_est=ivf_est)
+                        nprobe=nprobe, ivf_est=ivf_est, lex=lex_key)

@@ -44,6 +44,7 @@ from repro.core.router import TieredRouter
 from repro.core.store import DocBatch, StoreConfig
 from repro.core.tenancy import Principal, TenantRegistry, category_mask
 from repro.core.transactions import TransactionLog
+from repro.index.lexical import LexicalArena, LexicalConfig
 
 _FOREVER = (1 << 31) - 1     # hot window that never expires (single-tier mode)
 
@@ -142,7 +143,8 @@ class RagDB:
                  hot_window_s: int | None = None, now_ts: int = 0,
                  planner_cfg: PlannerConfig = PlannerConfig(),
                  mesh=None, shard_axes=None,
-                 result_cache_size: int = 256, shape_cache_size: int = 32):
+                 result_cache_size: int = 256, shape_cache_size: int = 32,
+                 lexical_cfg: LexicalConfig | None = None):
         tiered = warm_cfg is not None
         if tiered and hot_window_s is None:
             raise ValueError("a tiered RagDB (warm_cfg given) needs "
@@ -171,6 +173,17 @@ class RagDB:
         # every plan scans exactly.
         self.index: IVFIndex | None = None
         self._index_auto = False      # was the last build auto-sized?
+        # lexical scoring arena (lexical_cfg given): postings lanes beside
+        # the hot arena, written through the TransactionLog commit hooks;
+        # a tiered RagDB grows warm-tier lanes too (same corpus-global
+        # LexicalStats, so idf/avgdl are comparable across the tier merge).
+        # None means match() is structurally unavailable.
+        self.lex: LexicalArena | None = None
+        if lexical_cfg is not None:
+            self.lex = LexicalArena(hot_cfg.capacity, lexical_cfg)
+            self.log.lex = self.lex
+            if tiered:
+                self.router.warm.attach_lexical(lexical_cfg, self.lex.stats)
 
     # -- storage facade --------------------------------------------------
     @property
@@ -234,6 +247,9 @@ class RagDB:
         wslots = np.asarray([warm.slot_of(ids[i]) for i in idx], np.int64)
         meta = {k: np.asarray(warm.meta[k])[wslots]
                 for k in ("tenant", "category", "acl")}
+        terms = tfs = None
+        if warm.lex is not None:     # postings move with the doc
+            terms, tfs = warm.lex.rows(wslots)
         warm.delete([ids[i] for i in idx])
         self.log.ingest(DocBatch(
             emb=jnp.asarray(emb[idx]),
@@ -241,7 +257,9 @@ class RagDB:
             category=jnp.asarray(meta["category"], jnp.int32),
             updated_at=jnp.asarray([int(ts[i]) for i in idx], jnp.int32),
             acl=jnp.asarray(meta["acl"], jnp.uint32),
-            doc_id=jnp.asarray([ids[i] for i in idx], jnp.int32)))
+            doc_id=jnp.asarray([ids[i] for i in idx], jnp.int32),
+            terms=None if terms is None else jnp.asarray(terms),
+            tfs=None if tfs is None else jnp.asarray(tfs)))
 
     def delete(self, doc_ids) -> None:
         """Tier-aware delete. Refunds registered tenants' quota: slot
@@ -331,7 +349,8 @@ class RagDB:
             logical, n_rows=snap["emb"].shape[0],
             hot_window_s=self.router.hot_window_s, now_ts=self.router.now_ts,
             warm_rows=self.router.warm.n_docs, cfg=self.planner_cfg,
-            has_mesh=self.mesh is not None, index=self.index)
+            has_mesh=self.mesh is not None, index=self.index,
+            lex=self.lex, warm_lex=self.router.warm.lex is not None)
 
     def _sharded_fn(self, k: int):
         fn = self._sharded_fns.get(k)
@@ -353,14 +372,25 @@ class RagDB:
         if lp.q is None:
             return None
         q = np.ascontiguousarray(np.atleast_2d(lp.q), np.float32)
-        digest = hashlib.blake2b(q.tobytes(), digest_size=16).digest()
+        h = hashlib.blake2b(q.tobytes(), digest_size=16)
+        lex_version = -1
+        if plan.engine == "hybrid" and self.lex is not None:
+            # the actual term ids are per-row data (the group key only
+            # carries their count bucket) — they join the digest; and the
+            # corpus-global LexicalStats version joins the key, because a
+            # lexical write on EITHER tier moves idf/avgdl and therefore
+            # hybrid scores without necessarily committing on this plan's
+            # tiers
+            h.update(repr(lp.match_terms).encode())
+            lex_version = self.lex.stats.version
+        digest = h.digest()
         warm_commits = (self.router.warm.commit_count
                         if plan.route == "hot+warm" else -1)
         index_epoch = (self.index.epoch
                        if plan.engine == "ivf" and self.index is not None
                        else -1)
         return (plan.group_key, q.shape, digest,
-                self.log.commit_count, warm_commits, index_epoch)
+                self.log.commit_count, warm_commits, index_epoch, lex_version)
 
     def execute(self, plans: list[PhysicalPlan], *, use_cache: bool = True):
         """Predicate-group batched, fusion-aware, async execution; see
@@ -397,7 +427,7 @@ class RagDB:
                 self.log.snapshot(), self.router.warm, run_plans,
                 sharded_fn=self._sharded_fn(k) if needs_shard else None,
                 stats=self.stats, shapes=self.shapes, index=self.index,
-                planner_cfg=self.planner_cfg)
+                planner_cfg=self.planner_cfg, lex=self.lex)
             self.router.stats.hot_queries += self.stats.hot_queries - before_hot
             self.router.stats.warm_queries += self.stats.warm_queries - before_warm
             off = 0
@@ -444,6 +474,14 @@ class RagDB:
                      f"churn {ix.churn}/{ix.n_at_build}")
         else:
             index = "none (exact scans only)"
+        if self.lex is not None:
+            lx = self.lex
+            lexical = (f"{lx.stats.n_docs} docs with postings, vocab "
+                       f"{lx.cfg.vocab_size}, {lx.cfg.doc_terms} lanes/doc, "
+                       f"avgdl {lx.stats.avgdl:.1f}, "
+                       f"stats v{lx.stats.version}")
+        else:
+            lexical = "none (match() unavailable)"
         st = self.stats
         return "\n".join([
             f"RagDB  {snap['emb'].shape[0]} hot-tier rows "
@@ -455,11 +493,13 @@ class RagDB:
             f"  exec stats:   {st.device_calls} device calls, "
             f"{st.queries} queries ({st.hot_queries} hot, "
             f"{st.warm_queries} warm), {st.padded_rows} padded rows, "
-            f"{st.rows_scanned} rows scanned",
+            f"{st.rows_scanned} rows scanned, "
+            f"{st.terms_scanned} term lanes scanned",
             f"  grouped scan: fused {st.fused_groups} groups -> "
             f"{st.fused_scans} scans "
             f"({max(st.fused_groups - st.fused_scans, 0)} arena scans saved)",
             f"  ivf index:    {index}",
+            f"  lexical:      {lexical}",
         ])
 
 
@@ -510,12 +550,44 @@ class QueryBuilder:
         """LIMIT: return the top ``k`` qualifying rows per query."""
         return self._with(k=int(k))
 
+    def match(self, text) -> "QueryBuilder":
+        """Lexical clause: blend BM25 over the given terms into the
+        ranking. ``text`` is a string (tokenized and hashed through the
+        arena vocabulary) or an iterable of term ids; it lowers to unique
+        term ids HERE, so the logical plan the planner sees is already
+        vocabulary-resolved. Compiles to the "hybrid" engine (fused
+        dense+BM25 one-pass scan); requires the RagDB to carry a lexical
+        arena (``lexical_cfg``)."""
+        lex = self._db.lex
+        if lex is None:
+            raise ValueError("match() requires a lexical arena — construct "
+                             "the RagDB with lexical_cfg=LexicalConfig(...)")
+        ids = lex.lower_terms(text)
+        if not ids:
+            raise ValueError(f"match() lowered to no valid terms: {text!r}")
+        return self._with(match_terms=ids)
+
+    def fuse(self, mode: str = "wsum", *, w_dense: float = 1.0,
+             w_lex: float = 1.0) -> "QueryBuilder":
+        """Score-mix knobs for a match() query: ``"wsum"`` ranks on
+        w_dense*dense + w_lex*bm25 in one running top-k; ``"rrf"`` retrieves
+        both per-signal k-lists in the same scan and fuses by reciprocal
+        rank (weights unused). The mix is part of the plan's group key, so
+        differently-fused queries never share a device program."""
+        if mode not in ("wsum", "rrf"):
+            raise ValueError(f"unknown fusion mode {mode!r} "
+                             "(expected 'wsum' or 'rrf')")
+        return self._with(fusion=mode, w_dense=float(w_dense),
+                          w_lex=float(w_lex))
+
     def using(self, engine: str) -> "QueryBuilder":
         """Force an execution engine ("ref" | "pallas" | "sharded" | "ivf"),
         overriding the planner's cost-based choice AND its ivf selectivity
         guard (an under-filled probe is completed by the executor's exact
         rescan, so forcing "ivf" trades speed, never completeness). "ivf"
-        requires `RagDB.build_index()` first."""
+        requires `RagDB.build_index()` first. match() queries always run on
+        "hybrid" — the only engine that scores the lexical clause — so a
+        conflicting hint is rejected at plan time."""
         return self._with(engine=engine)
 
     def lower(self) -> LogicalPlan:

@@ -73,7 +73,9 @@ class TieredRouter:
             s = jnp.asarray(sel, jnp.int32)
             return DocBatch(emb=batch.emb[s], tenant=batch.tenant[s],
                             category=batch.category[s], updated_at=batch.updated_at[s],
-                            acl=batch.acl[s], doc_id=batch.doc_id[s])
+                            acl=batch.acl[s], doc_id=batch.doc_id[s],
+                            terms=None if batch.terms is None else batch.terms[s],
+                            tfs=None if batch.tfs is None else batch.tfs[s])
 
         if len(idx_hot):
             self.hot.ingest(take(idx_hot))

@@ -42,15 +42,12 @@ def vector_topk(emb: jax.Array, valid: jax.Array, q: jax.Array, k: int):
     return jax.lax.top_k(scores, k)
 
 
-@partial(jax.jit, static_argnames=("k",))
-def vector_topk_filtered(emb: jax.Array, valid: jax.Array,
-                         meta: dict[str, jax.Array], q: jax.Array,
-                         pred: jax.Array, k: int):
-    """Predicate PUSHDOWN: the vector service accepts the lowered predicate
-    and masks inside the scan (what production vector DBs call metadata
-    filtering). One program, no over-fetch, no under-fill retries — and the
-    filter cannot be skipped by app code, so the warm tier inherits the
-    unified engine's isolation construction when queried this way."""
+def _warm_keep(valid: jax.Array, meta: dict[str, jax.Array],
+               pred: jax.Array) -> jax.Array:
+    """The warm tier's pushed-down WHERE clause: live & tenant & recency &
+    category & ACL over the warm metadata columns. ONE definition shared by
+    every warm scan that accepts a lowered predicate (dense and hybrid), so
+    the clause semantics cannot desynchronize between them."""
     tenant = meta["tenant"]
     keep = valid & (tenant >= 0)
     keep &= (pred[0] == -2) | (tenant == pred[0])
@@ -60,6 +57,19 @@ def vector_topk_filtered(emb: jax.Array, valid: jax.Array,
     keep &= (jnp.left_shift(jnp.uint32(1),
                             meta["category"].astype(jnp.uint32)) & cat_mask) != 0
     keep &= (meta["acl"] & acl_bits) != 0
+    return keep
+
+
+@partial(jax.jit, static_argnames=("k",))
+def vector_topk_filtered(emb: jax.Array, valid: jax.Array,
+                         meta: dict[str, jax.Array], q: jax.Array,
+                         pred: jax.Array, k: int):
+    """Predicate PUSHDOWN: the vector service accepts the lowered predicate
+    and masks inside the scan (what production vector DBs call metadata
+    filtering). One program, no over-fetch, no under-fill retries — and the
+    filter cannot be skipped by app code, so the warm tier inherits the
+    unified engine's isolation construction when queried this way."""
+    keep = _warm_keep(valid, meta, pred)
     scores = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
     scores = jnp.where(keep[None, :], scores, NEG_INF)
     top_s, top_i = jax.lax.top_k(scores, k)
@@ -69,6 +79,38 @@ def vector_topk_filtered(emb: jax.Array, valid: jax.Array,
 @jax.jit
 def vector_write(emb: jax.Array, valid: jax.Array, slots: jax.Array, new_emb: jax.Array):
     return emb.at[slots].set(new_emb), valid.at[slots].set(True)
+
+
+@partial(jax.jit, static_argnames=("k", "mode", "w_dense", "w_lex", "rrf_c",
+                                   "lists"))
+def vector_topk_hybrid(emb: jax.Array, valid: jax.Array,
+                       meta: dict[str, jax.Array], terms: jax.Array,
+                       lexnorm: jax.Array, idf: jax.Array, q: jax.Array,
+                       pred: jax.Array, qterms: jax.Array, k: int,
+                       mode: str, w_dense: float, w_lex: float,
+                       rrf_c: float, lists: bool):
+    """Hybrid dense+BM25 pushdown for the warm tier: the lowered predicate
+    AND the lexical scoring both run inside the one scan — the exact
+    warm-tier analogue of `vector_topk_filtered`'s pushdown contract (one
+    round trip, no app-layer filter in the loop), extended with the second
+    signal. idf/avgdl come from the CORPUS-GLOBAL `LexicalStats`, so warm
+    BM25 scores are comparable with hot ones across the tier merge."""
+    from repro.kernels.hybrid_score.ref import bm25_block, qidf_of, rrf_fuse
+    keep = _warm_keep(valid, meta, pred)
+    dense = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
+    bm25 = bm25_block(terms, lexnorm, qterms, qidf_of(idf, qterms))
+    if mode == "wsum":
+        fused = jnp.where(keep[None, :], w_dense * dense + w_lex * bm25,
+                          NEG_INF)
+        top_s, top_i = jax.lax.top_k(fused, k)
+        return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
+    d_s, d_i = jax.lax.top_k(jnp.where(keep[None, :], dense, NEG_INF), k)
+    l_s, l_i = jax.lax.top_k(jnp.where(keep[None, :], bm25, NEG_INF), k)
+    d_i = jnp.where(d_s > NEG_INF, d_i, -1)
+    l_i = jnp.where(l_s > NEG_INF, l_i, -1)
+    if lists:
+        return d_s, d_i, l_s, l_i
+    return rrf_fuse(d_s, d_i, l_s, l_i, k, rrf_c)
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +209,16 @@ class SplitStackClient:
         # network / worker delay between the vector upsert and the metadata
         # upsert in a real deployment.
         self.write_gap_s = 0.0
+        # optional lexical lanes (attach_lexical): slot-aligned postings for
+        # the warm hybrid pushdown, sharing the corpus-global LexicalStats
+        self.lex = None
+
+    def attach_lexical(self, cfg, stats) -> None:
+        """Grow slot-aligned postings lanes for hybrid pushdown queries.
+        ``stats`` is the corpus-global `LexicalStats` shared with the hot
+        arena, so idf/avgdl stay comparable across the tier merge."""
+        from repro.index.lexical import LexicalArena
+        self.lex = LexicalArena(self.cfg.capacity, cfg, stats)
 
     @property
     def n_docs(self) -> int:
@@ -204,6 +256,8 @@ class SplitStackClient:
         self.stats.write_latencies_s.append(t2 - t0)
         for d in doc_ids:
             self._slot_of_doc.pop(int(d), None)
+        if self.lex is not None:     # postings leave with the row
+            self.lex.clear_rows(slot_list)
         self.commit_count += 1
         return slot_list
 
@@ -231,6 +285,11 @@ class SplitStackClient:
         for i, d in enumerate(jax.device_get(batch.doc_id)):
             self._slot_of_doc[int(d)] = self._cursor + i
         self._cursor += m
+        if self.lex is not None:     # postings ride the metadata commit
+            self.lex.write_rows(
+                np.asarray(slots),
+                None if batch.terms is None else np.asarray(batch.terms),
+                None if batch.tfs is None else np.asarray(batch.tfs))
         self.commit_count += 1
 
     def update(self, doc_ids, new_emb, updated_at) -> None:
@@ -336,3 +395,35 @@ class SplitStackClient:
             fetch *= 4
             self.stats.retries += 1
         return out_scores, out_slots
+
+    def query_hybrid(self, q, qterms, pred: Predicate, k: int, *,
+                     mode: str = "wsum", w_dense: float = 1.0,
+                     w_lex: float = 1.0, rrf_c: float = 60.0,
+                     lists: bool = False):
+        """Warm-tier hybrid probe with LEXICAL pushdown: predicate mask,
+        dense scoring, and BM25 all run inside one scan (one round trip, no
+        retries, no app-layer filter) — the hybrid twin of
+        ``query(..., pushdown=True)``. ``qterms`` is (B, QT) int32 with -1
+        padding. Returns (scores, slots) (B, k) numpy for "wsum"/fused rrf,
+        or the four per-signal lists with ``lists=True`` (the tiered
+        executor merges per signal before rank fusion)."""
+        if self.lex is None:
+            raise ValueError("warm tier has no lexical lanes — "
+                             "attach_lexical() first")
+        snap = self.lex.snapshot()
+        k_eff = min(k, self.cfg.capacity)
+        out = vector_topk_hybrid(self.emb, self.valid, self.meta,
+                                 snap["terms"], snap["lexnorm"], snap["idf"],
+                                 q, pred.as_array(),
+                                 jnp.asarray(qterms, jnp.int32), k_eff,
+                                 mode, float(w_dense), float(w_lex),
+                                 float(rrf_c), lists)
+        self.stats.round_trips += 1
+        out = tuple(np.asarray(a) for a in out)
+        if k_eff < k:
+            pad = ((0, 0), (0, k - k_eff))
+            neg = np.float32(jax.device_get(NEG_INF))
+            out = tuple(np.pad(a, pad, constant_values=neg) if j % 2 == 0
+                        else np.pad(a, pad, constant_values=-1)
+                        for j, a in enumerate(out))
+        return out

@@ -65,13 +65,20 @@ def normalize(cfg: StoreConfig, emb: jax.Array) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class DocBatch:
-    """A batch of documents headed into the store (host-side container)."""
+    """A batch of documents headed into the store (host-side container).
+
+    ``terms``/``tfs`` are the optional lexical lanes ((M, T) term ids + term
+    frequencies) consumed by an attached `repro.index.lexical.LexicalArena`;
+    None means the batch carries no lexical content (its rows write empty
+    lanes, so recycled slots never inherit a previous doc's postings)."""
     emb: jax.Array          # (M, D)
     tenant: jax.Array       # (M,) int32
     category: jax.Array     # (M,) int32
     updated_at: jax.Array   # (M,) int32
     acl: jax.Array          # (M,) uint32
     doc_id: jax.Array       # (M,) int32
+    terms: jax.Array | None = None   # (M, T) int32 term ids, -1 empty lane
+    tfs: jax.Array | None = None     # (M, T) int32 term frequencies
 
     @property
     def size(self) -> int:

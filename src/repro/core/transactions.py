@@ -107,6 +107,12 @@ class TransactionLog:
         # the member table — so the index never serves deleted slots and
         # fresh rows are probeable without waiting for a rebuild.
         self.ivf = None
+        # attached LexicalArena (RagDB wires it when built with a
+        # lexical_cfg): the postings lanes are slot-aligned with this
+        # arena, and every commit writes through — including EMPTY lanes
+        # for batches without lexical content, so a recycled slot can never
+        # serve the previous occupant's postings.
+        self.lex = None
 
     # -- reads ---------------------------------------------------------
     def snapshot(self) -> Store:
@@ -147,6 +153,11 @@ class TransactionLog:
         self._cursor += n_fresh
         if self.ivf is not None:
             self.ivf.add_rows(slot_list, np.asarray(batch.emb))
+        if self.lex is not None:
+            self.lex.write_rows(
+                slot_list,
+                None if batch.terms is None else np.asarray(batch.terms),
+                None if batch.tfs is None else np.asarray(batch.tfs))
 
     def update(self, doc_ids, new_emb, updated_at) -> None:
         slot_list = [self._slot_of_doc[int(d)] for d in doc_ids]
@@ -177,6 +188,8 @@ class TransactionLog:
         self._free_slots.extend(slot_list)
         if self.ivf is not None:   # freed slots leave the member table too
             self.ivf.remove_slots(slot_list)
+        if self.lex is not None:   # postings leave with the row (df refunds)
+            self.lex.clear_rows(slot_list)
         return slot_list
 
     @property

@@ -1,0 +1,10 @@
+"""Secondary index structures living beside the vector arena.
+
+  lexical/   fixed-width postings arena (term-id + tf lanes) + corpus-level
+             BM25 statistics — the lexical half of the hybrid dense+BM25
+             engine. Slot-aligned with the vector arena and written through
+             the same `TransactionLog` commit hooks, so MVCC slot recycling,
+             commit counters, and the tenant/ACL columns apply verbatim.
+"""
+from repro.index.lexical import (LexicalArena, LexicalConfig,  # noqa: F401
+                                 LexicalStats)

@@ -1,0 +1,11 @@
+"""The lexical scoring arena — "beyond similarity", literally.
+
+  arena.py    LexicalConfig / LexicalStats / LexicalArena: fixed-width
+              per-doc (N, T) term-id + tf int32 lanes beside the vector
+              arena, plus the corpus-level BM25 statistics (df / idf /
+              avgdl) shared by every tier.
+  twoscan.py  the split-system baseline the fused hybrid scan replaces:
+              dense scan + lexical scan + host-side union rescore + merge.
+"""
+from repro.index.lexical.arena import (LexicalArena, LexicalConfig,  # noqa: F401
+                                       LexicalStats)

@@ -1,0 +1,136 @@
+"""jit'd public wrapper for the hybrid_score kernel.
+
+Handles metadata packing, padding to tile multiples, query-side idf
+gathering, engine dispatch (Pallas on TPU, jnp streaming scan elsewhere;
+tests pass ``use_kernel=True, interpret=True`` to execute the kernel body
+on CPU), and the RRF rank fusion of the kernel's per-signal lists.
+
+Padding invariants (mirrors grouped_topk.ops):
+  * arena rows pad to the N-block multiple as DEAD rows (tenant = -1,
+    term lanes empty, lexnorm 0) for BOTH engines, so kernel and refs run
+    on identical arrays and bit-identity is testable;
+  * query rows pad to the B-block multiple with group id 0 and no query
+    terms — retrieval is row-parallel, so padding rows cannot perturb real
+    rows, and they are sliced off before returning;
+  * the caller may pad ``preds`` with blocker rows (tenant = -3) to bucket
+    G, and ``qterms`` columns with -1 to bucket QT — a -1 query term can
+    only "match" an empty doc lane and its gathered idf is forced to 0, so
+    padded term lanes contribute exactly 0.0 to every score.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grouped_topk.ops import (BLK_SCAN, _packed_meta,
+                                            _pad_axis0)
+from repro.kernels.hybrid_score.hybrid_score import hybrid_score_pallas
+from repro.kernels.hybrid_score.ref import (NEG_INF, hybrid_score_scan_ref,
+                                            qidf_of, rrf_fuse)
+
+
+@partial(jax.jit, static_argnames=("k", "mode", "w_dense", "w_lex", "rrf_c",
+                                   "lists", "use_kernel", "blk_b", "blk_n",
+                                   "interpret"))
+def _run(q, emb, meta, terms, lexnorm, idf, gids, preds, qterms, k, mode,
+         w_dense, w_lex, rrf_c, lists, use_kernel, blk_b, blk_n, interpret):
+    qidf = qidf_of(idf, qterms)
+    # pad N to the block multiple with dead rows for BOTH engines
+    n = emb.shape[0]
+    emb = _pad_axis0(emb, blk_n, 0)
+    meta = _pad_axis0(meta, blk_n, 0)
+    terms = _pad_axis0(terms, blk_n, -1)
+    lexnorm = _pad_axis0(lexnorm, blk_n, 0)
+    if meta.shape[0] != n:
+        dead = jnp.arange(meta.shape[0]) >= n
+        meta = jnp.where(dead[:, None],
+                         jnp.asarray([-1, 0, 0, 0], jnp.int32)[None, :], meta)
+    if not use_kernel:
+        return hybrid_score_scan_ref(q, emb, meta, terms, lexnorm, gids,
+                                     preds, qterms, qidf, k, blk_n,
+                                     mode=mode, w_dense=w_dense, w_lex=w_lex,
+                                     rrf_c=rrf_c, lists=lists)
+    B, D = q.shape
+    d_pad = (-D) % 128
+    if d_pad:
+        q = jnp.pad(q, ((0, 0), (0, d_pad)))
+        emb = jnp.pad(emb, ((0, 0), (0, d_pad)))
+    q = _pad_axis0(q, blk_b, 0)
+    gids = _pad_axis0(gids.reshape(-1, 1), blk_b, 0)
+    qterms = _pad_axis0(qterms, blk_b, -1)
+    qidf = _pad_axis0(qidf, blk_b, 0)
+    out = hybrid_score_pallas(q, emb, meta, terms, lexnorm, gids, preds,
+                              qterms, qidf, k, mode=mode, w_dense=w_dense,
+                              w_lex=w_lex, blk_b=blk_b, blk_n=blk_n,
+                              interpret=interpret)
+    if mode == "wsum":
+        s, i = out
+        return s[:B], i[:B]
+    d_s, d_i, l_s, l_i = (a[:B] for a in out)
+    if lists:
+        return d_s, d_i, l_s, l_i
+    return rrf_fuse(d_s, d_i, l_s, l_i, k, rrf_c)
+
+
+def hybrid_score(q, emb, tenant, updated_at, category, acl, terms, lexnorm,
+                 idf, gids, preds, qterms, k: int, *, mode: str = "wsum",
+                 w_dense: float = 1.0, w_lex: float = 1.0,
+                 rrf_c: float = 60.0, lists: bool = False,
+                 use_kernel: bool | None = None, blk_b: int = 8,
+                 blk_n: int | None = None, interpret: bool | None = None):
+    """Fused hybrid dense+BM25 grouped top-k over ONE arena scan.
+
+    q: (B, D) stacked query rows for every predicate group in the batch;
+    emb/tenant/updated_at/category/acl: the vector-arena columns;
+    terms/lexnorm: the postings-arena lanes ((N, T) ids + precomputed
+    per-lane BM25 weight, `LexicalArena.snapshot()`); idf: (V,) f32 table;
+    gids: (B,) int32 group id per row; preds: (G, 4) int32 stacked
+    `Predicate.as_array()` rows; qterms: (B, QT) int32 per-row query term
+    ids (-1 padding); k: LIMIT.
+
+    ``mode="wsum"`` ranks on w_dense*dense + w_lex*bm25; ``mode="rrf"``
+    retrieves both per-signal k-lists in the same pass and rank-fuses them
+    (1/(rrf_c + rank), deduplicated union). ``lists=True`` (rrf only)
+    skips the fusion and returns (d_s, d_i, l_s, l_i) — the tiered
+    executor merges per signal across tiers first.
+
+    Returns (scores (B, k) f32, slots (B, k) i32, -1 past the fill).
+    ``use_kernel=None`` picks the Pallas kernel on a TPU backend and the
+    jnp streaming scan elsewhere; tests pass ``use_kernel=True,
+    interpret=True`` to execute the kernel body on CPU.
+    """
+    if lists and mode != "rrf":
+        raise ValueError("lists=True is only meaningful for mode='rrf'")
+    if mode not in ("wsum", "rrf"):
+        raise ValueError(f"unknown fusion mode {mode!r}")
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if blk_n is None:
+        if use_kernel:
+            blk_n = 512
+        else:
+            cap = 1 << max(int(emb.shape[0]) - 1, 0).bit_length()
+            blk_n = min(BLK_SCAN, max(cap, 1))
+    n = emb.shape[0]
+    if k > n:   # LIMIT larger than the arena: SQL semantics, padded to k
+        out = hybrid_score(q, emb, tenant, updated_at, category, acl, terms,
+                           lexnorm, idf, gids, preds, qterms, n, mode=mode,
+                           w_dense=w_dense, w_lex=w_lex, rrf_c=rrf_c,
+                           lists=lists, use_kernel=use_kernel, blk_b=blk_b,
+                           blk_n=blk_n, interpret=interpret)
+        pad = ((0, 0), (0, k - n))
+        return tuple(jnp.pad(a, pad, constant_values=NEG_INF) if j % 2 == 0
+                     else jnp.pad(a, pad, constant_values=-1)
+                     for j, a in enumerate(out))
+    meta = _packed_meta(tenant, updated_at, category, acl)
+    return _run(jnp.asarray(q), emb, meta, jnp.asarray(terms, jnp.int32),
+                jnp.asarray(lexnorm, jnp.float32),
+                jnp.asarray(idf, jnp.float32),
+                jnp.asarray(gids, jnp.int32), jnp.asarray(preds, jnp.int32),
+                jnp.asarray(qterms, jnp.int32), k, mode, float(w_dense),
+                float(w_lex), float(rrf_c), lists, use_kernel, blk_b, blk_n,
+                interpret)

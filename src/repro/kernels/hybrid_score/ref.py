@@ -1,0 +1,217 @@
+"""Pure-jnp reference for the hybrid_score kernel.
+
+Contract shared with the Pallas kernel (hybrid_score.py): ONE pass over the
+arena computes BOTH retrieval signals for every query row —
+
+  dense  = q . emb^T                       (cosine / dot similarity)
+  bm25   = sum over the row's T postings lanes of
+           idf(term) * tf*(k1+1)/(tf + k1*lennorm)      (masked gather:
+           a lane contributes iff its term id equals one of the row's
+           query terms)
+
+— applies the row's lowered predicate mask (grouped, exactly as
+grouped_topk: each query row selects its group's mask, so a row failing
+group g's predicate is -inf in every g-row's lane BEFORE any ranking and
+can never surface no matter how high its BM25 score), and maintains a
+running top-k on the FUSED score:
+
+  * ``wsum``: fused = w_dense * dense + w_lex * bm25, one running k-list;
+  * ``rrf``:  two running k-lists (dense, bm25), fused by reciprocal-rank
+              over the retrieved lists (`rrf_fuse`) after the scan — rank
+              fusion needs ranks, which only exist once the lists do, so
+              this is the one-pass form every production RRF uses.
+
+BIT-IDENTITY between kernel, dense oracle, and streaming scan is by
+construction, not luck: `bm25_block` fixes the float accumulation order
+(per (row, doc) element: lanes outer, query terms inner), the dense dot is
+the same contraction, tiling splits N only, and `lax.top_k` breaks ties
+toward the lower index locally and in every merge.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grouped_topk.ref import group_masks
+
+NEG_INF = jnp.float32(jnp.finfo(jnp.float32).min)
+
+
+def qidf_of(idf: jax.Array, qterms: jax.Array) -> jax.Array:
+    """Query-side idf gather: (B, QT) term ids against the snapshot's (V,)
+    idf table. Padding terms (-1) gather weight 0 — the invariant that
+    makes padded term lanes inert in every scorer (kernel, refs, warm
+    pushdown, split baseline), so it lives in exactly one place."""
+    return jnp.where(qterms >= 0,
+                     idf[jnp.clip(qterms, 0, idf.shape[0] - 1)], 0.0
+                     ).astype(jnp.float32)
+
+
+def bm25_block(terms: jax.Array, lexnorm: jax.Array, qterms: jax.Array,
+               qidf: jax.Array) -> jax.Array:
+    """Masked-gather BM25 over one block of postings lanes.
+
+    terms: (N, T) int32 lane term ids (-1 empty); lexnorm: (N, T) f32
+    per-lane tf/length weight (idf excluded, 0 on empty lanes);
+    qterms: (B, QT) int32 query term ids (-1 padding); qidf: (B, QT) f32
+    per-term idf (0 on padding). Returns (B, N) f32.
+
+    The accumulation order is FIXED (lanes outer, query terms inner) and
+    shared verbatim with the Pallas kernel body — float sums are
+    order-sensitive, and this order is what makes kernel and refs
+    bit-identical. Padding safety: a padding query term (-1) can only
+    "match" an empty doc lane (-1), and its idf is 0, so it contributes
+    exactly 0.0.
+    """
+    n, t_lanes = terms.shape
+    qt = qterms.shape[1]
+    bm25 = jnp.zeros((qterms.shape[0], n), jnp.float32)
+    for t in range(t_lanes):
+        lane = terms[:, t]
+        w = jnp.zeros_like(bm25)
+        for j in range(qt):
+            hit = lane[None, :] == qterms[:, j][:, None]
+            w = w + jnp.where(hit, qidf[:, j][:, None], 0.0)
+        bm25 = bm25 + w * lexnorm[:, t][None, :]
+    return bm25
+
+
+def rrf_fuse(ds: jax.Array, di: jax.Array, ls: jax.Array, li: jax.Array,
+             k: int, c: float):
+    """Reciprocal-rank fusion of two per-signal k-lists (the standard
+    retrieved-lists form): candidate score = sum over lists containing it of
+    1/(c + rank). A candidate in both lists is represented by its dense-list
+    copy (the lex copy is masked out), so the union is deduplicated exactly.
+    Returns (scores (B, k) f32, slots (B, k) i32, -1 past the fill).
+
+    Ties (e.g. rank r in dense only vs rank r in lex only) break toward the
+    dense list, then toward the better rank — `lax.top_k` lower-index-first
+    over the [dense | lex] concatenation, deterministically.
+    """
+    kd, kl = di.shape[1], li.shape[1]
+    rd = 1.0 / (c + jnp.arange(1, kd + 1, dtype=jnp.float32))
+    rl = 1.0 / (c + jnp.arange(1, kl + 1, dtype=jnp.float32))
+    d_valid = di >= 0
+    l_valid = li >= 0
+    cross = ((di[:, :, None] == li[:, None, :])
+             & d_valid[:, :, None] & l_valid[:, None, :])        # (B, kd, kl)
+    d_score = (jnp.where(d_valid, rd[None, :], NEG_INF)
+               + jnp.sum(jnp.where(cross, rl[None, None, :], 0.0), axis=2))
+    # a lex candidate also in the dense list already carries both ranks on
+    # its dense copy — mask the lex copy out so the union stays deduplicated
+    in_dense = cross.any(axis=1)                                 # (B, kl)
+    l_score = jnp.where(l_valid & ~in_dense, rl[None, :], NEG_INF)
+    all_s = jnp.concatenate([d_score, l_score], axis=1)
+    all_i = jnp.concatenate([di, li], axis=1)
+    k_eff = min(k, all_s.shape[1])
+    top_s, sel = jax.lax.top_k(all_s, k_eff)
+    top_i = jnp.take_along_axis(all_i, sel, axis=1)
+    if k_eff < k:
+        pad = ((0, 0), (0, k - k_eff))
+        top_s = jnp.pad(top_s, pad, constant_values=NEG_INF)
+        top_i = jnp.pad(top_i, pad, constant_values=-1)
+    return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
+
+
+def _scores_block(q, emb, meta, terms, lexnorm, gids, preds, qterms, qidf):
+    """Shared per-block math: (dense (B, N), bm25 (B, N), row_keep (B, N)).
+
+    The barrier sequences the elementwise BM25 chain BEFORE the threaded
+    dense matmul: letting XLA CPU schedule them interleaved measures ~1.5x
+    slower than running them back to back (the matmul loses its blocked
+    schedule). Values are untouched, so bit-identity is unaffected.
+    """
+    keep = group_masks(meta, preds)                              # (G, N)
+    row_keep = keep[gids]                                        # (B, N)
+    bm25 = bm25_block(terms, lexnorm, qterms, qidf)
+    bm25 = jax.lax.optimization_barrier(bm25)
+    dense = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
+    return dense, bm25, row_keep
+
+
+@partial(jax.jit, static_argnames=("k", "mode", "w_dense", "w_lex", "rrf_c"))
+def hybrid_score_ref(q, emb, meta, terms, lexnorm, gids, preds, qterms, qidf,
+                     k: int, mode: str = "wsum", w_dense: float = 1.0,
+                     w_lex: float = 1.0, rrf_c: float = 60.0):
+    """Dense oracle. q: (B, D); emb: (N, D); meta: (N, 4) int32; terms /
+    lexnorm: (N, T); gids: (B,) int32; preds: (G, 4) int32; qterms: (B, QT)
+    int32; qidf: (B, QT) f32. Returns (scores (B, k) f32, slots (B, k) i32)
+    for ``wsum`` and the fused RRF lists for ``rrf``."""
+    dense, bm25, row_keep = _scores_block(q, emb, meta, terms, lexnorm,
+                                          gids, preds, qterms, qidf)
+    if mode == "wsum":
+        fused = jnp.where(row_keep, w_dense * dense + w_lex * bm25, NEG_INF)
+        top_s, top_i = jax.lax.top_k(fused, k)
+        return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
+    ds = jnp.where(row_keep, dense, NEG_INF)
+    lx = jnp.where(row_keep, bm25, NEG_INF)
+    d_s, d_i = jax.lax.top_k(ds, k)
+    l_s, l_i = jax.lax.top_k(lx, k)
+    d_i = jnp.where(d_s > NEG_INF, d_i, -1)
+    l_i = jnp.where(l_s > NEG_INF, l_i, -1)
+    return rrf_fuse(d_s, d_i, l_s, l_i, k, rrf_c)
+
+
+@partial(jax.jit, static_argnames=("k", "mode", "w_dense", "w_lex", "rrf_c",
+                                   "blk_n", "lists"))
+def hybrid_score_scan_ref(q, emb, meta, terms, lexnorm, gids, preds, qterms,
+                          qidf, k: int, blk_n: int, mode: str = "wsum",
+                          w_dense: float = 1.0, w_lex: float = 1.0,
+                          rrf_c: float = 60.0, lists: bool = False):
+    """Streaming jnp implementation — the kernel's schedule without Pallas:
+    scan the arena in (blk_n,) tiles, compute dense + masked-gather BM25 +
+    predicate mask per tile, keep a LOCAL top-k per running list, one final
+    merge over the (tiles*k)-wide candidates. Never materializes (B, N) —
+    on the CPU rig this is the production one-pass hybrid engine.
+
+    ``lists=True`` (rrf only) returns the two per-signal k-lists unfused —
+    the tiered executor merges them with the warm tier's lists per signal
+    before rank fusion. N % blk_n == 0 (ops.py pads).
+    """
+    n = emb.shape[0]
+    assert n % blk_n == 0, (n, blk_n)
+    n_tiles = n // blk_n
+    emb_t = emb.reshape(n_tiles, blk_n, emb.shape[1])
+    meta_t = meta.reshape(n_tiles, blk_n, 4)
+    terms_t = terms.reshape(n_tiles, blk_n, terms.shape[1])
+    ln_t = lexnorm.reshape(n_tiles, blk_n, lexnorm.shape[1])
+    base_t = jnp.arange(n_tiles, dtype=jnp.int32) * blk_n
+    k_loc = min(k, blk_n)
+
+    def step(_, tile):
+        e, m, tm, ln, base = tile
+        dense, bm25, row_keep = _scores_block(q, e, m, tm, ln, gids, preds,
+                                              qterms, qidf)
+        if mode == "wsum":
+            fused = jnp.where(row_keep, w_dense * dense + w_lex * bm25,
+                              NEG_INF)
+            s, i = jax.lax.top_k(fused, k_loc)
+            return None, (s, base + i)
+        d_s, d_i = jax.lax.top_k(jnp.where(row_keep, dense, NEG_INF), k_loc)
+        l_s, l_i = jax.lax.top_k(jnp.where(row_keep, bm25, NEG_INF), k_loc)
+        return None, (d_s, base + d_i, l_s, base + l_i)
+
+    def merge(loc_s, loc_i):
+        all_s = jnp.moveaxis(loc_s, 0, 1).reshape(q.shape[0], -1)
+        all_i = jnp.moveaxis(loc_i, 0, 1).reshape(q.shape[0], -1)
+        k_eff = min(k, all_s.shape[1])
+        top_s, sel = jax.lax.top_k(all_s, k_eff)
+        top_i = jnp.take_along_axis(all_i, sel, axis=1)
+        if k_eff < k:
+            pad = ((0, 0), (0, k - k_eff))
+            top_s = jnp.pad(top_s, pad, constant_values=NEG_INF)
+            top_i = jnp.pad(top_i, pad, constant_values=-1)
+        return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
+
+    tiles = (emb_t, meta_t, terms_t, ln_t, base_t)
+    if mode == "wsum":
+        _, (loc_s, loc_i) = jax.lax.scan(step, None, tiles)
+        return merge(loc_s, loc_i)
+    _, (d_s, d_i, l_s, l_i) = jax.lax.scan(step, None, tiles)
+    d_s, d_i = merge(d_s, d_i)
+    l_s, l_i = merge(l_s, l_i)
+    if lists:
+        return d_s, d_i, l_s, l_i
+    return rrf_fuse(d_s, d_i, l_s, l_i, k, rrf_c)

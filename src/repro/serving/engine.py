@@ -39,6 +39,11 @@ class Request:
     min_ts: int = 0
     categories: list[int] | None = None
     max_new_tokens: int = 16
+    match_terms: Any | None = None   # lexical clause (str or term ids):
+                                     # lowers through QueryBuilder.match()
+                                     # -> the hybrid engine (front-door
+                                     # path only; needs a lexical arena)
+    fusion: str = "wsum"             # score mix for match requests
 
 
 @dataclasses.dataclass
@@ -142,8 +147,13 @@ class RAGEngine:
         from the principal via db.session — the engine cannot widen them."""
         b = (self.db.session(r.principal)
              .search(q_row, normalize=False)       # batch-normalized above
-             .limit(self.k)
-             .using(self.engine))
+             .limit(self.k))
+        if r.match_terms is not None:
+            # a keyword-anchored request: the match clause forces the
+            # hybrid engine, so the engine hint must not be pinned
+            b = b.match(r.match_terms).fuse(r.fusion)
+        else:
+            b = b.using(self.engine)
         if r.min_ts:
             b = b.newer_than(r.min_ts)
         if r.categories is not None:
@@ -171,6 +181,10 @@ class RAGEngine:
             scores, slots, tiers = self.db.execute(plans)
             self.last_retrieval_device_calls = self.db.stats.device_calls - calls0
         else:
+            if any(r.match_terms is not None for r in requests):
+                raise ValueError("match_terms requests need the front-door "
+                                 "path — construct RAGEngine with a RagDB "
+                                 "built with lexical_cfg")
             preds = [build_predicate(r.principal, min_ts=r.min_ts,
                                      categories=r.categories)
                      for r in requests]

@@ -13,6 +13,7 @@ import repro.api.executor
 import repro.api.plan
 import repro.api.planner
 import repro.api.ragdb
+import repro.index.lexical.arena
 import repro.serving.engine
 
 MODULES = [
@@ -20,6 +21,7 @@ MODULES = [
     repro.api.planner,
     repro.api.executor,
     repro.api.ragdb,
+    repro.index.lexical.arena,
     repro.serving.engine,
 ]
 

@@ -251,8 +251,65 @@ def test_cross_group_leakage_impossible(seed, use_kernel):
 
 
 # ---------------------------------------------------------------------------
-# the fusion rule
+# pow2 padding: blocker lanes carry k=0 semantics (regression, ISSUE 5)
 # ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("G,B", [
+    (3, 7),    # rows pad 7 -> 8, groups pad 3 -> 4 (one blocker lane)
+    (4, 7),    # groups already pow2: a blocker bucket must OPEN for the
+               # padding rows (4 -> 8) instead of borrowing group 0
+    (3, 8),    # rows exactly at the bucket: no row padding, blocker unused
+    (5, 9),    # both sides pad across a boundary
+])
+def test_padding_rows_ride_blocker_lanes(G, B, rng):
+    """Bucket-padding query rows used to inherit group 0's predicate (and
+    its k-list): they scored real rows under a real group's predicate and
+    allocated k result rows each. They must instead point at a BLOCK_ALL
+    blocker lane — k=0 semantics: the executor asserts their k-lists come
+    back empty, `ExecStats.padded_groups` audits the lanes, and the real
+    rows' results are bit-identical with and without the padding."""
+    from repro.api.executor import run_grouped_fused
+    store = _arena(rng, 640, 16)
+    snap = dict(store)
+    q = rng.standard_normal((B, 16)).astype(np.float32)
+    uniq = _preds(rng, G)
+    preds = [uniq[i % G] for i in range(B)]
+    st_pad, st_raw = executor_mod.ExecStats(), executor_mod.ExecStats()
+    shapes = executor_mod.CompiledShapes()
+    s_p, i_p, _ = run_grouped_fused(snap, q, preds, 5, stats=st_pad,
+                                    shapes=shapes)   # bucketed launch
+    s_r, i_r, _ = run_grouped_fused(snap, q, preds, 5, stats=st_raw)
+    assert (s_p == s_r).all() and (i_p == i_r).all()
+    g_uniq = len(set(preds))
+    bucket = executor_mod.bucket_rows(B)
+    if bucket > B:
+        # padding rows exist: at least one blocker lane must exist too,
+        # even when the group count was already a power of two
+        assert st_pad.padded_groups >= 1
+        assert st_pad.padded_rows == bucket - B
+    g_bucket = executor_mod.bucket_rows(
+        g_uniq + (1 if bucket > B and
+                  executor_mod.bucket_rows(g_uniq) == g_uniq else 0))
+    assert st_pad.padded_groups == g_bucket - g_uniq
+    # the unbucketed launch still pow2-pads the predicate stack only
+    assert st_raw.padded_rows == 0
+
+
+def test_blocker_lane_rows_allocate_no_results(rng):
+    """Direct audit of the finish-time assertion: a launch whose padding
+    rows point at the blocker lane returns all-empty k-lists for them."""
+    from repro.api.executor import (CompiledShapes, ExecStats, _finish_hot,
+                                    _launch_grouped)
+    store = _arena(rng, 512, 16)
+    q = rng.standard_normal((5, 16)).astype(np.float32)   # pads to 8
+    preds = _preds(rng, 4)                                # pow2 already
+    gids = np.asarray([0, 1, 2, 3, 0], np.int32)
+    hot = _launch_grouped(dict(store), q, gids, preds, 6, "ref",
+                          stats=ExecStats(), shapes=CompiledShapes())
+    s, sl = _finish_hot(hot)    # would assert on a blocker-lane leak
+    assert sl.shape[0] == 8
+    assert (sl[5:] == -1).all()
+    assert (sl[:5] >= -1).any()
 
 def _plan(t=0, k=5, engine="ref", route="hot", n_rows=1024):
     lp = LogicalPlan(tenant=t, k=k)

@@ -5,8 +5,24 @@
 Usage:
     python tools/check_bench_regression.py FRESH.json [COMMITTED.json]
         [--at-g 8] [--threshold 0.25] [--min-speedup 1.5]
+    python tools/check_bench_regression.py --hybrid-only FRESH.json
+        [COMMITTED.json] [--at-n 50000] [--threshold 0.25]
+        [--min-speedup 1.5]
 
-Checks, at the gated group count (default G=8, the PR's acceptance point):
+The ``--hybrid-only`` lane gates the hybrid dense+BM25 engine instead
+(fresh file from ``bench_latency --hybrid-only --out PATH``), at the gated
+corpus size (default N=50000, the PR's acceptance point):
+  1. composed-query fused p50 regression vs the committed file, machine-
+     normalized by the two-scan baseline exactly like the grouped lane;
+  2. the fused one-pass still beats the faithful two-scan+merge baseline
+     on the composed query by --min-speedup (default 1.5 — the acceptance
+     bar itself, held directly since the measured margin is >2x);
+  3. recall ordering: keyword-anchored hybrid recall@10 strictly above
+     dense-only recall@10, and the planner chose the 'hybrid' engine —
+     a broken lexical signal fails CI regardless of timing.
+
+Grouped-lane checks, at the gated group count (default G=8, the PR's
+acceptance point):
   1. fused p50 regression: fresh fused p50 must not exceed the committed
      fused p50 by more than --threshold (default 25%). The comparison is
      MACHINE-NORMALIZED by default: the fresh fused p50 is rescaled by
@@ -34,18 +50,79 @@ DEFAULT_COMMITTED = os.path.join(os.path.dirname(__file__), "..", "results",
                                  "bench_latency.json")
 
 
-def load_sweep(path: str) -> dict:
+def _load(path: str, section: str, inner: str) -> dict:
     try:
         with open(path) as f:
             payload = json.load(f)
     except (OSError, ValueError) as e:
         print(f"error: cannot read {path}: {e}", file=sys.stderr)
         sys.exit(2)
-    sweep = payload.get("group_sweep")
-    if not sweep or "sweep" not in sweep:
-        print(f"error: {path} has no group_sweep section", file=sys.stderr)
+    sec = payload.get(section)
+    if not sec or inner not in sec:
+        print(f"error: {path} has no {section} section", file=sys.stderr)
         sys.exit(2)
-    return sweep
+    return sec
+
+
+def load_sweep(path: str) -> dict:
+    return _load(path, "group_sweep", "sweep")
+
+
+def load_hybrid(path: str) -> dict:
+    return _load(path, "hybrid", "sizes")
+
+
+def check_hybrid(args) -> int:
+    fresh = load_hybrid(args.fresh)
+    committed = load_hybrid(args.committed)
+    n = str(args.at_n)
+    for name, sec in (("fresh", fresh), ("committed", committed)):
+        if n not in sec["sizes"]:
+            print(f"error: {name} hybrid section has no N={n} row "
+                  f"(has {sorted(sec['sizes'])})", file=sys.stderr)
+            return 2
+    f_row, c_row = fresh["sizes"][n], committed["sizes"][n]
+    f_p50 = f_row["composed"]["fused_ms"]["p50"]
+    c_p50 = c_row["composed"]["fused_ms"]["p50"]
+    speedup = f_row["composed"]["speedup_p50"]
+    ok = True
+
+    print(f"hybrid gate at N={n} (arena={f_row['arena_rows']} rows, "
+          f"composed query):")
+    if args.absolute:
+        cmp_p50, how = f_p50, "raw"
+    else:
+        machine = (c_row["composed"]["twoscan_ms"]["p50"]
+                   / max(f_row["composed"]["twoscan_ms"]["p50"], 1e-9))
+        cmp_p50 = f_p50 * machine
+        how = f"twoscan-normalized x{machine:.2f}"
+    ratio = cmp_p50 / max(c_p50, 1e-9)
+    print(f"  fused p50: fresh {f_p50:.2f}ms ({how}: {cmp_p50:.2f}ms) vs "
+          f"committed {c_p50:.2f}ms ({(ratio - 1) * 100:+.1f}%, threshold "
+          f"+{args.threshold * 100:.0f}%)")
+    if ratio > 1 + args.threshold:
+        print("  FAIL: fused hybrid p50 regressed past the threshold")
+        ok = False
+
+    print(f"  fused-vs-twoscan speedup: {speedup:.2f}x "
+          f"(floor {args.min_speedup:.2f}x)")
+    if speedup < args.min_speedup:
+        print("  FAIL: one-pass fusion no longer beats the split baseline")
+        ok = False
+
+    rec = f_row["recall_at_10"]
+    print(f"  keyword recall@10: hybrid {rec['hybrid']:.3f} vs dense "
+          f"{rec['dense']:.3f}; planner engine "
+          f"{f_row['planner_engine']!r}")
+    if not rec["hybrid"] > rec["dense"]:
+        print("  FAIL: hybrid recall no longer beats dense-only")
+        ok = False
+    if f_row["planner_engine"] != "hybrid":
+        print("  FAIL: planner stopped selecting the hybrid engine")
+        ok = False
+
+    print("PASS" if ok else "REGRESSION")
+    return 0 if ok else 1
 
 
 def main(argv=None) -> int:
@@ -54,6 +131,12 @@ def main(argv=None) -> int:
                     "(bench_latency --gsweep-only --out PATH)")
     ap.add_argument("committed", nargs="?", default=DEFAULT_COMMITTED,
                     help="baseline JSON (default: results/bench_latency.json)")
+    ap.add_argument("--hybrid-only", action="store_true",
+                    help="gate the hybrid section instead of group_sweep "
+                         "(fresh file from bench_latency --hybrid-only)")
+    ap.add_argument("--at-n", type=int, default=50_000,
+                    help="with --hybrid-only: corpus size to gate on "
+                         "(default 50000)")
     ap.add_argument("--at-g", type=int, default=8,
                     help="group count to gate on (default 8)")
     ap.add_argument("--threshold", type=float, default=0.25,
@@ -66,6 +149,9 @@ def main(argv=None) -> int:
                          "the looped baseline (only meaningful when fresh "
                          "and committed ran on the same machine)")
     args = ap.parse_args(argv)
+
+    if args.hybrid_only:
+        return check_hybrid(args)
 
     fresh = load_sweep(args.fresh)
     committed = load_sweep(args.committed)
