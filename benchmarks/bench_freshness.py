@@ -1,22 +1,27 @@
-"""Table 2 — freshness: write latency + inconsistency window.
+"""Table 2 — freshness: write latency + inconsistency window (thin shim).
 
-Stack A commits the vector write and the metadata write separately; the gap
-between the two commits is its inconsistency window, and a reader landing in
-the gap observes the new embedding with stale metadata (demonstrated, not
-just timed). Stack B's window is 0 by construction — one program commits
-both — which the bench verifies by probing for mixed state after every
-commit."""
+This bench is now a shim over the serving harness: the unified stack's write
+latency and mixed-state audit come from `repro.serving.load.run_scenario`'s
+concurrent-writes scenario (writes interleave with live queries on an open
+loop, exactly how production sees them), instead of a quiet write-only loop.
+The split stack keeps its direct measurement — its point is the
+inconsistency window between the two commits, which exists regardless of
+load — and the output schema (stack_a/stack_b, results/bench_freshness.json)
+is unchanged. The full staleness-vs-p99 frontier lives in
+`benchmarks.bench_serving` (scenario `concurrent_writes`).
+"""
 from __future__ import annotations
 
-import time
+import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import PAPER, build_stacks, percentiles, save_result
-from repro.core import Predicate, unified_query
+from repro.api.ragdb import RagDB
+from repro.core.store import StoreConfig
 from repro.data.corpus import CorpusConfig
+from repro.serving.load import WorkloadConfig, run_scenario
+from repro.serving.scheduler import SchedulerConfig
 
 
 def run(n_writes: int = 200, batch: int = 64) -> dict:
@@ -24,52 +29,74 @@ def run(n_writes: int = 200, batch: int = 64) -> dict:
     unified, split, corpus, (ccfg, scfg) = build_stacks(ccfg)
     rng = np.random.default_rng(7)
 
-    # warm the write paths
+    # -- split stack: direct write loop (the inconsistency window is a
+    # property of the two-commit protocol, not of load) -------------------
     ids = rng.integers(0, ccfg.n_docs, batch)
     emb = rng.standard_normal((batch, ccfg.dim), dtype=np.float32)
-    unified.update(ids, jnp.asarray(emb), np.full(batch, ccfg.now_ts))
-    split.update(ids, emb, np.full(batch, ccfg.now_ts))
-    unified.write_latencies_s.clear()
+    split.update(ids, emb, np.full(batch, ccfg.now_ts))      # warm
     split.stats.write_latencies_s.clear()
     split.stats.inconsistency_windows_s.clear()
-
-    # measured write workload: re-embed `batch` docs per transaction
-    mixed_state_observed = 0
     for w in range(n_writes):
         ids = rng.integers(0, ccfg.n_docs, batch)
         emb = rng.standard_normal((batch, ccfg.dim), dtype=np.float32)
-        ts = np.full(batch, ccfg.now_ts + w + 1)
-        unified.update(ids, jnp.asarray(emb), ts)
-        split.update(ids, emb, ts)
-        # probe the unified store immediately after commit: embedding and
-        # timestamp must correspond to the SAME version (no mixed state)
-        snap = unified.snapshot()
-        slot = unified.slot_of(int(ids[0]))
-        got_ts = int(snap["updated_at"][slot])
-        got_emb = np.asarray(snap["emb"][slot])
-        want = emb[0] / max(np.linalg.norm(emb[0]), 1e-12)
-        if got_ts == ccfg.now_ts + w + 1 and not np.allclose(got_emb, want, atol=1e-5):
-            mixed_state_observed += 1
-
+        split.update(ids, emb, np.full(batch, ccfg.now_ts + w + 1))
     a_write = percentiles(split.stats.write_latencies_s)
     a_window = percentiles(split.stats.inconsistency_windows_s)
-    b_write = percentiles(unified.write_latencies_s)
+
+    # -- unified stack: writes under live queries via the serving harness -
+    db = RagDB(StoreConfig(capacity=scfg.capacity, dim=ccfg.dim),
+               now_ts=ccfg.now_ts)
+    db.ingest(corpus)
+    # size the trace so the write stream is offered at ~40% of measured
+    # write capacity (the split stack just measured the per-write cost on
+    # this rig): an oversubscribed open-loop write stream would queue
+    # without bound and the "concurrent query" tail would measure only
+    # the backlog
+    duration_s = max(n_writes * a_write["mean"] * 2.5e-3, 0.5)
+    # background query load deliberately light: this table measures WRITE
+    # latency in the presence of queries, not query tail under overload
+    # (that is bench_serving's concurrent_writes frontier)
+    wl = WorkloadConfig(duration_s=duration_s,
+                        rate_rps=20.0,
+                        write_rate_rps=n_writes / duration_s,
+                        write_batch=batch,
+                        n_tenants=ccfg.n_tenants, dim=ccfg.dim,
+                        engine="ref", seed=7)
+    # warmup (compiles), then the measured run
+    run_scenario(db, dataclasses.replace(wl, duration_s=0.2),
+                 SchedulerConfig(), write_doc_ids=np.asarray(corpus.doc_id),
+                 now_ts=ccfg.now_ts)
+    res = run_scenario(db, wl, SchedulerConfig(),
+                       write_doc_ids=np.asarray(corpus.doc_id),
+                       now_ts=ccfg.now_ts)
+    r = res.report()
+    wh = r["histograms"].get("write_ms", {})
+    b_write = {"p50": wh.get("p50", 0.0), "p95": wh.get("p95", 0.0),
+               "p99": wh.get("p99", 0.0), "mean": wh.get("mean", 0.0)}
 
     out = {
         "stack_a": {"write": a_write, "inconsistency_window": a_window,
                     "stale_reads_possible": True},
         "stack_b": {"write": b_write,
-                    "inconsistency_window": {"p50": 0.0, "p95": 0.0, "p99": 0.0,
-                                             "mean": 0.0},
+                    "inconsistency_window": {"p50": 0.0, "p95": 0.0,
+                                             "p99": 0.0, "mean": 0.0},
                     "stale_reads_possible": False,
-                    "mixed_state_observed": mixed_state_observed},
+                    "mixed_state_observed": r["mixed_state_observed"],
+                    "writes_under_load": r["writes"],
+                    "concurrent_query_p99_ms":
+                        r["histograms"].get("e2e_ms", {}).get("p99", 0.0)},
         "paper": PAPER["freshness"],
         "n_writes": n_writes, "batch": batch,
     }
-    print(f"Stack A write {a_write['mean']:.2f}ms  window {a_window['mean']:.2f}ms "
+    print(f"Stack A write {a_write['mean']:.2f}ms  "
+          f"window {a_window['mean']:.2f}ms "
           f"(paper {PAPER['freshness']['A_window_ms']}ms)")
-    print(f"Stack B write {b_write['mean']:.2f}ms  window 0.00ms by construction "
-          f"(mixed-state probes: {mixed_state_observed})")
+    print(f"Stack B write {b_write['mean']:.2f}ms under live queries "
+          f"(query p99 "
+          f"{out['stack_b']['concurrent_query_p99_ms']:.1f}ms)  "
+          f"window 0.00ms by construction "
+          f"(mixed-state probes: {r['mixed_state_observed']} mixed "
+          f"of {r['writes']} writes)")
     save_result("bench_freshness", out)
     return out
 

@@ -108,12 +108,16 @@ def percentiles(samples_s: list[float]) -> dict:
 
 
 def timeit(fn, *, iters: int, warmup: int = 5) -> list[float]:
+    """Monotonic-clock timing with a block_until_ready audit: whatever
+    ``fn`` returns is synced inside the timed region, so an async device
+    launch is never credited as free. (Non-array returns pass through
+    block_until_ready untouched; fns that sync internally pay nothing.)"""
     for _ in range(warmup):
-        fn()
+        jax.block_until_ready(fn())
     out = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        fn()
+        jax.block_until_ready(fn())
         out.append(time.perf_counter() - t0)
     return out
 

@@ -68,6 +68,13 @@ class ExecStats:
     terms_scanned: int = 0        # postings lanes streamed by hybrid scans
                                   # (N * doc_terms per one-pass scan) — the
                                   # lexical bandwidth audit trail
+    degraded_plans: int = 0       # plans executed with a non-empty
+                                  # degradation ladder (planner.degrade_plan)
+                                  # — the serving-pressure audit trail
+    stale_serves: int = 0         # cache results served PAST their snapshot
+                                  # under a declared staleness bound
+                                  # (RagDB.execute stale_within_s); never
+                                  # incremented by exact-key hits
 
 
 class CompiledShapes:
@@ -150,7 +157,7 @@ class _Hot:
 
 def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
                 engine: str, sharded_fn=None, ivf=None, nprobe=None,
-                n_valid: int | None = None) -> _Hot:
+                n_valid: int | None = None, skip_rescan: bool = False) -> _Hot:
     """Launch one retrieval device program WITHOUT syncing on its result
     (jax dispatch is async: the arrays are futures until device_get).
 
@@ -158,7 +165,13 @@ def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
     'sharded'; `ivf`/`nprobe` are the IVFIndex and probe depth when engine
     == 'ivf'; `n_valid` is the real row count when q is bucket-padded (the
     probe union must come from real rows — zero padding rows would drag
-    arbitrary clusters into the union)."""
+    arbitrary clusters into the union). ``skip_rescan`` waives the ivf
+    completeness net: degraded plans set it, because their contract is
+    already "recall narrows" — an under-filled k-list IS the degraded
+    answer, and paying a full-arena exact rescan on top of the shallow
+    probe would make every rung BELOW the default nprobe cost MORE than
+    the undegraded plan (the ladder would be a cost inversion, not a
+    shed)."""
     n_arena = store["emb"].shape[0]
     if engine == "sharded":
         if sharded_fn is None:
@@ -184,7 +197,8 @@ def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
                           store["updated_at"], store["category"],
                           store["acl"], dev["members"], dev["overflow"],
                           clusters, pred.as_array(), k)
-        return _Hot(s, sl, rows, rescan=(store, q, pred, k, exact, nv, ivf))
+        rescan = None if skip_rescan else (store, q, pred, k, exact, nv, ivf)
+        return _Hot(s, sl, rows, rescan=rescan)
     s, sl = unified_query(store, q, pred, k, engine=engine)
     return _Hot(s, sl, n_arena)
 
@@ -525,6 +539,21 @@ def _qterms_rows(row_plans, idxs, qt_bucket: int) -> np.ndarray:
     return qt
 
 
+@dataclasses.dataclass
+class InFlightPlans:
+    """A launched-but-unsynced `launch_plans` batch: every hot device
+    program is in flight and every warm probe has been issued, but no
+    `device_get` has happened. `finish_plans` consumes it. The serving
+    scheduler pipelines by holding several of these at once — batch N+1's
+    hot scans launch while batch N's results are still on the device."""
+    inflight: list               # (FusedGroup, member row-index lists, _Hot)
+    warm_results: list           # per unit: list of probe tuples, or None
+    B: int                       # total query rows across plans
+    k: int
+    stats: "ExecStats | None"
+    lex: object                  # hot-tier LexicalArena (rrf merge needs it)
+
+
 def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                   sharded_fn=None, stats: ExecStats | None = None,
                   shapes: CompiledShapes | None = None, index=None,
@@ -552,13 +581,31 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
     Every plan must carry its query rows (`logical.q`, shape (B_i, D)).
     Returns (scores (B, k), slots (B, k), tiers (B, k)) with B = total query
     rows across plans, in plan order. All plans must share one k.
+
+    Phases 1+2 are exposed standalone as `launch_plans` (returns an
+    `InFlightPlans`) and phase 3 as `finish_plans` — the serving
+    scheduler's pipelined batching uses the split directly.
     """
+    return finish_plans(launch_plans(
+        hot_store, warm, plans, sharded_fn=sharded_fn, stats=stats,
+        shapes=shapes, index=index, planner_cfg=planner_cfg, lex=lex))
+
+
+def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
+                 sharded_fn=None, stats: ExecStats | None = None,
+                 shapes: CompiledShapes | None = None, index=None,
+                 planner_cfg=None, lex=None) -> InFlightPlans:
+    """Phases 1+2 of `execute_plans` (see there): launch every hot device
+    program and issue every warm probe WITHOUT a single device_get, and
+    return the in-flight handle `finish_plans` syncs."""
     from repro.api.planner import PlannerConfig, fuse_batch
 
     ks = {p.logical.k for p in plans}
     if len(ks) != 1:
         raise ValueError(f"batched execution needs a single k, got {sorted(ks)}")
     k = ks.pop()
+    if stats is not None:
+        stats.degraded_plans += sum(1 for p in plans if p.degraded)
 
     # flatten plan -> row spans
     row_plans: list[PhysicalPlan] = []
@@ -632,7 +679,7 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                 q_g = _pad_rows(q_g, bucket)
             hot = _launch_hot(hot_store, jnp.asarray(q_g), plan.pred, k,
                               plan.engine, sharded_fn, index, plan.nprobe,
-                              n_valid)
+                              n_valid, skip_rescan=bool(plan.degraded))
         inflight.append((unit, member_idxs, hot))
         if stats is not None:
             n_rows_unit = sum(len(m) for m in member_idxs)
@@ -671,12 +718,20 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                 stats.device_calls += warm.stats.round_trips - rt0
                 stats.warm_queries += len(m)
         warm_results.append(probes)
+    return InFlightPlans(inflight=inflight, warm_results=warm_results,
+                         B=B, k=k, stats=stats, lex=lex)
 
-    # -- phase 3: first device_get, tier merges, scatter -----------------
+
+def finish_plans(pending: InFlightPlans):
+    """Phase 3 of `execute_plans`: the FIRST device_get. Syncs every
+    in-flight unit, runs ivf completeness rescans, merges tiers, scatters
+    into row order. Returns (scores, slots, tiers)."""
+    B, k, stats, lex = pending.B, pending.k, pending.stats, pending.lex
     scores = np.full((B, k), np.float32(np.finfo(np.float32).min), np.float32)
     slots = np.full((B, k), -1, np.int32)
     tiers = np.full((B, k), TIER_HOT, np.int32)
-    for (unit, member_idxs, hot), probes in zip(inflight, warm_results):
+    for (unit, member_idxs, hot), probes in zip(pending.inflight,
+                                                pending.warm_results):
         hs, hi = _finish_hot(hot)
         if stats is not None:
             stats.rows_scanned += hot.rows

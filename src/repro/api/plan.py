@@ -115,6 +115,11 @@ class PhysicalPlan:
     lex: tuple | None = None          # hybrid engine: (fusion mode,
                                       # query-term-count bucket, w_dense,
                                       # w_lex) — the score-mix identity
+    degraded: tuple[str, ...] = ()    # applied degradation rungs, oldest
+                                      # first (planner.degrade_plan) — an
+                                      # audit annotation, never part of the
+                                      # group key (the degraded engine/
+                                      # nprobe already key differently)
 
     @property
     def group_key(self) -> tuple:
@@ -204,4 +209,8 @@ class PhysicalPlan:
             f"  bucket:    {rows} query rows -> {bucket_rows(rows)} (pow2 shape reuse)",
             f"  cost:      {cost}",
         ]
+        if self.degraded:
+            lines.append(
+                f"  degraded:  {' -> '.join(self.degraded)} "
+                f"(deadline pressure; results exact for THIS plan)")
         return "\n".join(lines)

@@ -153,6 +153,11 @@ class PlannerConfig:
                                       # sharing a fuse key scan once (a huge
                                       # value disables fusion)
     cost_model: CostModel | None = None
+    # serving-path hints (consumed by serving.scheduler + degrade_plan):
+    deadline_ms: float | None = None  # per-query latency SLO; compile_plan
+                                      # annotates plans whose estimate busts
+                                      # it, the scheduler degrades them
+    degrade_min_nprobe: int = 1       # nprobe floor for the ivf rung
 
     @classmethod
     def with_measured_costs(cls, path: str | None = None,
@@ -425,6 +430,10 @@ def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
                                        warm_lex=warm_lex)
     est = (cfg.cost_model.estimate_ms(engine, n_rows)
            if cfg.cost_model is not None else None)
+    if (cfg.deadline_ms is not None and est is not None
+            and est > cfg.deadline_ms):
+        engine_reason += (f"; est busts deadline hint {cfg.deadline_ms:g}ms "
+                          "— degradable under load")
     nprobe = ivf_est = lex_key = None
     if engine == "hybrid":
         qt_bucket = bucket_rows(len(logical.match_terms))
@@ -450,3 +459,97 @@ def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
                         cost_source=("measured" if est is not None
                                      else "static-thresholds"),
                         nprobe=nprobe, ivf_est=ivf_est, lex=lex_key)
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware plan degradation (the serving scheduler's ladder)
+# ---------------------------------------------------------------------------
+
+def degrade_plan(plan: PhysicalPlan, *, n_rows: int, hot_window_s: int,
+                 now_ts: int, warm_rows: int,
+                 cfg: PlannerConfig = PlannerConfig(),
+                 has_mesh: bool = False, index=None,
+                 lex=None, warm_lex: bool = False) -> PhysicalPlan | None:
+    """One rung DOWN the degradation ladder, or None when it is exhausted.
+
+    Every rung produces a plan that is still a real, standalone-compilable
+    plan — executing the degraded plan through the scheduler is bit-identical
+    to compiling and running it directly (tests/test_scheduler.py asserts
+    this). What degrades is the QUERY CONTRACT (probe depth, score signal),
+    never the isolation clauses: tenant/ACL/recency predicates ride through
+    every rung untouched, so a degraded response can narrow recall but can
+    never widen visibility. The rungs, in order of preference:
+
+      1. ivf nprobe shrink — halve the probe depth (floor
+         ``cfg.degrade_min_nprobe``): recall narrows, the scan shrinks
+         proportionally, predicate exactness is untouched. Degraded probes
+         also WAIVE the executor's completeness rescan — an under-filled
+         k-list is the degraded answer, not a trigger for a full-arena
+         exact scan (with the rescan in play, every rung below the default
+         depth would cost MORE than the undegraded plan);
+      2. hybrid -> dense — drop the lexical signal and recompile as a pure
+         dense plan on the cheapest available engine (the one rung that
+         changes what the query RANKS ON, which is why it is recorded in
+         `explain()` and `ExecStats` rather than applied silently);
+      3. ivf -> exact — at the nprobe floor, switch to the cheapest exact
+         engine when the cost model prices it under the floored probe
+         (starved/rescan-prone predicates make the probe a pure tax there).
+
+    Exhausted (None) means the scheduler's only remaining lever is a
+    cache-stale serve within the declared staleness bound (RagDB.execute's
+    ``stale_within_s``) — that rung lives in the cache, not in the plan.
+
+    >>> from repro.api.plan import LogicalPlan
+    >>> lp = LogicalPlan(k=5)
+    >>> p = compile_plan(lp, n_rows=1 << 10, hot_window_s=10, now_ts=0,
+    ...                  warm_rows=0)
+    >>> degrade_plan(p, n_rows=1 << 10, hot_window_s=10, now_ts=0,
+    ...              warm_rows=0) is None          # ref plan: nothing to shed
+    True
+    """
+    kw = dict(n_rows=n_rows, hot_window_s=hot_window_s, now_ts=now_ts,
+              warm_rows=warm_rows, cfg=cfg, has_mesh=has_mesh, index=index,
+              lex=lex, warm_lex=warm_lex)
+    if plan.engine == "ivf" and plan.nprobe is not None:
+        floor = max(int(cfg.degrade_min_nprobe), 1)
+        if plan.nprobe > floor:
+            new_nprobe = max(plan.nprobe // 2, floor)
+            ivf_est, est = plan.ivf_est, plan.est_cost_ms
+            if index is not None:
+                q_rows = (1 if plan.logical.q is None
+                          else len(np.atleast_2d(plan.logical.q)))
+                cand = index.candidate_rows(new_nprobe, rows=q_rows)
+                ivf_est = (index.n_clusters, index.cluster_cap, cand)
+                if est is not None and plan.ivf_est and plan.ivf_est[2]:
+                    # the measured curve prices the DEFAULT probe depth; a
+                    # shallower probe scans proportionally fewer candidates
+                    est = est * cand / plan.ivf_est[2]
+            return dataclasses.replace(
+                plan, nprobe=new_nprobe, ivf_est=ivf_est, est_cost_ms=est,
+                degraded=plan.degraded + (
+                    f"nprobe {plan.nprobe}->{new_nprobe}",))
+        # at the floor: switch to the cheapest exact engine only when the
+        # cost model actually prices it under the floored probe
+        cm = cfg.cost_model
+        if cm is not None:
+            exacts = [e for e in _candidate_engines(has_mesh)
+                      if e in ("ref", "pallas")]
+            ests = {e: cm.estimate_ms(e, n_rows) for e in exacts}
+            ests = {e: v for e, v in ests.items() if v is not None}
+            floor_est = plan.est_cost_ms
+            if ests and floor_est is not None:
+                best = min(ests, key=lambda e: ests[e])
+                if ests[best] < floor_est:
+                    fresh = compile_plan(dataclasses.replace(
+                        plan.logical, engine=best), **kw)
+                    return dataclasses.replace(
+                        fresh, degraded=plan.degraded + (f"ivf->{best}",))
+        return None
+    if plan.engine == "hybrid":
+        dense = dataclasses.replace(plan.logical, match_terms=None,
+                                    fusion="wsum", w_dense=1.0, w_lex=1.0,
+                                    engine=None)
+        fresh = compile_plan(dense, **kw)
+        return dataclasses.replace(
+            fresh, degraded=plan.degraded + ("hybrid->dense",))
+    return None

@@ -30,14 +30,16 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from collections import OrderedDict
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.executor import CompiledShapes, ExecStats, execute_plans
+from repro.api.executor import (CompiledShapes, ExecStats, InFlightPlans,
+                                finish_plans, launch_plans)
 from repro.api.plan import ALL_BITS, ANY_TENANT, LogicalPlan, PhysicalPlan
-from repro.api.planner import PlannerConfig, compile_plan
+from repro.api.planner import PlannerConfig, compile_plan, degrade_plan
 from repro.core.ivf import IVFConfig, IVFIndex, build_ivf
 from repro.core.query import make_sharded_query
 from repro.core.router import TieredRouter
@@ -75,6 +77,16 @@ class ResultCache:
     Hot-only plans key ``warm commit_count`` as -1 so warm-tier writes don't
     evict results they provably cannot change.
 
+    STALENESS-BOUNDED serves (the serving scheduler's last degradation
+    rung): every entry also records its insertion time and its *stale key*
+    — the (plan group key, query digest) identity WITHOUT the commit
+    counters. `get_stale` answers "the newest snapshot we ever cached for
+    this exact plan+query", but only when that snapshot is at most
+    ``max_age_s`` old — the declared staleness bound. A stale serve is
+    therefore still a REAL result of the same plan, just of an older
+    snapshot, and its age is returned so the bound is auditable. Exact
+    `get` hits never count as stale.
+
     >>> rc = ResultCache(cap=2)
     >>> rc.put(("k1", 0), "r1"); rc.get(("k1", 0))
     'r1'
@@ -85,13 +97,23 @@ class ResultCache:
     True
     >>> (rc.hits, rc.misses)
     (1, 2)
+    >>> rc2 = ResultCache(cap=4)
+    >>> rc2.put(("g", "q", 7), "old", now=10.0, stale_key=("g", "q"))
+    >>> value, age = rc2.get_stale(("g", "q"), now=10.4, max_age_s=0.5)
+    >>> value, round(age, 6)
+    ('old', 0.4)
+    >>> rc2.get_stale(("g", "q"), now=11.0, max_age_s=0.5) is None
+    True
     """
 
     def __init__(self, cap: int = 256):
         self.cap = cap
+        # key -> (value, insert time, stale_key-or-None)
         self._lru: OrderedDict[tuple, tuple] = OrderedDict()
+        self._latest: dict[tuple, tuple] = {}   # stale_key -> newest full key
         self.hits = 0
         self.misses = 0
+        self.stale_hits = 0
 
     def __len__(self) -> int:
         return len(self._lru)
@@ -103,13 +125,56 @@ class ResultCache:
             return None
         self.hits += 1
         self._lru.move_to_end(key)
-        return hit
+        return hit[0]
 
-    def put(self, key: tuple, value) -> None:
-        self._lru[key] = value
+    def get_stale(self, stale_key: tuple, *, now: float, max_age_s: float):
+        """The newest entry sharing this plan+query identity, if it is at
+        most ``max_age_s`` seconds old. Returns (value, age_s) or None.
+        Does NOT count toward hits/misses (the exact lookup already did)."""
+        full = self._latest.get(stale_key)
+        ent = self._lru.get(full) if full is not None else None
+        if ent is None:
+            return None
+        value, t, _ = ent
+        age = now - t
+        if age > max_age_s:
+            return None
+        self.stale_hits += 1
+        self._lru.move_to_end(full)
+        return value, age
+
+    def put(self, key: tuple, value, *, now: float = 0.0,
+            stale_key: tuple | None = None) -> None:
+        self._lru[key] = (value, now, stale_key)
         self._lru.move_to_end(key)     # re-put of a resident key is a use
+        if stale_key is not None:
+            self._latest[stale_key] = key
         while len(self._lru) > self.cap:
-            self._lru.popitem(last=False)
+            old_key, (_, _, sk) = self._lru.popitem(last=False)
+            if sk is not None and self._latest.get(sk) == old_key:
+                del self._latest[sk]
+
+
+@dataclasses.dataclass
+class PendingExecution:
+    """A `RagDB.launch`ed batch awaiting `RagDB.finish` — the db-level
+    handle the serving scheduler pipelines on (launch batch N+1 while this
+    one's device_gets are in flight).
+
+    ``served`` records per-plan provenance: "cache" (exact snapshot key
+    hit), "stale" (served from an older snapshot within the caller's
+    ``stale_within_s`` bound — age in ``stale_age_s``), or "fresh" (ran on
+    device this call)."""
+    plans: list[PhysicalPlan]
+    per_plan: list[tuple | None]      # cache-served chunks; misses are None
+    rows: list[int]                   # query rows per plan (concat offsets)
+    misses: list[tuple[int, tuple | None]]   # (plan index, cache key)
+    inflight: InFlightPlans | None    # executor handle; None = all cached
+    served: list[str]                 # "cache" | "stale" | "fresh" per plan
+    stale_age_s: list[float | None]   # age of each stale serve, else None
+    use_cache: bool
+    before_hot: int                   # stats watermarks for the router
+    before_warm: int                  # counter reconciliation in finish()
 
 
 class RagDB:
@@ -162,6 +227,9 @@ class RagDB:
         self.planner_cfg = planner_cfg
         self.mesh, self.shard_axes = mesh, shard_axes
         self.stats = ExecStats()
+        # monotonic clock for cache-entry ages (staleness-bounded serves);
+        # tests and the fake-clock scheduler override it
+        self.clock = time.monotonic
         self._sharded_fns: dict[int, object] = {}     # k -> compiled query
         # adaptive serving fast path: bucketed program-shape reuse + the
         # snapshot-exact result cache (size 0 disables either).
@@ -392,7 +460,21 @@ class RagDB:
         return (plan.group_key, q.shape, digest,
                 self.log.commit_count, warm_commits, index_epoch, lex_version)
 
-    def execute(self, plans: list[PhysicalPlan], *, use_cache: bool = True):
+    def degrade(self, plan: PhysicalPlan) -> PhysicalPlan | None:
+        """One rung down the deadline-degradation ladder for ``plan`` in
+        THIS db's compile context, or None when the ladder is exhausted
+        (see planner.degrade_plan — the serving scheduler's lever)."""
+        snap = self.log.snapshot()
+        return degrade_plan(
+            plan, n_rows=snap["emb"].shape[0],
+            hot_window_s=self.router.hot_window_s,
+            now_ts=self.router.now_ts, warm_rows=self.router.warm.n_docs,
+            cfg=self.planner_cfg, has_mesh=self.mesh is not None,
+            index=self.index, lex=self.lex,
+            warm_lex=self.router.warm.lex is not None)
+
+    def execute(self, plans: list[PhysicalPlan], *, use_cache: bool = True,
+                stale_within_s: float | None = None):
         """Predicate-group batched, fusion-aware, async execution; see
         executor.execute_plans.
 
@@ -401,19 +483,49 @@ class RagDB:
         one bucketed, grouped `execute_plans` call — exact-engine groups
         sharing a fuse key collapse into one grouped scan, and every hot
         program launches before the first device sync. Router stats stay
-        coherent for callers watching the old counters."""
+        coherent for callers watching the old counters.
+
+        ``stale_within_s`` (the serving scheduler's last degradation rung)
+        additionally allows a plan whose exact key misses to be served from
+        the newest cached result of the SAME plan+query — an older
+        snapshot — when that entry is at most this many seconds old. Stale
+        serves are counted in ``stats.stale_serves`` and per-plan in the
+        `PendingExecution.served` provenance, never as cache hits."""
+        return self.finish(self.launch(plans, use_cache=use_cache,
+                                       stale_within_s=stale_within_s))
+
+    def launch(self, plans: list[PhysicalPlan], *, use_cache: bool = True,
+               stale_within_s: float | None = None) -> "PendingExecution":
+        """Cache lookups + phase-1/2 launch of every missing plan, WITHOUT
+        a device sync: the returned `PendingExecution` holds cache-served
+        chunks and the in-flight executor handle. The serving scheduler
+        pipelines by launching batch N+1 before finishing batch N."""
         per_plan: list[tuple | None] = [None] * len(plans)
         rows = [1 if p.logical.q is None
                 else int(np.atleast_2d(p.logical.q).shape[0]) for p in plans]
+        served = ["fresh"] * len(plans)
+        stale_age_s: list[float | None] = [None] * len(plans)
         misses: list[tuple[int, tuple | None]] = []
         cache = self.result_cache if use_cache else None
+        now = self.clock()
         for i, p in enumerate(plans):
             key = self._result_key(p) if cache is not None else None
             hit = cache.get(key) if key is not None else None
-            if hit is None:
-                misses.append((i, key))
-            else:
+            if hit is not None:
                 per_plan[i] = hit
+                served[i] = "cache"
+                continue
+            if key is not None and stale_within_s is not None:
+                stale = cache.get_stale(key[:3], now=now,
+                                        max_age_s=stale_within_s)
+                if stale is not None:
+                    per_plan[i], stale_age_s[i] = stale
+                    served[i] = "stale"
+                    self.stats.stale_serves += 1
+                    continue
+            misses.append((i, key))
+        inflight = None
+        before_hot = before_warm = 0
         if misses:
             run_plans = [plans[i] for i, _ in misses]
             # only build the sharded program when a mesh exists; otherwise
@@ -423,23 +535,40 @@ class RagDB:
             k = run_plans[0].logical.k
             before_hot = self.stats.hot_queries
             before_warm = self.stats.warm_queries
-            s, sl, tr = execute_plans(
+            inflight = launch_plans(
                 self.log.snapshot(), self.router.warm, run_plans,
                 sharded_fn=self._sharded_fn(k) if needs_shard else None,
                 stats=self.stats, shapes=self.shapes, index=self.index,
                 planner_cfg=self.planner_cfg, lex=self.lex)
-            self.router.stats.hot_queries += self.stats.hot_queries - before_hot
-            self.router.stats.warm_queries += self.stats.warm_queries - before_warm
+        return PendingExecution(plans=list(plans), per_plan=per_plan,
+                                rows=rows, misses=misses, inflight=inflight,
+                                served=served, stale_age_s=stale_age_s,
+                                use_cache=cache is not None,
+                                before_hot=before_hot,
+                                before_warm=before_warm)
+
+    def finish(self, pending: "PendingExecution"):
+        """Sync a `launch`ed batch (the first device_get), fill the result
+        cache, and concatenate per-plan chunks into (scores, slots, tiers)
+        in plan order."""
+        cache = self.result_cache if pending.use_cache else None
+        if pending.inflight is not None:
+            s, sl, tr = finish_plans(pending.inflight)
+            self.router.stats.hot_queries += (self.stats.hot_queries
+                                              - pending.before_hot)
+            self.router.stats.warm_queries += (self.stats.warm_queries
+                                               - pending.before_warm)
+            now = self.clock()
             off = 0
-            for i, key in misses:
-                chunk = (s[off:off + rows[i]], sl[off:off + rows[i]],
-                         tr[off:off + rows[i]])
-                per_plan[i] = chunk
+            for i, key in pending.misses:
+                n = pending.rows[i]
+                chunk = (s[off:off + n], sl[off:off + n], tr[off:off + n])
+                pending.per_plan[i] = chunk
                 if cache is not None and key is not None:
-                    cache.put(key, chunk)
-                off += rows[i]
+                    cache.put(key, chunk, now=now, stale_key=key[:3])
+                off += n
         # concatenation copies, so cached arrays are never aliased to callers
-        return tuple(np.concatenate([c[j] for c in per_plan], axis=0)
+        return tuple(np.concatenate([c[j] for c in pending.per_plan], axis=0)
                      for j in range(3))
 
     def explain(self) -> str:
@@ -498,6 +627,8 @@ class RagDB:
             f"  grouped scan: fused {st.fused_groups} groups -> "
             f"{st.fused_scans} scans "
             f"({max(st.fused_groups - st.fused_scans, 0)} arena scans saved)",
+            f"  serving:      {st.degraded_plans} degraded plans, "
+            f"{st.stale_serves} stale serves (within declared bound)",
             f"  ivf index:    {index}",
             f"  lexical:      {lexical}",
         ])

@@ -194,9 +194,16 @@ class IVFIndex:
     def probe(self, q: np.ndarray, nprobe: int):
         """Deduplicated probed-cluster union for a batch of query rows.
 
-        Returns (clusters (U_pad,) i32 — pow2-bucketed, -1 padded;
-        n_probed — real clusters in the union; rows_scanned — padded
-        candidate rows the device program will score)."""
+        Returns (clusters (U_pad,) i32 — -1 padded; n_probed — real
+        clusters in the union; rows_scanned — padded candidate rows the
+        device program will score). U_pad is `candidate_rows`'s bound,
+        _pow2(min(B*nprobe, C)) — a function of (B, nprobe) alone, NOT of
+        the actual union size. Determinism here is a serving contract: the
+        device program's shape keys on U_pad, so a data-dependent pad
+        would compile a fresh program whenever a query batch's clusters
+        happened to overlap differently (an unboundable compile-stall
+        source in a latency-SLO path), while this pad keeps the shape
+        space enumerable by warm-up at a modest masked-padding cost."""
         q = np.atleast_2d(np.asarray(q, np.float32))
         nprobe = max(1, min(int(nprobe), self.n_clusters))
         sims = q @ self.centroids.T                         # (B, C)
@@ -205,7 +212,8 @@ class IVFIndex:
         else:
             top = np.broadcast_to(np.arange(self.n_clusters), sims.shape)
         uniq = np.unique(top)
-        clusters = np.full(_pow2(len(uniq)), -1, np.int32)
+        u_pad = _pow2(min(q.shape[0] * nprobe, self.n_clusters))
+        clusters = np.full(u_pad, -1, np.int32)
         clusters[:len(uniq)] = uniq
         rows = len(clusters) * self.cluster_cap + self.overflow_padded
         return clusters, len(uniq), rows

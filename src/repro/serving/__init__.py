@@ -1,0 +1,10 @@
+"""Serving tier: batched RAG engine + open-loop load harness.
+
+  engine.py     RAGEngine — retrieval -> prompt assembly -> prefill -> decode
+  scheduler.py  admission-controlled batching scheduler with deadline-aware
+                plan degradation and staleness-bounded cache serves
+  load.py       open-loop load harness (Poisson arrivals, Zipfian mix,
+                interleaved writes) and scenario runner
+  metrics.py    monotonic-clock histograms + labeled counters; the
+                bench_serving.json snapshot schema
+"""

@@ -79,7 +79,7 @@ class RAGEngine:
                  *, k: int = 4, max_prompt: int = 64, max_len: int = 128,
                  doc_token_fn: Callable[[int], np.ndarray] | None = None,
                  warm_doc_token_fn: Callable[[int], np.ndarray] | None = None,
-                 engine: str = "ref"):
+                 engine: str = "ref", scheduler=None):
         # front-door path: a RagDB executes plans (tier routing included);
         # compat path: a raw Store snapshot goes straight to the grouped
         # executor. Both collapse a batch into one device call per unique
@@ -91,7 +91,16 @@ class RAGEngine:
             self.db = None
             self.store = store
         self._shapes = CompiledShapes()    # raw-store path's bucketed shapes
+        # optional serving.scheduler.Scheduler: retrieval goes through its
+        # admission/degradation path instead of a direct db.execute — a
+        # shed request serves with NO retrieved context (slots all -1),
+        # counted in last_shed_requests. Front-door path only.
+        if scheduler is not None and not isinstance(store, RagDB):
+            raise ValueError("scheduler-backed retrieval needs the "
+                             "front-door path — construct with a RagDB")
+        self.scheduler = scheduler
         self.last_retrieval_device_calls = 0
+        self.last_shed_requests = 0
         self.cfg = cfg
         self.params = params
         self.k = k
@@ -160,6 +169,37 @@ class RAGEngine:
             b = b.in_categories(r.categories)
         return b.plan()
 
+    def _serve_scheduled(self, plans):
+        """Route a batch of lowered plans through the attached scheduler:
+        admission control, deadline degradation, and staleness-bounded
+        serves all apply. Results come back in request order; a shed
+        request contributes empty provenance (slots -1, -inf scores)."""
+        from repro.serving.scheduler import ServeRequest
+        sched = self.scheduler
+        now = sched.clock()
+        k = plans[0].logical.k
+        B = len(plans)
+        scores = np.full((B, k), -np.inf, np.float32)
+        slots = np.full((B, k), -1, np.int32)
+        tiers = np.zeros((B, k), np.int32)
+        self.last_shed_requests = 0
+        offered = []
+        for i, p in enumerate(plans):
+            req = ServeRequest(plan=p, arrival_t=now, req_id=i,
+                               tenant=p.pred.tenant)
+            if sched.offer(req):
+                offered.append(i)
+            else:
+                self.last_shed_requests += 1
+        offered_set = set(offered)
+        for res in sched.run_until_idle():
+            i = res.request.req_id
+            if i in offered_set:
+                scores[i] = res.scores[0]
+                slots[i] = res.slots[0]
+                tiers[i] = res.tiers[0]
+        return scores, slots, tiers
+
     # -- the serving step -------------------------------------------------
     def serve(self, requests: list[Request], *, greedy: bool = True,
               seed: int = 0) -> list[Response]:
@@ -178,7 +218,10 @@ class RAGEngine:
         if self.db is not None:
             plans = [self._lower_request(r, q[i]) for i, r in enumerate(requests)]
             calls0 = self.db.stats.device_calls
-            scores, slots, tiers = self.db.execute(plans)
+            if self.scheduler is not None:
+                scores, slots, tiers = self._serve_scheduled(plans)
+            else:
+                scores, slots, tiers = self.db.execute(plans)
             self.last_retrieval_device_calls = self.db.stats.device_calls - calls0
         else:
             if any(r.match_terms is not None for r in requests):
@@ -218,6 +261,10 @@ class RAGEngine:
                 cur = jnp.asarray([rng.choice(len(p_), p=p_) for p_ in probs],
                                   jnp.int32)
             idx += 1
+        # timing hygiene: the loop's final decode launch is still in flight
+        # here — sync it so decode_ms charges ALL the decode work, not just
+        # the launches the host happened to wait for.
+        jax.block_until_ready(cur)
         t3 = time.perf_counter()
 
         return [Response(doc_slots=slots[i], doc_scores=scores[i],

@@ -1,0 +1,113 @@
+"""Serving observability: monotonic-clock histograms + labeled counters.
+
+The serving loop measures four stages per request — queue wait (arrival ->
+service start), plan (lower + compile + degrade), device (launch -> sync),
+and end-to-end — each on `time.perf_counter`-style monotonic clocks, never
+wall time. Percentiles are exact (sorted-sample interpolation over every
+observation), because serving benchmarks here run 1e3–1e5 requests and the
+whole point is the tail: a p999 from a lossy sketch would defeat the audit.
+
+`MetricsRegistry` is the one aggregation point: the scheduler and the load
+harness both write into it, and `snapshot()` is the schema that
+`benchmarks/bench_serving.py` dumps into `results/bench_serving.json`
+(documented in docs/api.md).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: The percentile set every histogram reports. p999 is the acceptance
+#: criterion's tail; p50 anchors the "p99 blows past 10x p50" overload test.
+PERCENTILES = (50.0, 95.0, 99.0, 99.9)
+
+
+class Histogram:
+    """Append-only latency histogram (values in ms, monotonic-clock deltas).
+
+    >>> h = Histogram()
+    >>> for v in range(1, 101):
+    ...     h.observe(float(v))
+    >>> s = h.snapshot()
+    >>> s["count"], s["p50"], s["max"]
+    (100, 50.5, 100.0)
+    >>> Histogram().snapshot()["count"]
+    0
+    """
+
+    __slots__ = ("_values",)
+
+    def __init__(self):
+        self._values: list[float] = []
+
+    def observe(self, value_ms: float) -> None:
+        self._values.append(float(value_ms))
+
+    def __len__(self) -> int:
+        return len(self._values)
+
+    def values(self) -> np.ndarray:
+        return np.asarray(self._values, np.float64)
+
+    def snapshot(self) -> dict:
+        """count/mean/max plus p50/p95/p99/p999 (linear interpolation)."""
+        if not self._values:
+            return {"count": 0}
+        v = np.sort(self.values())
+        out = {"count": int(v.size),
+               "mean": float(v.mean()),
+               "max": float(v[-1])}
+        pcts = np.percentile(v, PERCENTILES)
+        for p, x in zip(PERCENTILES, pcts):
+            out[f"p{str(p).rstrip('0').rstrip('.').replace('.', '')}"] = float(x)
+        return out
+
+
+class MetricsRegistry:
+    """Named histograms + labeled counters with one `snapshot()` dump.
+
+    Counters are keyed (name, sorted label items) so per-engine and
+    per-tenant breakdowns share one primitive:
+
+    >>> m = MetricsRegistry()
+    >>> m.inc("requests", engine="ivf"); m.inc("requests", engine="ivf")
+    >>> m.inc("requests", engine="ref")
+    >>> m.hist("e2e_ms").observe(1.5)
+    >>> snap = m.snapshot()
+    >>> snap["counters"]["requests{engine=ivf}"]
+    2
+    >>> snap["histograms"]["e2e_ms"]["count"]
+    1
+    """
+
+    def __init__(self):
+        self._hists: dict[str, Histogram] = {}
+        self._counters: dict[tuple, int] = {}
+
+    def hist(self, name: str) -> Histogram:
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = Histogram()
+        return h
+
+    def inc(self, name: str, by: int = 1, **labels) -> None:
+        key = (name, tuple(sorted(labels.items())))
+        self._counters[key] = self._counters.get(key, 0) + by
+
+    def counter(self, name: str, **labels) -> int:
+        return self._counters.get((name, tuple(sorted(labels.items()))), 0)
+
+    def counter_total(self, name: str) -> int:
+        """Sum of a counter across all label combinations."""
+        return sum(v for (n, _), v in self._counters.items() if n == name)
+
+    def snapshot(self) -> dict:
+        """The bench_serving.json per-scenario schema: every histogram's
+        percentile summary + every counter flattened to `name{k=v,...}`."""
+        counters = {}
+        for (name, labels), v in sorted(self._counters.items()):
+            key = name if not labels else (
+                name + "{" + ",".join(f"{k}={val}" for k, val in labels) + "}")
+            counters[key] = v
+        return {"histograms": {n: h.snapshot()
+                               for n, h in sorted(self._hists.items())},
+                "counters": counters}

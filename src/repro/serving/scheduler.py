@@ -1,0 +1,262 @@
+"""Admission-controlled async scheduler in front of `RagDB`.
+
+The serving loop between the load harness and the executor:
+
+- **bounded queue + load shedding** — `offer()` admits a request or sheds it
+  immediately when the queue is full. Shedding at admission keeps queue wait
+  bounded (a request that would wait past its deadline anyway is refused
+  while the refusal is still cheap), which is what holds p99 under overload.
+- **continuous bucketed batching** — `step()` drains a same-k run of the
+  queue (the executor's one-k-per-call contract), launches it through
+  `RagDB.launch` (phase-1/2 of the executor's three-phase dispatch: every
+  hot program is in flight before any sync), and only *then* finishes the
+  PREVIOUS batch's `PendingExecution` — batch N+1's device work overlaps
+  batch N's device_get.
+- **deadline-aware degradation** — each drained request gets a remaining
+  budget (`slo_ms` minus its measured queue wait). When the cost model says
+  the plan busts the budget, or queue pressure crosses the configured
+  fraction, the scheduler walks `RagDB.degrade` rungs (nprobe halving ->
+  engine switch, each a real compiled plan, bit-identical to running that
+  degraded plan directly). Past `stale_pressure` it also allows
+  staleness-bounded cache serves (`RagDB.launch(stale_within_s=...)`).
+  Degradations land in the plan's `explain()` and in `ExecStats`; tenant
+  and ACL clauses ride through every rung untouched.
+
+The scheduler is deliberately synchronous-single-threaded: requests arrive
+on the harness's wall clock, and the overlap that matters (device compute
+vs host-side planning + device_get) comes from the launch/finish split, not
+host threads. `clock` is injectable so tests drive it deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.api.plan import PhysicalPlan
+from repro.api.ragdb import PendingExecution, RagDB
+from repro.serving.metrics import MetricsRegistry
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    """Serving knobs (documented in docs/api.md).
+
+    ``admission=False`` is the measurement baseline: an unbounded FIFO with
+    no shedding, no degradation, and no stale serves — exactly the queue
+    whose p99 blows up under overload in bench_serving.py."""
+    slo_ms: float = 50.0            # per-request end-to-end deadline
+    max_queue: int = 64             # admission bound; offer() sheds beyond it
+    max_batch: int = 16             # max requests drained per step()
+    admission: bool = True          # False = baseline FIFO (no shed/degrade)
+    degrade_pressure: float = 0.5   # queue-fill fraction -> one ladder rung
+    stale_pressure: float = 0.9     # queue-fill fraction -> allow stale serves
+    stale_within_s: float | None = None   # staleness bound; None disables
+    use_cache: bool = True          # snapshot-exact result cache on/off
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One admitted retrieval request. ``plan`` was lowered through
+    `db.session(principal)` by the caller, so tenant/ACL clauses are already
+    stamped structurally — the scheduler never sees a principal and cannot
+    widen visibility, under any degradation."""
+    plan: PhysicalPlan
+    arrival_t: float               # scheduler-clock seconds (queue-wait base)
+    req_id: int = 0
+    tenant: int = -2               # metrics label only (plan.pred is the law)
+
+    @property
+    def rows(self) -> int:
+        q = self.plan.logical.q
+        return 1 if q is None else int(np.atleast_2d(q).shape[0])
+
+
+@dataclasses.dataclass
+class ServedResult:
+    """Per-request outcome: result arrays + the full serving audit trail."""
+    request: ServeRequest
+    scores: np.ndarray
+    slots: np.ndarray
+    tiers: np.ndarray
+    served: str                    # "fresh" | "cache" | "stale"
+    stale_age_s: float | None
+    degraded: tuple[str, ...]      # ladder rungs applied (() = full plan)
+    queue_wait_ms: float
+    service_ms: float              # launch -> finish for this batch
+    e2e_ms: float                  # arrival -> result available
+    deadline_met: bool
+
+
+class Scheduler:
+    """See module docstring. One instance per RagDB; not thread-safe (the
+    open-loop harness is single-threaded by design)."""
+
+    def __init__(self, db: RagDB, cfg: SchedulerConfig = SchedulerConfig(),
+                 *, clock=None, metrics: MetricsRegistry | None = None):
+        self.db = db
+        self.cfg = cfg
+        # one clock for queue waits AND cache-entry ages — tests inject a
+        # fake; the db's monotonic clock is the default
+        self.clock = clock if clock is not None else db.clock
+        if clock is not None:
+            db.clock = clock
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.queue: deque[ServeRequest] = deque()
+        # at most one batch in flight beyond the one being launched: the
+        # executor's device_get pipeline depth
+        self._pending: list[tuple[PendingExecution, list[ServeRequest],
+                                  list[float], float]] = []
+        self.shed_count = 0
+
+    # -- admission ---------------------------------------------------------
+    def offer(self, req: ServeRequest) -> bool:
+        """Admit ``req`` or shed it (bounded queue). Returns admitted."""
+        if self.cfg.admission and len(self.queue) >= self.cfg.max_queue:
+            self.shed_count += 1
+            self.metrics.inc("shed", tenant=req.tenant)
+            return False
+        self.queue.append(req)
+        return True
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or bool(self._pending)
+
+    # -- degradation policy ------------------------------------------------
+    def _degrade_for(self, req: ServeRequest, budget_ms: float,
+                     pressure: float) -> PhysicalPlan:
+        """Walk ladder rungs until the plan fits its budget: every rung the
+        cost model prices over budget comes off, and raw queue pressure
+        past ``degrade_pressure`` costs rungs even without a model — one
+        rung at the threshold, another per 0.2 of pressure above it, so a
+        nearly-full queue walks ivf plans to the nprobe floor while a
+        barely-pressured one sheds only probe depth."""
+        plan = req.plan
+        dp = self.cfg.degrade_pressure
+        pressure_rungs = (0 if pressure < dp
+                          else 1 + int((pressure - dp) / 0.2))
+        while True:
+            est = plan.est_cost_ms
+            over_budget = est is not None and est > max(budget_ms, 0.0)
+            pressured = len(plan.degraded) < pressure_rungs
+            if not (over_budget or pressured):
+                return plan
+            nxt = self.db.degrade(plan)
+            if nxt is None:
+                return plan
+            rung = nxt.degraded[len(plan.degraded)]
+            self.metrics.inc("degradations", rung=rung.split(" ")[0])
+            plan = nxt
+
+    # -- the scheduling round ----------------------------------------------
+    def step(self) -> list[ServedResult]:
+        """One round: drain a same-k run of the queue, degrade under
+        pressure, LAUNCH it, then FINISH the previous batch and return its
+        results. Call `flush()` to drain the pipeline at end of trace."""
+        out: list[ServedResult] = []
+        batch: list[ServeRequest] = []
+        while (self.queue and len(batch) < self.cfg.max_batch
+               and self.queue[0].plan.logical.k
+               == (batch[0].plan.logical.k if batch
+                   else self.queue[0].plan.logical.k)):
+            batch.append(self.queue.popleft())
+        if batch:
+            now = self.clock()
+            # pressure = queue depth AT DRAIN TIME (batch included) over the
+            # admission bound — post-drain depth would read near-zero right
+            # after a burst filled the queue, exactly when degradation
+            # should be kicking in
+            depth = len(self.queue) + len(batch)
+            pressure = (depth / max(self.cfg.max_queue, 1)
+                        if self.cfg.admission else 0.0)
+            plans, waits, allow_stale = [], [], False
+            for r in batch:
+                wait_ms = (now - r.arrival_t) * 1e3
+                waits.append(wait_ms)
+                self.metrics.hist("queue_wait_ms").observe(wait_ms)
+                budget = self.cfg.slo_ms - wait_ms
+                plan = (self._degrade_for(r, budget, pressure)
+                        if self.cfg.admission else r.plan)
+                if self.cfg.admission and self.cfg.stale_within_s is not None:
+                    allow_stale |= (budget <= 0
+                                    or pressure >= self.cfg.stale_pressure)
+                plans.append(plan)
+            if self.cfg.admission:
+                # batch-homogeneous depth: every plan walks to the DEEPEST
+                # rung count any request in the batch needed. A mixed-rung
+                # batch cannot fuse — each distinct rung mix is a novel
+                # group layout, i.e. a fresh compile in the serving path —
+                # while a homogeneous batch stays one already-warm program.
+                # (Each rung is still a real plan: bit-identity per rung
+                # holds; homogenization only picks WHICH rung runs.)
+                deepest = max(len(p.degraded) for p in plans)
+                for i, p in enumerate(plans):
+                    while (len(p.degraded) < deepest
+                           and (nxt := self.db.degrade(p)) is not None):
+                        rung = nxt.degraded[len(p.degraded)]
+                        self.metrics.inc("degradations",
+                                         rung=rung.split(" ")[0])
+                        p = nxt
+                    plans[i] = p
+            for r, p in zip(batch, plans):
+                self.metrics.inc("requests", engine=p.engine)
+                self.metrics.inc("requests", tenant=r.tenant)
+            pending = self.db.launch(
+                plans, use_cache=self.cfg.use_cache,
+                stale_within_s=(self.cfg.stale_within_s if allow_stale
+                                else None))
+            # overwrite queued plans with what actually ran, so results
+            # carry the degraded explain()/audit tags
+            for r, p in zip(batch, plans):
+                r.plan = p
+            self._pending.append((pending, batch, waits, now))
+        if len(self._pending) > (1 if batch else 0):
+            out.extend(self._finish_oldest())
+        return out
+
+    def flush(self) -> list[ServedResult]:
+        """Finish every in-flight batch (end-of-trace drain)."""
+        out: list[ServedResult] = []
+        while self._pending:
+            out.extend(self._finish_oldest())
+        return out
+
+    def _finish_oldest(self) -> list[ServedResult]:
+        pending, batch, waits, t_launch = self._pending.pop(0)
+        scores, slots, tiers = self.db.finish(pending)
+        t_done = self.clock()
+        service_ms = (t_done - t_launch) * 1e3
+        self.metrics.hist("service_ms").observe(service_ms)
+        out, off = [], 0
+        for i, r in enumerate(batch):
+            n = r.rows
+            e2e_ms = (t_done - r.arrival_t) * 1e3
+            met = e2e_ms <= self.cfg.slo_ms
+            self.metrics.hist("e2e_ms").observe(e2e_ms)
+            if not met:
+                self.metrics.inc("deadline_miss", tenant=r.tenant)
+            if pending.served[i] == "stale":
+                self.metrics.inc("stale_serves")
+                self.metrics.hist("stale_age_s").observe(
+                    pending.stale_age_s[i])
+            out.append(ServedResult(
+                request=r, scores=scores[off:off + n],
+                slots=slots[off:off + n], tiers=tiers[off:off + n],
+                served=pending.served[i],
+                stale_age_s=pending.stale_age_s[i],
+                degraded=pending.plans[i].degraded,
+                queue_wait_ms=waits[i], service_ms=service_ms,
+                e2e_ms=e2e_ms, deadline_met=met))
+            off += n
+        return out
+
+    def run_until_idle(self) -> list[ServedResult]:
+        """Drain queue + pipeline to empty (closed-loop helper for tests)."""
+        out: list[ServedResult] = []
+        while self.busy:
+            out.extend(self.step())
+            if not self.queue:
+                out.extend(self.flush())
+        return out

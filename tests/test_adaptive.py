@@ -287,7 +287,8 @@ def test_cost_estimate_lands_in_plan_and_explain(rng):
 PLAN_EXPLAIN_FIELDS = ["predicate:", "engine:", "route:", "batching:",
                        "fusion:", "bucket:", "cost:"]
 DB_EXPLAIN_FIELDS = ["planner:", "shape cache:", "result cache:",
-                     "exec stats:", "grouped scan:", "ivf index:"]
+                     "exec stats:", "grouped scan:", "serving:",
+                     "ivf index:"]
 
 
 def test_plan_explain_matches_documented_format(db_stack, rng):

@@ -1,0 +1,250 @@
+"""Deterministic (fake-clock) tests for the admission-controlled scheduler.
+
+Four contracts from the serving design:
+
+1. ADMISSION BOUNDS THE QUEUE — offered load past `max_queue` is shed at
+   admission (cheap refusal), never enqueued; the baseline (admission=False)
+   is the unbounded FIFO whose queue grows without limit.
+2. DEGRADATION IS BIT-IDENTICAL — every response the scheduler serves
+   degraded equals, bit for bit, running that same degraded plan directly
+   through `RagDB.execute`. The rung changes WHICH plan runs, never how.
+3. DEGRADATION IS AUDITED — applied rungs land in the plan's `explain()`,
+   in `ExecStats.degraded_plans`, and in the scheduler's metrics counters:
+   no silent quality loss.
+4. STALE SERVES RESPECT THE BOUND — past `stale_pressure`, a cached result
+   from an older snapshot may be served, but only within the caller's
+   declared `stale_within_s`; beyond it the scheduler computes fresh.
+
+All tests drive an injected fake clock: no sleeps, no wall-clock flake.
+"""
+import numpy as np
+import pytest
+
+from repro.api import RagDB
+from repro.core import Principal, StoreConfig
+from repro.core.store import DocBatch
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.scheduler import (Scheduler, SchedulerConfig,
+                                     ServeRequest)
+
+ALL_BITS = 0xFFFFFFFF
+N_DOCS, DIM, N_TENANTS = 512, 16, 4
+
+
+class FakeClock:
+    """Injectable monotonic clock; tests advance it explicitly."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _db(with_index: bool = True) -> tuple[RagDB, np.ndarray]:
+    rng = np.random.default_rng(0)
+    emb = rng.standard_normal((N_DOCS, DIM), dtype=np.float32)
+    db = RagDB(StoreConfig(capacity=N_DOCS, dim=DIM, metric="dot"))
+    db.ingest(DocBatch(
+        emb=emb,
+        tenant=rng.integers(0, N_TENANTS, N_DOCS).astype(np.int32),
+        category=rng.integers(0, 8, N_DOCS).astype(np.int32),
+        updated_at=np.zeros(N_DOCS, np.int32),
+        acl=np.full(N_DOCS, ALL_BITS, np.uint32),
+        doc_id=np.arange(N_DOCS, dtype=np.int32)))
+    if with_index:
+        db.build_index()
+    return db, emb
+
+
+def _plan(db: RagDB, tenant: int, q: np.ndarray, k: int = 4,
+          engine: str | None = "ivf"):
+    s = db.session(Principal(tenant_id=tenant, group_bits=ALL_BITS))
+    b = s.search(q, normalize=False).limit(k)
+    if engine is not None:
+        b = b.using(engine)
+    return b.plan()
+
+
+def _requests(db, clock, n, *, k=4, engine="ivf", seed=1):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(plan=_plan(db, i % N_TENANTS,
+                                    rng.standard_normal(DIM,).astype(
+                                        np.float32), k=k, engine=engine),
+                         arrival_t=clock(), req_id=i, tenant=i % N_TENANTS)
+            for i in range(n)]
+
+
+# -- 1. admission ----------------------------------------------------------
+
+def test_admission_sheds_before_unbounded_queue_growth():
+    db, _ = _db()
+    clock = FakeClock()
+    cfg = SchedulerConfig(max_queue=8, max_batch=4)
+    sched = Scheduler(db, cfg, clock=clock)
+    admitted = sum(sched.offer(r) for r in _requests(db, clock, 30))
+    assert admitted == 8, "admission must stop exactly at max_queue"
+    assert len(sched.queue) == 8
+    assert sched.shed_count == 22
+    assert sched.metrics.counter_total("shed") == 22
+
+
+def test_baseline_fifo_never_sheds():
+    db, _ = _db()
+    clock = FakeClock()
+    sched = Scheduler(db, SchedulerConfig(max_queue=8, admission=False),
+                      clock=clock)
+    assert all(sched.offer(r) for r in _requests(db, clock, 30))
+    assert len(sched.queue) == 30 and sched.shed_count == 0
+
+
+# -- 2. degraded responses are bit-identical to the degraded plan ----------
+
+def test_each_degradation_rung_bit_identical_to_direct_execution():
+    db, _ = _db()
+    clock = FakeClock()
+    # tiny queue + zero thresholds: every batch is "pressured" and walks
+    # rungs; no cache so every response is a real computation
+    sched = Scheduler(db, SchedulerConfig(
+        slo_ms=50.0, max_queue=4, max_batch=2, degrade_pressure=0.0,
+        use_cache=False), clock=clock)
+    reqs = _requests(db, clock, 4)
+    for r in reqs:
+        sched.offer(r)
+    results = sched.run_until_idle()
+    assert len(results) == 4
+    assert any(res.degraded for res in results), \
+        "pressure thresholds at zero must engage the ladder"
+    for res in results:
+        ran = res.request.plan               # the plan that actually ran
+        assert ran.degraded == res.degraded
+        s, sl, _ = db.execute([ran], use_cache=False)
+        np.testing.assert_array_equal(res.slots, sl)
+        np.testing.assert_array_equal(res.scores, s)
+
+
+def test_every_ladder_rung_bit_identical_standalone():
+    """Walk the full ladder by hand: each rung, served through the
+    scheduler as the ONLY admitted plan, equals direct execution."""
+    db, _ = _db()
+    clock = FakeClock()
+    rng = np.random.default_rng(3)
+    q = rng.standard_normal(DIM).astype(np.float32)
+    plan = _plan(db, tenant=1, q=q)
+    rungs = [plan]
+    while (nxt := db.degrade(rungs[-1])) is not None:
+        rungs.append(nxt)
+    assert len(rungs) >= 2, "ivf plan must expose at least one rung"
+    for rung in rungs:
+        sched = Scheduler(db, SchedulerConfig(use_cache=False), clock=clock)
+        sched.offer(ServeRequest(plan=rung, arrival_t=clock()))
+        (res,) = sched.run_until_idle()
+        s, sl, _ = db.execute([rung], use_cache=False)
+        np.testing.assert_array_equal(res.slots, sl)
+        np.testing.assert_array_equal(res.scores, s)
+        assert res.degraded == rung.degraded
+
+
+# -- 3. degradations are audited -------------------------------------------
+
+def test_degradations_surface_in_explain_stats_and_metrics():
+    db, _ = _db()
+    clock = FakeClock()
+    metrics = MetricsRegistry()
+    before = db.stats.degraded_plans
+    sched = Scheduler(db, SchedulerConfig(
+        max_queue=4, max_batch=2, degrade_pressure=0.0, use_cache=False),
+        clock=clock, metrics=metrics)
+    for r in _requests(db, clock, 4):
+        sched.offer(r)
+    results = sched.run_until_idle()
+    degraded = [r for r in results if r.degraded]
+    assert degraded, "zero thresholds must degrade"
+    for res in degraded:
+        text = res.request.plan.explain()
+        assert "degraded:" in text
+        for rung in res.degraded:
+            assert rung in text, f"rung {rung!r} missing from explain()"
+    assert db.stats.degraded_plans - before == len(degraded)
+    assert metrics.counter_total("degradations") >= len(degraded)
+    assert "degraded plans" in db.explain()
+
+
+# -- 4. staleness-bounded cache serves --------------------------------------
+
+def _one_round(sched, db, clock, q, *, tenant=0):
+    sched.offer(ServeRequest(plan=_plan(db, tenant, q), arrival_t=clock()))
+    (res,) = sched.run_until_idle()
+    return res
+
+
+def test_stale_serve_within_bound_and_fresh_beyond_it():
+    db, emb = _db()
+    clock = FakeClock()
+    rng = np.random.default_rng(5)
+    q = rng.standard_normal(DIM).astype(np.float32)
+    bound = 10.0
+    # stale_pressure=0 -> stale serves allowed whenever the queue is
+    # non-empty; large slo so nothing sheds on deadline
+    cfg = SchedulerConfig(slo_ms=1e6, max_queue=4, degrade_pressure=0.0,
+                          stale_pressure=0.0, stale_within_s=bound)
+    sched = Scheduler(db, cfg, clock=clock)
+
+    first = _one_round(sched, db, clock, q)
+    assert first.served == "fresh"
+
+    # a write invalidates the exact cache key (commit count moved) ...
+    ids = np.arange(8, dtype=np.int64)
+    db.update(ids, rng.standard_normal((8, DIM), dtype=np.float32),
+              np.full(8, 1, np.int64))
+    clock.advance(bound / 2)
+    # ... but within the bound the old snapshot may be served
+    second = _one_round(sched, db, clock, q)
+    assert second.served == "stale"
+    assert second.stale_age_s is not None and second.stale_age_s <= bound
+    np.testing.assert_array_equal(second.slots, first.slots)
+    assert sched.metrics.counter_total("stale_serves") == 1
+    assert db.stats.stale_serves == 1
+
+    # beyond the bound the entry is too old: recompute fresh
+    clock.advance(bound)
+    third = _one_round(sched, db, clock, q)
+    assert third.served == "fresh"
+
+
+def test_no_stale_serve_when_bound_not_declared():
+    db, _ = _db()
+    clock = FakeClock()
+    rng = np.random.default_rng(6)
+    q = rng.standard_normal(DIM).astype(np.float32)
+    cfg = SchedulerConfig(slo_ms=1e6, max_queue=4, degrade_pressure=0.0,
+                          stale_pressure=0.0, stale_within_s=None)
+    sched = Scheduler(db, cfg, clock=clock)
+    assert _one_round(sched, db, clock, q).served == "fresh"
+    ids = np.arange(8, dtype=np.int64)
+    db.update(ids, rng.standard_normal((8, DIM), dtype=np.float32),
+              np.full(8, 1, np.int64))
+    assert _one_round(sched, db, clock, q).served == "fresh"
+
+
+# -- pipelining ------------------------------------------------------------
+
+def test_step_pipelines_one_batch_deep():
+    """step() launches batch N+1 before finishing batch N: the first step
+    returns nothing (its batch is in flight), the second returns the
+    first's results."""
+    db, _ = _db()
+    clock = FakeClock()
+    sched = Scheduler(db, SchedulerConfig(max_batch=2, use_cache=False),
+                      clock=clock)
+    for r in _requests(db, clock, 4):
+        sched.offer(r)
+    first = sched.step()
+    assert first == [] and len(sched._pending) == 1
+    second = sched.step()
+    assert len(second) == 2 and len(sched._pending) == 1
+    assert len(sched.flush()) == 2
+    assert not sched.busy

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Timing-hygiene audit (CI lane): latency must be measured on monotonic
+clocks, and timed regions must sync async device work.
+
+Rules enforced over benchmarks/, src/repro/serving/, and tools/:
+
+1. no `time.time()` in files that measure latency — wall clocks jump
+   (NTP slew, suspend); `time.perf_counter()` / `time.monotonic()` don't.
+   Files listed in WALL_CLOCK_OK legitimately want a wall timestamp
+   (checkpoint metadata), not a latency.
+2. every file that brackets work with perf_counter must also reference a
+   sync point (`block_until_ready`, `.block_until_ready()`, `np.asarray`
+   of device output, or a `device_get`) — a perf_counter pair around a
+   bare async dispatch credits the launch as the whole cost. This is a
+   heuristic presence check, not a dataflow proof; it catches the common
+   regression (a new bench file timing jit launches with no sync at all).
+
+Exit 0 clean, 1 on violations (printed with file:line).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SCOPES = ("benchmarks", os.path.join("src", "repro", "serving"), "tools")
+
+#: wall timestamps (not latency measurements) are fine here; the audit
+#: itself mentions the pattern in its docstring/regex
+WALL_CLOCK_OK = {os.path.join("src", "repro", "training", "checkpoint.py"),
+                 os.path.join("tools", "check_timing_hygiene.py")}
+
+#: perf_counter users that need no device sync: pure-host measurement
+HOST_ONLY_OK = {os.path.join("tools", "check_timing_hygiene.py")}
+
+SYNC_TOKENS = ("block_until_ready", "device_get", "np.asarray", ".finish(",
+               "finish_plans")
+
+
+def audit() -> list[str]:
+    errors: list[str] = []
+    for scope in SCOPES:
+        base = os.path.join(ROOT, scope)
+        for dirpath, _, files in os.walk(base):
+            for fn in sorted(files):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, ROOT)
+                src = open(path).read()
+                lines = src.splitlines()
+                if rel not in WALL_CLOCK_OK:
+                    for i, line in enumerate(lines, 1):
+                        code = line.split("#", 1)[0]
+                        if re.search(r"\btime\.time\(\)", code):
+                            errors.append(
+                                f"{rel}:{i}: time.time() in a latency scope "
+                                f"— use time.perf_counter()")
+                if ("perf_counter" in src and rel not in HOST_ONLY_OK
+                        and ("import jax" in src or "from jax" in src)
+                        and not any(t in src for t in SYNC_TOKENS)):
+                    errors.append(
+                        f"{rel}: times device work with perf_counter but "
+                        f"never syncs (no block_until_ready/device_get/"
+                        f"np.asarray) — async launches are credited as free")
+    return errors
+
+
+def main() -> int:
+    errors = audit()
+    for e in errors:
+        print(f"TIMING-HYGIENE FAIL {e}")
+    if errors:
+        return 1
+    print("timing hygiene OK: monotonic clocks + synced timed regions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
