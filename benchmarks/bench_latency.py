@@ -47,6 +47,14 @@ planner's own engine choice for a match() query. The open fused curve
 joins the `cost_model` engines. `tools/check_bench_regression.py
 --hybrid-only` gates CI on the composed 50k point and the recall ordering.
 Run with ``--hybrid-only --out PATH`` for a fresh comparison file.
+
+The `paged_scan` section (PR 7) measures the paged arena-scan regime: the
+same fused grouped scan with the arena streamed in page_rows-sized tiles
+(double-buffered DMA in the Pallas kernel; page-sized jnp scan tiles on
+CPU) vs VMEM-resident tiling, asserted bit-identical before timing.
+`tools/check_bench_regression.py --paged-only` gates paged p50 within 15%
+of resident at the 50k point. Run with ``--paged-only --out PATH`` for a
+fresh comparison file.
 """
 from __future__ import annotations
 
@@ -128,6 +136,8 @@ def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
     out["cost_model"]["engines"]["ivf"] = out["ivf"]["cost_curve"]
     out["group_sweep"] = run_group_sweep(iters=max(iters // 4, 20),
                                          engine=engine, db=db, ccfg=ccfg)
+    out["paged_scan"] = run_paged_section(iters=max(iters // 4, 20),
+                                          engine=engine, db=db, ccfg=ccfg)
     out["hybrid"] = run_hybrid_section(iters=max(iters // 4, 20))
     # the fused hybrid scan joins the measured cost model: the planner
     # prices (and explain() annotates) match() plans from these curves
@@ -286,6 +296,62 @@ def run_group_sweep(*, iters: int, engine: str = "ref", batch: int = 64,
               f"fused p50={t_fused['p50']:7.2f}ms (1 scan, "
               f"{st_fused.rows_scanned} rows)  "
               f"{row['speedup_p50']:4.1f}x")
+    return out
+
+
+def run_paged_section(*, iters: int, n_docs: int = 50_000, batch: int = 64,
+                      n_groups: int = 8, k: int = 5, page_rows: int = 1 << 15,
+                      engine: str = "ref", db=None, ccfg=None) -> dict:
+    """The paged arena-scan regime, measured (ISSUE 7): the SAME fused
+    grouped scan, VMEM-resident tiling vs page_rows-sized tiles streamed
+    from HBM (double-buffered DMA in the Pallas kernel; the jnp engine
+    tiles at the page size). Bits are asserted identical before timing —
+    paging changes the memory-traffic schedule, never the results — so the
+    only question is overhead: `tools/check_bench_regression.py
+    --paged-only` gates paged p50 within 15% of resident at the 50k point.
+
+    Pass ``db``/``ccfg`` to reuse an already-ingested RagDB (run() does);
+    standalone callers get a fresh ``n_docs``-doc arena."""
+    if db is None:
+        db, _, (ccfg, _) = build_ragdb(CorpusConfig(n_docs=n_docs),
+                                       result_cache_size=0)
+    n_docs = ccfg.n_docs
+    snap = db.log.snapshot()
+    arena = snap["emb"].shape[0]
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((batch, ccfg.dim)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    preds = [Predicate(tenant=i % n_groups, min_ts=ccfg.now_ts - 120 * DAY_S)
+             for i in range(batch)]
+
+    st_res, st_pg = ExecStats(), ExecStats()
+    s_r, i_r, _ = run_grouped_fused(snap, q, preds, k, engine=engine,
+                                    stats=st_res)
+    s_p, i_p, _ = run_grouped_fused(snap, q, preds, k, engine=engine,
+                                    stats=st_pg, page_rows=page_rows)
+    assert (np.asarray(s_r) == np.asarray(s_p)).all(), \
+        "paged scan must be bit-identical to resident"
+    assert (np.asarray(i_r) == np.asarray(i_p)).all()
+    assert st_res.rows_scanned == arena and st_pg.rows_scanned == arena
+
+    t_res = percentiles(timeit(
+        lambda: run_grouped_fused(snap, q, preds, k, engine=engine),
+        iters=iters))
+    t_pg = percentiles(timeit(
+        lambda: run_grouped_fused(snap, q, preds, k, engine=engine,
+                                  page_rows=page_rows), iters=iters))
+    n_pages = -(-arena // page_rows)
+    out = {"batch": batch, "n_docs": n_docs, "arena_rows": arena, "k": k,
+           "engine": engine, "unique_groups": n_groups,
+           "page_rows": page_rows, "n_pages": n_pages,
+           "bit_identical": True,
+           "resident_ms": t_res, "paged_ms": t_pg,
+           "paged_over_resident_p50":
+               t_pg["p50"] / max(t_res["p50"], 1e-9)}
+    print(f"paged scan: N={arena} rows, {page_rows} rows/page "
+          f"-> {n_pages} pages  resident p50={t_res['p50']:7.2f}ms  "
+          f"paged p50={t_pg['p50']:7.2f}ms  "
+          f"ratio {out['paged_over_resident_p50']:.3f} (bits identical)")
     return out
 
 
@@ -546,6 +612,11 @@ def _main():
     ap.add_argument("--hybrid-only", action="store_true",
                     help="run only the hybrid section (CI regression "
                          "gate); writes {'hybrid': ...} to --out")
+    ap.add_argument("--paged-only", action="store_true",
+                    help="run only the paged_scan section (CI regression "
+                         "gate); writes {'paged_scan': ...} to --out")
+    ap.add_argument("--page-rows", type=int, default=1 << 15,
+                    help="with --paged-only: rows per page tile")
     ap.add_argument("--iters", type=int, default=None)
     ap.add_argument("--gs", type=int, nargs="+", default=None,
                     help="with --gsweep-only: group counts to measure "
@@ -574,6 +645,14 @@ def _main():
         if args.out:
             with open(args.out, "w") as f:
                 json.dump({"hybrid": section}, f, indent=1)
+            print(f"wrote {args.out}")
+        return
+    if args.paged_only:
+        section = run_paged_section(iters=args.iters or 20,
+                                    page_rows=args.page_rows)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"paged_scan": section}, f, indent=1)
             print(f"wrote {args.out}")
         return
     run(**({"iters": args.iters} if args.iters else {}))

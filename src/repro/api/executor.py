@@ -68,6 +68,11 @@ class ExecStats:
     terms_scanned: int = 0        # postings lanes streamed by hybrid scans
                                   # (N * doc_terms per one-pass scan) — the
                                   # lexical bandwidth audit trail
+    paged_scans: int = 0          # hot-tier programs launched in the paged
+                                  # arena-scan regime (plan.page_rows set):
+                                  # the memory-traffic audit — bits are
+                                  # identical to resident, only the DMA
+                                  # schedule differs
     degraded_plans: int = 0       # plans executed with a non-empty
                                   # degradation ladder (planner.degrade_plan)
                                   # — the serving-pressure audit trail
@@ -84,7 +89,9 @@ class CompiledShapes:
     their pow2-padded group count (the (G, 4) predicate block is part of
     the program shape), and hybrid scans additionally their score-mix
     identity (fusion mode + query-term-count bucket + weights, which bake
-    into the compiled program). Bucketed batching guarantees that any group whose
+    into the compiled program). Paged launches key on their page size too:
+    paged and resident regimes compile different programs (different grid
+    + DMA schedule). Bucketed batching guarantees that any group whose
     shape is in this set reuses the already-compiled program (XLA caches by
     shape). `touch()` returns True on a hit and records the miss otherwise;
     evicting past ``cap`` models a bounded compile cache, so a shape falling
@@ -113,8 +120,9 @@ class CompiledShapes:
         return len(self._lru)
 
     def touch(self, engine: str, bucket: int, k: int,
-              groups: int | None = None, lex=None) -> bool:
-        key = (engine, bucket, k, groups, lex)
+              groups: int | None = None, lex=None,
+              page_rows: int | None = None) -> bool:
+        key = (engine, bucket, k, groups, lex, page_rows)
         if key in self._lru:
             self.hits += 1
             self._lru.move_to_end(key)
@@ -157,7 +165,8 @@ class _Hot:
 
 def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
                 engine: str, sharded_fn=None, ivf=None, nprobe=None,
-                n_valid: int | None = None, skip_rescan: bool = False) -> _Hot:
+                n_valid: int | None = None, skip_rescan: bool = False,
+                page_rows: int | None = None) -> _Hot:
     """Launch one retrieval device program WITHOUT syncing on its result
     (jax dispatch is async: the arrays are futures until device_get).
 
@@ -188,7 +197,8 @@ def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
         if (pred, k) in ivf.starved:
             # learned: the WHOLE arena can't fill k for this predicate —
             # probing first would be pure waste (memo clears on any write)
-            s, sl = unified_query(store, q, pred, k, engine=exact)
+            s, sl = unified_query(store, q, pred, k, engine=exact,
+                                  page_rows=page_rows)
             return _Hot(s, sl, n_arena)
         clusters, _, rows = ivf.probe(np.asarray(q[:nv]),
                                       nprobe or ivf.cfg.nprobe)
@@ -199,7 +209,8 @@ def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
                           clusters, pred.as_array(), k)
         rescan = None if skip_rescan else (store, q, pred, k, exact, nv, ivf)
         return _Hot(s, sl, rows, rescan=rescan)
-    s, sl = unified_query(store, q, pred, k, engine=engine)
+    s, sl = unified_query(store, q, pred, k, engine=engine,
+                          page_rows=page_rows)
     return _Hot(s, sl, n_arena)
 
 
@@ -234,13 +245,13 @@ def _finish_hot(hot: _Hot) -> tuple[np.ndarray, np.ndarray]:
 
 def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
               engine: str, sharded_fn=None, ivf=None, nprobe=None,
-              n_valid: int | None = None):
+              n_valid: int | None = None, page_rows: int | None = None):
     """One retrieval device program, launched and synced. Returns
     (scores, slots, rows_scanned) where rows_scanned is the arena rows this
     program scored — the full arena for the exact engines, the probed
     candidate set (plus any completeness rescan) for ivf."""
     hot = _launch_hot(store, q, pred, k, engine, sharded_fn, ivf, nprobe,
-                      n_valid)
+                      n_valid, page_rows=page_rows)
     s, sl = _finish_hot(hot)
     return s, sl, hot.rows
 
@@ -248,7 +259,8 @@ def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
 def _pad_group_launch(q: np.ndarray, gids: np.ndarray,
                       preds: list[Predicate], k: int, engine: str, *,
                       stats: ExecStats | None,
-                      shapes: CompiledShapes | None, lex=None):
+                      shapes: CompiledShapes | None, lex=None,
+                      page_rows: int | None = None):
     """Shared bucket/blocker padding for fused grouped launches.
 
     Pads the predicate stack to a pow2 group count with `BLOCK_ALL` rows
@@ -271,7 +283,8 @@ def _pad_group_launch(q: np.ndarray, gids: np.ndarray,
     if stats is not None:
         stats.padded_groups += g_bucket - g_real
     if shapes is not None:
-        shapes.touch(engine, bucket, k, groups=g_bucket, lex=lex)
+        shapes.touch(engine, bucket, k, groups=g_bucket, lex=lex,
+                     page_rows=page_rows)
         if stats is not None:
             stats.padded_rows += bucket - n_valid
         q = _pad_rows(q, bucket)
@@ -283,16 +296,19 @@ def _pad_group_launch(q: np.ndarray, gids: np.ndarray,
 def _launch_grouped(store: Store, q: np.ndarray, gids: np.ndarray,
                     preds: list[Predicate], k: int, engine: str, *,
                     stats: ExecStats | None = None,
-                    shapes: CompiledShapes | None = None) -> _Hot:
+                    shapes: CompiledShapes | None = None,
+                    page_rows: int | None = None) -> _Hot:
     """Launch ONE fused grouped scan answering every predicate group in
     ``preds``. Pads query rows to their pow2 bucket (pointed at a blocker
     lane — sliced off AND asserted empty) and the predicate stack to a
     pow2 group count with `BLOCK_ALL` rows, so a varying group mix reuses
     a small set of compiled shapes."""
     q, gids, preds, n_valid = _pad_group_launch(
-        q, gids, preds, k, engine, stats=stats, shapes=shapes)
+        q, gids, preds, k, engine, stats=stats, shapes=shapes,
+        page_rows=page_rows)
     s, sl = unified_query_grouped(store, jnp.asarray(q), jnp.asarray(gids),
-                                  stack_predicates(preds), k, engine=engine)
+                                  stack_predicates(preds), k, engine=engine,
+                                  page_rows=page_rows)
     return _Hot(s, sl, store["emb"].shape[0], pad_check=n_valid)
 
 
@@ -303,7 +319,7 @@ def _launch_hybrid(store: Store, lex_snap: dict, q: np.ndarray,
                    lists: bool = False,
                    stats: ExecStats | None = None,
                    shapes: CompiledShapes | None = None,
-                   lex_key=None) -> _Hot:
+                   lex_key=None, page_rows: int | None = None) -> _Hot:
     """Launch ONE fused hybrid dense+BM25 scan answering every predicate
     group in ``preds`` — the hybrid engine's only dispatch shape (a single
     group is G=1). ``lex_snap`` is `LexicalArena.snapshot()`; ``qterms``
@@ -313,7 +329,8 @@ def _launch_hybrid(store: Store, lex_snap: dict, q: np.ndarray,
     `_Hot.extra`, and the finish phase rank-fuses after the tier merges."""
     from repro.kernels.hybrid_score.ops import hybrid_score
     q, gids, preds, n_valid = _pad_group_launch(
-        q, gids, preds, k, "hybrid", stats=stats, shapes=shapes, lex=lex_key)
+        q, gids, preds, k, "hybrid", stats=stats, shapes=shapes, lex=lex_key,
+        page_rows=page_rows)
     if q.shape[0] != qterms.shape[0]:
         qterms = np.concatenate(
             [qterms, np.full((q.shape[0] - qterms.shape[0], qterms.shape[1]),
@@ -324,7 +341,7 @@ def _launch_hybrid(store: Store, lex_snap: dict, q: np.ndarray,
                        lex_snap["idf"], jnp.asarray(gids),
                        stack_predicates(preds), jnp.asarray(qterms), k,
                        mode=mode, w_dense=w_dense, w_lex=w_lex, rrf_c=rrf_c,
-                       lists=lists)
+                       lists=lists, page_rows=page_rows)
     n_arena = store["emb"].shape[0]
     if stats is not None:
         stats.terms_scanned += n_arena * int(lex_snap["terms"].shape[1])
@@ -339,7 +356,8 @@ def _launch_hybrid(store: Store, lex_snap: dict, q: np.ndarray,
 def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
                 engine: str = "ref", *, sharded_fn=None, ivf=None,
                 nprobe=None, stats: ExecStats | None = None,
-                shapes: CompiledShapes | None = None):
+                shapes: CompiledShapes | None = None,
+                page_rows: int | None = None):
     """Predicate-group batched retrieval over one store — the per-group
     LOOP: one device call per unique predicate, each streaming the arena.
 
@@ -362,12 +380,13 @@ def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
         n_valid = q_g.shape[0]
         if shapes is not None:
             bucket = bucket_rows(n_valid)
-            shapes.touch(engine, bucket, k)
+            shapes.touch(engine, bucket, k, page_rows=page_rows)
             if stats is not None:
                 stats.padded_rows += bucket - n_valid
             q_g = _pad_rows(q_g, bucket)
         s, sl, rows = _dispatch(store, jnp.asarray(q_g), pred, k, engine,
-                                sharded_fn, ivf, nprobe, n_valid)
+                                sharded_fn, ivf, nprobe, n_valid,
+                                page_rows=page_rows)
         s, sl = np.asarray(s), np.asarray(sl)
         scores[idxs], slots[idxs] = s[:n_valid], sl[:n_valid]
         if stats is not None:
@@ -382,7 +401,8 @@ def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
 def run_grouped_fused(store: Store, q: np.ndarray, preds: list[Predicate],
                       k: int, engine: str = "ref", *,
                       stats: ExecStats | None = None,
-                      shapes: CompiledShapes | None = None):
+                      shapes: CompiledShapes | None = None,
+                      page_rows: int | None = None):
     """Scan-once counterpart of `run_grouped` for the exact engines: the G
     unique predicates stack into one (G, 4) block and ONE fused
     `grouped_topk` program answers every row — `rows_scanned` is the arena
@@ -395,7 +415,8 @@ def run_grouped_fused(store: Store, q: np.ndarray, preds: list[Predicate],
             uniq[p] = len(uniq)
     gids = np.asarray([uniq[p] for p in preds], np.int32)
     hot = _launch_grouped(store, np.asarray(q, np.float32), gids,
-                          list(uniq), k, engine, stats=stats, shapes=shapes)
+                          list(uniq), k, engine, stats=stats, shapes=shapes,
+                          page_rows=page_rows)
     s, sl = _finish_hot(hot)
     if stats is not None:
         stats.device_calls += 1
@@ -486,7 +507,8 @@ def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
                  k: int, *, engine: str = "ref", probe_warm: bool = False,
                  sharded_fn=None, ivf=None, nprobe=None,
                  stats: ExecStats | None = None,
-                 n_valid: int | None = None):
+                 n_valid: int | None = None,
+                 page_rows: int | None = None):
     """Single-predicate tiered retrieval (TieredRouter.query's engine room).
 
     The hot device program is LAUNCHED first and synced last: the warm probe
@@ -502,7 +524,7 @@ def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
     either way."""
     n_logical = q.shape[0] if n_valid is None else n_valid
     hot = _launch_hot(hot_store, q, pred, k, engine, sharded_fn, ivf, nprobe,
-                      n_logical)
+                      n_logical, page_rows=page_rows)
     ws = wi = None
     warm_calls = 0
     if probe_warm:
@@ -650,7 +672,8 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                 _qterms_rows(row_plans, idxs, qt_bucket), k, mode=mode,
                 w_dense=w_d, w_lex=w_l, rrf_c=lex.cfg.rrf_c,
                 lists=(mode == "rrf" and rep.route == "hot+warm"),
-                stats=stats, shapes=shapes, lex_key=rep.lex)
+                stats=stats, shapes=shapes, lex_key=rep.lex,
+                page_rows=rep.page_rows)
             if stats is not None and unit.fused:
                 stats.fused_groups += len(unit.plans)
                 stats.fused_scans += 1
@@ -662,7 +685,7 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
             hot = _launch_grouped(hot_store, q_all[np.asarray(idxs)], gids,
                                   [p.pred for p in unit.plans], k,
                                   unit.plans[0].engine, stats=stats,
-                                  shapes=shapes)
+                                  shapes=shapes, page_rows=rep.page_rows)
             if stats is not None:
                 stats.fused_groups += len(unit.plans)
                 stats.fused_scans += 1
@@ -673,19 +696,23 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
             n_valid = q_g.shape[0]
             if shapes is not None:
                 bucket = bucket_rows(n_valid)
-                shapes.touch(plan.engine, bucket, k)
+                shapes.touch(plan.engine, bucket, k,
+                             page_rows=plan.page_rows)
                 if stats is not None:
                     stats.padded_rows += bucket - n_valid
                 q_g = _pad_rows(q_g, bucket)
             hot = _launch_hot(hot_store, jnp.asarray(q_g), plan.pred, k,
                               plan.engine, sharded_fn, index, plan.nprobe,
-                              n_valid, skip_rescan=bool(plan.degraded))
+                              n_valid, skip_rescan=bool(plan.degraded),
+                              page_rows=plan.page_rows)
         inflight.append((unit, member_idxs, hot))
         if stats is not None:
             n_rows_unit = sum(len(m) for m in member_idxs)
             stats.device_calls += 1
             stats.queries += n_rows_unit
             stats.hot_queries += n_rows_unit
+            if rep.page_rows is not None:
+                stats.paged_scans += 1
 
     # -- phase 2: warm probes while the hot scans are in flight ----------
     warm_results: list[list[tuple] | None] = []

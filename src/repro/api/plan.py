@@ -115,6 +115,11 @@ class PhysicalPlan:
     lex: tuple | None = None          # hybrid engine: (fusion mode,
                                       # query-term-count bucket, w_dense,
                                       # w_lex) — the score-mix identity
+    page_rows: int | None = None      # paged arena-scan regime: rows per
+                                      # page tile streamed from HBM (None =
+                                      # VMEM-resident tiling). Results are
+                                      # bit-identical either way; only the
+                                      # memory traffic schedule changes.
     degraded: tuple[str, ...] = ()    # applied degradation rungs, oldest
                                       # first (planner.degrade_plan) — an
                                       # audit annotation, never part of the
@@ -132,9 +137,12 @@ class PhysicalPlan:
         inside one ivf group, and ``lex`` (fusion mode + query-term-count
         bucket + weights) so hybrid groups only ever stack rows whose
         compiled shape AND score semantics agree — the actual term ids are
-        per-row data, exactly like the query embedding."""
+        per-row data, exactly like the query embedding. ``page_rows`` is
+        part of the key because paged and resident launches compile
+        different programs (different grid + DMA schedule), even though
+        they return the same bits."""
         return (self.pred, self.logical.k, self.engine, self.route,
-                self.nprobe, self.lex)
+                self.nprobe, self.lex, self.page_rows)
 
     @property
     def fusable(self) -> bool:
@@ -152,9 +160,11 @@ class PhysicalPlan:
         """Distinct predicate groups sharing this key are candidates for ONE
         fused grouped scan (planner.fuse_batch): same LIMIT k, same engine,
         same tier route, same score mix (``lex`` — None for dense engines,
-        so dense and hybrid groups never fuse together) — the predicates
-        themselves are what the grouped kernel keeps apart."""
-        return (self.logical.k, self.engine, self.route, self.lex)
+        so dense and hybrid groups never fuse together), same paged/
+        resident regime — the predicates themselves are what the grouped
+        kernel keeps apart."""
+        return (self.logical.k, self.engine, self.route, self.lex,
+                self.page_rows)
 
     def explain(self) -> str:
         lp = self.logical
@@ -186,6 +196,12 @@ class PhysicalPlan:
                 f"  ivf:       nprobe={self.nprobe} of {n_clusters} clusters "
                 f"(cap {cap}) -> <={est} candidate rows of {self.n_rows} "
                 f"({pct:.1f}% of arena)")
+        if self.page_rows is not None:
+            n_pages = -(-self.n_rows // self.page_rows)
+            lines.append(
+                f"  paging:    paged arena scan, {self.page_rows} rows/page "
+                f"-> {n_pages} page(s), DMA double-buffered (bit-identical "
+                f"to resident)")
         lines += [
             f"  route:     {self.route:8s} ({self.route_reason})",
             f"  batching:  predicate-group key {self.group_key!r}",

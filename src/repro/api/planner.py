@@ -152,6 +152,16 @@ class PlannerConfig:
                                       # at least this many exact-engine groups
                                       # sharing a fuse key scan once (a huge
                                       # value disables fusion)
+    paged_min_rows: int | None = None  # paged-regime threshold: arenas at or
+                                       # above this row count stream through
+                                       # the paged arena scan (page tiles DMA'd
+                                       # from HBM, double-buffered) instead of
+                                       # the VMEM-resident tiling. None (the
+                                       # default) keeps every scan resident.
+                                       # Bit-identical either way — this is a
+                                       # memory-traffic knob, not a semantics
+                                       # knob.
+    page_rows: int = 1 << 15          # rows per page tile in the paged regime
     cost_model: CostModel | None = None
     # serving-path hints (consumed by serving.scheduler + degrade_plan):
     deadline_ms: float | None = None  # per-query latency SLO; compile_plan
@@ -230,7 +240,7 @@ def fuse_batch(plans, *, cfg: PlannerConfig = PlannerConfig()) -> list[FusedGrou
                     f"{gsz} group(s) share fuse key {p.fuse_key!r} "
                     f"< fuse_min_groups={cfg.fuse_min_groups}"))
             continue
-        k, engine, route, _lex = group[0].fuse_key
+        k, engine, route, _lex, _page = group[0].fuse_key
         n_rows = group[0].n_rows
         est = (cfg.cost_model.estimate_ms(engine, n_rows)
                if cfg.cost_model is not None else None)
@@ -434,6 +444,16 @@ def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
             and est > cfg.deadline_ms):
         engine_reason += (f"; est busts deadline hint {cfg.deadline_ms:g}ms "
                           "— degradable under load")
+    page_rows = None
+    if (cfg.paged_min_rows is not None and n_rows >= cfg.paged_min_rows
+            and engine in ("ref", "pallas", "hybrid")):
+        # Paged regime: the full-arena engines stream the arena in page
+        # tiles instead of holding tiles VMEM-resident. ivf scans per-group
+        # candidate sets (already small) and sharded pages per shard —
+        # neither takes the knob.
+        page_rows = cfg.page_rows
+        engine_reason += (f"; paged regime (n_rows >= {cfg.paged_min_rows}, "
+                          f"{page_rows} rows/page)")
     nprobe = ivf_est = lex_key = None
     if engine == "hybrid":
         qt_bucket = bucket_rows(len(logical.match_terms))
@@ -458,7 +478,8 @@ def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
                         est_cost_ms=est,
                         cost_source=("measured" if est is not None
                                      else "static-thresholds"),
-                        nprobe=nprobe, ivf_est=ivf_est, lex=lex_key)
+                        nprobe=nprobe, ivf_est=ivf_est, lex=lex_key,
+                        page_rows=page_rows)
 
 
 # ---------------------------------------------------------------------------

@@ -153,15 +153,26 @@ def make_sharded_query(mesh, axes, n_rows: int, k: int):
 
 
 def unified_query(store: Store, q: jax.Array, pred: Predicate, k: int,
-                  engine: str = "ref"):
-    """Front door used by the serving engine / benchmarks."""
+                  engine: str = "ref", page_rows: int | None = None):
+    """Front door used by the serving engine / benchmarks.
+
+    ``page_rows`` selects the paged arena-scan regime (HBM-resident arena
+    streamed in page tiles — `repro.kernels.arena_scan`): the pallas engine
+    switches to explicit double-buffered DMA, the ref engine to the
+    streaming jnp scan tiled at the page size. Results are bit-identical to
+    the resident regime (the arena-scan conformance contract)."""
     pa = pred.as_array()
     if engine == "ref":
-        return unified_query_ref(store, q, pa, k)
+        if page_rows is None:
+            return unified_query_ref(store, q, pa, k)
+        gids = jnp.zeros((q.shape[0],), jnp.int32)
+        return unified_query_grouped(store, q, gids, pa[None, :], k,
+                                     engine="ref", page_rows=page_rows)
     if engine == "pallas":
         from repro.kernels.filtered_topk.ops import filtered_topk
         return filtered_topk(q, store["emb"], store["tenant"], store["updated_at"],
-                             store["category"], store["acl"], pa, k)
+                             store["category"], store["acl"], pa, k,
+                             page_rows=page_rows)
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -185,7 +196,7 @@ def stack_predicates(preds) -> jax.Array:
 
 
 def unified_query_grouped(store: Store, q: jax.Array, gids, preds, k: int,
-                          engine: str = "ref"):
+                          engine: str = "ref", page_rows: int | None = None):
     """Grouped front door: ONE arena scan answers every predicate group.
 
     q: (B, D) stacked query rows across ALL groups; gids: (B,) int32 group
@@ -193,7 +204,9 @@ def unified_query_grouped(store: Store, q: jax.Array, gids, preds, k: int,
     int32 array). Per query row the result is exactly
     ``unified_query(store, q[row], preds[gids[row]], k)`` — the fused scan
     changes how many times the arena streams (once, not G times), never
-    what any row may see. Returns (scores (B, k), slots (B, k))."""
+    what any row may see. ``page_rows`` selects the paged arena-scan regime
+    (bit-identical; see `unified_query`). Returns (scores (B, k),
+    slots (B, k))."""
     from repro.kernels.grouped_topk.ops import grouped_topk
     pa = (stack_predicates(preds) if isinstance(preds, (list, tuple))
           else jnp.asarray(preds, jnp.int32))
@@ -205,4 +218,4 @@ def unified_query_grouped(store: Store, q: jax.Array, gids, preds, k: int,
         raise ValueError(f"unknown grouped engine {engine!r}")
     return grouped_topk(q, store["emb"], store["tenant"], store["updated_at"],
                         store["category"], store["acl"], gids, pa, k,
-                        use_kernel=use_kernel)
+                        use_kernel=use_kernel, page_rows=page_rows)

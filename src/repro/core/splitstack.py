@@ -97,11 +97,17 @@ def vector_topk_hybrid(emb: jax.Array, valid: jax.Array,
     BM25 scores are comparable with hot ones across the tier merge."""
     from repro.kernels.hybrid_score.ref import bm25_block, qidf_of, rrf_fuse
     keep = _warm_keep(valid, meta, pred)
-    dense = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
-    bm25 = bm25_block(terms, lexnorm, qterms, qidf_of(idf, qterms))
+    qidf = qidf_of(idf, qterms)
     if mode == "wsum":
-        fused = jnp.where(keep[None, :], w_dense * dense + w_lex * bm25,
-                          NEG_INF)
+        # fold the fusion weights into the inputs, exactly as the hot-tier
+        # engines do (arena_scan pinning rule 1) — warm and hot wsum scores
+        # stay comparable AND bit-consistent across the tier merge
+        q = q * jnp.float32(w_dense)
+        qidf = qidf * jnp.float32(w_lex)
+    dense = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
+    bm25 = bm25_block(terms, lexnorm, qterms, qidf)
+    if mode == "wsum":
+        fused = jnp.where(keep[None, :], dense + bm25, NEG_INF)
         top_s, top_i = jax.lax.top_k(fused, k)
         return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
     d_s, d_i = jax.lax.top_k(jnp.where(keep[None, :], dense, NEG_INF), k)

@@ -1,0 +1,25 @@
+"""The unified paged arena-scan framework.
+
+Every retrieval engine in the repo is the SAME program: stream the arena in
+tiles, score each tile (dense dot / BM25 / fused hybrid), mask it (predicate
+groups via one-hot matmul, slot-lane membership, blocker lanes), and keep a
+running top-k in VMEM scratch. This package owns that program once:
+
+  * `stages`  — the per-tile math, shared VERBATIM by the Pallas kernel
+    body, the jnp streaming scan, and the dense oracle (the structural
+    bit-identity guarantee);
+  * `kernel`  — the Pallas kernel, in two regimes: resident (BlockSpec
+    grid pipelining, arena fits VMEM streaming) and paged (HBM-resident
+    arena, explicit double-buffered DMA so the next page's copy overlaps
+    the current page's compute);
+  * `ref`     — the dense oracle and the streaming jnp scan, generic over
+    the same `ScanSpec`;
+  * `ops`     — shared padding / metadata packing / dispatch helpers.
+
+The four kernel families (`filtered_topk`, `ivf_probe`, `grouped_topk`,
+`hybrid_score`) are thin configurations of this framework; their public
+contracts are unchanged.
+"""
+from repro.kernels.arena_scan.stages import NEG_INF, ScanSpec, merge_topk
+
+__all__ = ["NEG_INF", "ScanSpec", "merge_topk"]

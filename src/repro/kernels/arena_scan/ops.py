@@ -1,0 +1,118 @@
+"""Shared wrapper plumbing for every arena-scan family.
+
+The four family ops modules (`filtered_topk`, `ivf_probe`, `grouped_topk`,
+`hybrid_score`) keep their public contracts but all pad / pack / dispatch
+through these helpers, so the invariants live in exactly one place:
+
+  * arena rows pad to the tile (or page) multiple as DEAD rows
+    (tenant = -1, term lanes empty, lexnorm 0) for EVERY engine, so
+    kernel, scan, and oracle run on identical arrays and bit-identity is
+    testable;
+  * D pads to the 128-lane MXU multiple (padded dims contribute 0 to the
+    dot), B pads to the blk_b multiple (row-parallel: padding rows cannot
+    perturb real rows, and they are sliced off before returning);
+  * the (N, 4) metadata interleave is packed once per snapshot and
+    LRU-memoized on the column object ids (snapshot columns are immutable
+    — a write is only observable through NEW column arrays).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+#: jnp streaming-scan tile: big enough that tile overhead (local top-k,
+#: scan step) amortizes, small enough that a tile's scores stay cache-close.
+BLK_SCAN = 32768
+
+
+def _pack_meta(tenant, updated_at, category, acl):
+    return jnp.stack([tenant.astype(jnp.int32), updated_at.astype(jnp.int32),
+                      category.astype(jnp.int32), acl.astype(jnp.int32)],
+                     axis=1)
+
+
+#: Packed-metadata memo: keyed on the column object ids; entries HOLD the
+#: source columns so a key can never alias a freed array, and the tiny LRU
+#: bounds that retention to a few snapshots' worth of int32 columns (the
+#: embedding matrix is never held).
+_META_CACHE: OrderedDict[tuple, tuple] = OrderedDict()
+_META_CACHE_CAP = 4
+
+
+def _packed_meta(tenant, updated_at, category, acl):
+    key = (id(tenant), id(updated_at), id(category), id(acl))
+    hit = _META_CACHE.get(key)
+    if hit is not None:
+        _META_CACHE.move_to_end(key)
+        return hit[0]
+    meta = _pack_meta(tenant, updated_at, category, acl)
+    _META_CACHE[key] = (meta, tenant, updated_at, category, acl)
+    while len(_META_CACHE) > _META_CACHE_CAP:
+        _META_CACHE.popitem(last=False)
+    return meta
+
+
+def _pad_axis0(x, mult, fill):
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def pad_dead_rows(emb, meta, mult: int, terms=None, lexnorm=None):
+    """Pad the arena streams to the tile multiple with DEAD rows
+    (tenant = -1 — no predicate group can keep them; slot-lane metas also
+    get slot = -1 via the full dead row). Returns the padded streams."""
+    n = emb.shape[0]
+    emb = _pad_axis0(emb, mult, 0)
+    meta = _pad_axis0(meta, mult, 0)
+    if meta.shape[0] != n:
+        dead_row = jnp.full((meta.shape[1],), 0, jnp.int32)
+        dead_row = dead_row.at[0].set(-1)
+        if meta.shape[1] > 4:
+            dead_row = dead_row.at[4].set(-1)
+        dead = jnp.arange(meta.shape[0]) >= n
+        meta = jnp.where(dead[:, None], dead_row[None, :], meta)
+    if terms is None:
+        return emb, meta
+    return (emb, meta, _pad_axis0(terms, mult, -1),
+            _pad_axis0(lexnorm, mult, 0))
+
+
+def pad_d128(q, emb):
+    """Pad the contraction axis to the 128-lane MXU multiple (padded dims
+    contribute 0.0 to every dot product)."""
+    d_pad = (-q.shape[1]) % 128
+    if d_pad:
+        q = jnp.pad(q, ((0, 0), (0, d_pad)))
+        emb = jnp.pad(emb, ((0, 0), (0, d_pad)))
+    return q, emb
+
+
+def default_use_kernel(use_kernel: bool | None) -> bool:
+    """Pallas on a TPU backend, the jnp streaming scan elsewhere."""
+    if use_kernel is None:
+        return jax.default_backend() == "tpu"
+    return use_kernel
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def default_blk_n(n: int, use_kernel: bool, page_rows: int | None = None) -> int:
+    """Tile-size policy: the kernel's VMEM tile is 512 rows; the jnp scan
+    uses `BLK_SCAN` clamped to the pow2 arena bucket so small stores stay
+    single-tile. An explicit ``page_rows`` (the planner's paged-regime
+    knob) overrides both — the scan tile IS the page."""
+    if page_rows is not None:
+        return page_rows
+    if use_kernel:
+        return 512
+    cap = 1 << max(int(n) - 1, 0).bit_length()
+    return min(BLK_SCAN, max(cap, 1))

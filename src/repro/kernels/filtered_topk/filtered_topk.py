@@ -1,127 +1,43 @@
 """Pallas TPU kernel: fused filtered similarity top-k — the unified query.
 
 One pass over the corpus arena does ALL of the paper's unified SQL statement:
+similarity (MXU dot) + engine-level WHERE (VPU predicate mask) + running
+ORDER BY .. LIMIT k (VMEM scratch merge). A row that fails the WHERE clause
+can never reach the output buffer — the kernel-level equivalent of row-level
+security, and the structural reason tenant leakage is impossible (paper
+Table 3).
 
-  grid = (B_blocks, N_blocks)              # N innermost -> sequential scan
-  per step:
-    VMEM tiles:  q (BLK_B, D), emb (BLK_N, D), meta (BLK_N, 4) int32
-    MXU:         scores = q @ emb^T                       (similarity)
-    VPU:         keep   = live & tenant & recency & category & ACL
-                 scores = where(keep, scores, -inf)       (engine-level WHERE)
-    scratch:     running top-k merge across N blocks      (ORDER BY .. LIMIT k)
-
-The predicate executes inside the same VMEM pass as scoring: a row that fails
-the WHERE clause can never reach the output buffer — the kernel-level
-equivalent of row-level security, and the structural reason tenant leakage is
-impossible (paper Table 3).
-
-Tiling notes (TPU v5e target):
-  * BLK_N x D embedding tile streams HBM->VMEM; D is the MXU contraction dim
-    (keep D a multiple of 128; the wrapper pads).
-  * metadata rides in the SAME grid step as its embedding tile, so the mask
-    costs one VPU pass — no second scan, no host round trip (vs Stack A).
-  * the running top-k lives in VMEM scratch (BLK_B, K); merge is a
-    concat + top_k over K + BLK_N lanes.
+This family is the simplest configuration of the unified arena-scan
+framework (`repro.kernels.arena_scan`): the default dense `ScanSpec` with a
+single predicate group — every query row selects group 0. The scan body,
+tiling regimes (resident BlockSpec pipelining and paged double-buffered
+DMA), and the running top-k merge all live in the framework; this module
+only adapts the single-predicate contract.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = float(jnp.finfo(jnp.float32).min)
-
-
-def _merge_topk(best_s, best_i, scores, idx, k: int):
-    """Merge (BLK_B, M) candidates into the running (BLK_B, K) best lists."""
-    all_s = jnp.concatenate([best_s, scores], axis=1)
-    all_i = jnp.concatenate([best_i, idx], axis=1)
-    new_s, sel = jax.lax.top_k(all_s, k)
-    # gather indices via comparison one-hot (Mosaic-safe; avoids dyn-gather)
-    m = all_s.shape[1]
-    onehot = sel[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, m), 2)
-    new_i = jnp.sum(jnp.where(onehot, all_i[:, None, :], 0), axis=2)
-    return new_s, new_i
-
-
-def _kernel(pred_ref, q_ref, emb_ref, meta_ref, out_s_ref, out_i_ref,
-            best_s, best_i, *, k: int, blk_n: int):
-    bn = pl.program_id(1)
-    n_blocks = pl.num_programs(1)
-
-    @pl.when(bn == 0)
-    def _init():
-        best_s[...] = jnp.full(best_s.shape, NEG_INF, jnp.float32)
-        best_i[...] = jnp.full(best_i.shape, -1, jnp.int32)
-
-    # --- similarity (MXU) ---
-    q = q_ref[...]
-    e = emb_ref[...]
-    scores = jax.lax.dot_general(q, e, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-
-    # --- engine-level WHERE (VPU), same pass ---
-    tenant = meta_ref[:, 0]
-    ts = meta_ref[:, 1]
-    cat = meta_ref[:, 2]
-    acl = meta_ref[:, 3]
-    p_tenant, p_ts, p_cat, p_acl = pred_ref[0], pred_ref[1], pred_ref[2], pred_ref[3]
-    keep = (tenant >= 0)                                  # live rows only
-    keep &= (p_tenant == -2) | (tenant == p_tenant)       # tenant isolation
-    keep &= ts >= p_ts                                    # freshness
-    keep &= (jnp.left_shift(1, cat) & p_cat) != 0         # category set
-    keep &= (acl & p_acl) != 0                            # ACL groups
-    scores = jnp.where(keep[None, :], scores, NEG_INF)
-
-    # --- running ORDER BY ... LIMIT k ---
-    base = bn * blk_n
-    idx = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    new_s, new_i = _merge_topk(best_s[...], best_i[...], scores, idx, k)
-    best_s[...] = new_s
-    best_i[...] = new_i
-
-    @pl.when(bn == n_blocks - 1)
-    def _finish():
-        out_s_ref[...] = best_s[...]
-        out_i_ref[...] = jnp.where(best_s[...] > NEG_INF, best_i[...], -1)
+from repro.kernels.arena_scan.kernel import arena_scan_pallas
+from repro.kernels.arena_scan.stages import (NEG_INF, ScanSpec,  # noqa: F401
+                                             merge_topk as _merge_topk)
 
 
 def filtered_topk_pallas(q: jax.Array, emb: jax.Array, meta: jax.Array,
                          pred: jax.Array, k: int, *,
                          blk_b: int = 8, blk_n: int = 512,
+                         page_rows: int | None = None,
                          interpret: bool = False):
     """q: (B, D); emb: (N, D); meta: (N, 4) int32 [tenant, ts, cat, acl];
-    pred: (4,) int32. B % blk_b == 0, N % blk_n == 0, D % 128 == 0 (the ops.py
-    wrapper pads). Returns (scores (B, k) f32, slots (B, k) i32)."""
-    B, D = q.shape
-    N = emb.shape[0]
-    assert B % blk_b == 0 and N % blk_n == 0, (B, N, blk_b, blk_n)
-
-    grid = (B // blk_b, N // blk_n)
-    kernel = functools.partial(_kernel, k=k, blk_n=blk_n)
-    out_shape = (jax.ShapeDtypeStruct((B, k), jnp.float32),
-                 jax.ShapeDtypeStruct((B, k), jnp.int32))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            # index maps receive the scalar-prefetch ref as a trailing arg
-            pl.BlockSpec((blk_b, D), lambda b, n, *_: (b, 0)),
-            pl.BlockSpec((blk_n, D), lambda b, n, *_: (n, 0)),
-            pl.BlockSpec((blk_n, 4), lambda b, n, *_: (n, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((blk_b, k), lambda b, n, *_: (b, 0)),
-            pl.BlockSpec((blk_b, k), lambda b, n, *_: (b, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((blk_b, k), jnp.float32),
-            pltpu.VMEM((blk_b, k), jnp.int32),
-        ],
-    )
-    fn = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
-                        interpret=interpret)
-    return fn(pred, q, emb, meta)
+    pred: (4,) int32. B % blk_b == 0, N % blk_n == 0 (or N % page_rows == 0
+    in the paged regime), D % 128 == 0 (the ops.py wrapper pads). Returns
+    (scores (B, k) f32, slots (B, k) i32)."""
+    B = q.shape[0]
+    gids = jnp.zeros((B, 1), jnp.int32)
+    s, i = arena_scan_pallas(q, emb, meta, gids,
+                             pred[None, :].astype(jnp.int32), k,
+                             spec=ScanSpec(score="dense"),
+                             blk_b=blk_b, blk_n=blk_n, page_rows=page_rows,
+                             interpret=interpret)
+    return s, i

@@ -12,6 +12,9 @@ The gather payload is k rows per shard, so the collective term is O(devices·k)
 — independent of corpus size. That IS the paper's scaling story on a TPU pod:
 the unified query's cross-device coordination is a constant-size merge, not a
 second system.
+
+Padding / packing helpers live in `repro.kernels.arena_scan.ops` (shared by
+all four families); `_pack_meta` / `_pad_axis0` stay importable from here.
 """
 from __future__ import annotations
 
@@ -21,60 +24,48 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.kernels.filtered_topk.filtered_topk import NEG_INF, filtered_topk_pallas
+from repro.kernels.arena_scan.ops import (_pack_meta, _pad_axis0,  # noqa: F401
+                                          pad_dead_rows, pad_d128)
+from repro.kernels.filtered_topk.filtered_topk import (NEG_INF,
+                                                       filtered_topk_pallas)
 
 
-def _pack_meta(tenant, updated_at, category, acl):
-    return jnp.stack([tenant.astype(jnp.int32), updated_at.astype(jnp.int32),
-                      category.astype(jnp.int32), acl.astype(jnp.int32)], axis=1)
-
-
-def _pad_axis0(x, mult, fill):
-    n = x.shape[0]
-    pad = (-n) % mult
-    if pad == 0:
-        return x
-    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
-    return jnp.pad(x, widths, constant_values=fill)
-
-
-@partial(jax.jit, static_argnames=("k", "blk_b", "blk_n", "interpret"))
-def _run(q, emb, meta, pred, k, blk_b, blk_n, interpret):
+@partial(jax.jit, static_argnames=("k", "blk_b", "blk_n", "page_rows",
+                                   "interpret"))
+def _run(q, emb, meta, pred, k, blk_b, blk_n, page_rows, interpret):
     """Row padding (tenant=-1 dead rows) happens in the caller; here we pad
     D to the 128-lane multiple and B to blk_b (padded D contributes 0 to the
     dot; padded queries are sliced off)."""
-    B, D = q.shape
-    d_pad = (-D) % 128
-    if d_pad:
-        q = jnp.pad(q, ((0, 0), (0, d_pad)))
-        emb = jnp.pad(emb, ((0, 0), (0, d_pad)))
+    B = q.shape[0]
+    q, emb = pad_d128(q, emb)
     q = _pad_axis0(q, blk_b, 0)
     s, i = filtered_topk_pallas(q, emb, meta, pred, k,
-                                blk_b=blk_b, blk_n=blk_n, interpret=interpret)
+                                blk_b=blk_b, blk_n=blk_n,
+                                page_rows=page_rows, interpret=interpret)
     return s[:B], i[:B]
 
 
 def filtered_topk(q, emb, tenant, updated_at, category, acl, pred, k: int,
                   *, blk_b: int = 8, blk_n: int = 512,
+                  page_rows: int | None = None,
                   interpret: bool | None = None):
-    """Single-device entry point (contract of core.query.unified_query)."""
+    """Single-device entry point (contract of core.query.unified_query).
+    ``page_rows`` selects the kernel's paged (HBM-resident, double-buffered
+    DMA) regime; bits are unchanged (see arena_scan.kernel)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     if k > emb.shape[0]:   # LIMIT larger than the arena: SQL semantics
         k_eff = emb.shape[0]
         s, i = filtered_topk(q, emb, tenant, updated_at, category, acl, pred,
-                             k_eff, blk_b=blk_b, blk_n=blk_n, interpret=interpret)
+                             k_eff, blk_b=blk_b, blk_n=blk_n,
+                             page_rows=page_rows, interpret=interpret)
         pad = ((0, 0), (0, k - k_eff))
         return (jnp.pad(s, pad, constant_values=NEG_INF),
                 jnp.pad(i, pad, constant_values=-1))
     meta = _pack_meta(tenant, updated_at, category, acl)
     # pad rows *before* jit so padded tenant = -1 (dead rows)
-    pad = (-emb.shape[0]) % blk_n
-    if pad:
-        emb = jnp.pad(emb, ((0, pad), (0, 0)))
-        meta = jnp.pad(meta, ((0, pad), (0, 0)))
-        meta = meta.at[-pad:, 0].set(-1)
-    return _run(q, emb, meta, pred, k, blk_b, blk_n, interpret)
+    emb, meta = pad_dead_rows(emb, meta, page_rows or blk_n)
+    return _run(q, emb, meta, pred, k, blk_b, blk_n, page_rows, interpret)
 
 
 def filtered_topk_sharded(mesh: Mesh, axis: str | tuple[str, ...],

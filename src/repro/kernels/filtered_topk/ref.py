@@ -1,10 +1,14 @@
-"""Pure-jnp oracle for the filtered_topk kernel."""
+"""Pure-jnp oracle for the filtered_topk kernel — the dense arena-scan
+oracle configured for a single predicate group."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.arena_scan.ref import arena_scan_ref
+from repro.kernels.arena_scan.stages import ScanSpec
 
 NEG_INF = jnp.float32(jnp.finfo(jnp.float32).min)
 
@@ -13,13 +17,7 @@ NEG_INF = jnp.float32(jnp.finfo(jnp.float32).min)
 def filtered_topk_ref(q: jax.Array, emb: jax.Array, meta: jax.Array,
                       pred: jax.Array, k: int):
     """Same contract as filtered_topk_pallas; dense jnp implementation."""
-    tenant, ts, cat, acl = meta[:, 0], meta[:, 1], meta[:, 2], meta[:, 3]
-    keep = tenant >= 0
-    keep &= (pred[0] == -2) | (tenant == pred[0])
-    keep &= ts >= pred[1]
-    keep &= (jnp.left_shift(1, cat) & pred[2]) != 0
-    keep &= (acl & pred[3]) != 0
-    scores = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
-    scores = jnp.where(keep[None, :], scores, NEG_INF)
-    top_s, top_i = jax.lax.top_k(scores, k)
-    return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
+    gids = jnp.zeros((q.shape[0],), jnp.int32)
+    s, i = arena_scan_ref(q, emb, meta, gids, pred[None, :].astype(jnp.int32),
+                          k, spec=ScanSpec(score="dense"))
+    return s, i

@@ -5,144 +5,41 @@ The exact scan (kernels/filtered_topk) runs one predicate over the whole
 arena, so a batch carrying G distinct predicate groups streams the arena
 HBM->VMEM G times (`rows_scanned = G*N`) and launches G programs. Retrieval
 at this scale is memory-bandwidth-bound, so this kernel streams the arena
-ONCE for all groups:
+ONCE for all groups: one score matmul for every group, ALL G predicate
+masks in one broadcast pass, each query row selecting ITS group's mask by
+one-hot matmul (paper §5: `rows_scanned` drops from G*N to N, and G
+compiled programs become 1).
 
-  grid = (B_blocks, N_blocks)              # N innermost -> sequential scan
-  per step:
-    VMEM tiles:  q (BLK_B, D), emb (BLK_N, D), meta (BLK_N, 4) int32,
-                 gids (BLK_B, 1) int32, preds (G, 4) int32 (replicated)
-    MXU:         scores  = q @ emb^T                      (ONE matmul for
-                                                           every group)
-    VPU:         keep_g  = live & tenant & recency & category & ACL
-                 for ALL G predicates over the tile, one broadcast pass
-    MXU:         row_keep = onehot(gids) @ keep_g         (each row selects
-                                                           its group's mask)
-                 scores  = where(row_keep, scores, -inf)
-    scratch:     running top-k merge across N blocks      (ORDER BY .. LIMIT k)
+Isolation is structural, exactly as in filtered_topk: a row that fails
+group g's predicate is -inf in every g-row's score lane BEFORE the merge,
+so it can never reach a g-row's output list — even if it passes another
+group's predicate (the cross-group leakage property, tested adversarially).
 
-Bandwidth model: the arena tile (BLK_N x D embeddings + BLK_N x 4 metadata)
-is fetched once per (b, n) step instead of once per GROUP per step —
-`rows_scanned` drops from G*N to N, and G compiled programs become 1.
-
-Isolation is structural, exactly as in filtered_topk: a row that fails group
-g's predicate is -inf in every g-row's score lane BEFORE the merge, so it
-can never reach a g-row's output list — even if it passes another group's
-predicate (the cross-group leakage property, tested adversarially).
-
-Tiling notes (TPU v5e target):
-  * preds (G, 4) rides replicated into every grid step (G <= 64 in practice;
-    a few hundred bytes of VMEM) — the mask-select one-hot matmul is
-    (BLK_B, G) @ (G, BLK_N), negligible next to the (BLK_B, D) @ (D, BLK_N)
-    score matmul;
-  * gids ride as a (B, 1) column so the block shape stays 2D (Mosaic);
-  * the running top-k lives in VMEM scratch (BLK_B, K), merged exactly as
-    the exact-scan kernel merges (shared `_merge_topk`).
+This family IS the unified arena-scan framework's dense configuration with
+G >= 1 predicate groups (`repro.kernels.arena_scan`) — the scan body, the
+mask/score stages, both residency regimes, and the running top-k merge all
+live there. This module keeps the family's public contract only.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.filtered_topk.filtered_topk import NEG_INF, _merge_topk
-
-
-def _kernel(gid_ref, pred_ref, q_ref, emb_ref, meta_ref, out_s_ref, out_i_ref,
-            best_s, best_i, *, k: int, blk_n: int):
-    bn = pl.program_id(1)
-    n_blocks = pl.num_programs(1)
-
-    @pl.when(bn == 0)
-    def _init():
-        best_s[...] = jnp.full(best_s.shape, NEG_INF, jnp.float32)
-        best_i[...] = jnp.full(best_i.shape, -1, jnp.int32)
-
-    # --- similarity (MXU): ONE matmul for every predicate group ---
-    q = q_ref[...]
-    e = emb_ref[...]
-    scores = jax.lax.dot_general(q, e, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-
-    # --- ALL G engine-level WHERE clauses (VPU), one broadcast pass ---
-    tenant = meta_ref[:, 0]
-    ts = meta_ref[:, 1]
-    cat = meta_ref[:, 2]
-    acl = meta_ref[:, 3]
-    preds = pred_ref[...]                                  # (G, 4)
-    p_tenant = preds[:, 0][:, None]
-    p_ts = preds[:, 1][:, None]
-    p_cat = preds[:, 2][:, None]
-    p_acl = preds[:, 3][:, None]
-    keep = (tenant >= 0)[None, :]                          # live rows only
-    keep &= (p_tenant == -2) | (tenant[None, :] == p_tenant)  # tenant isolation
-    keep &= ts[None, :] >= p_ts                            # freshness
-    keep &= (jnp.left_shift(1, cat)[None, :] & p_cat) != 0    # category set
-    keep &= (acl[None, :] & p_acl) != 0                    # ACL groups
-    # (G, BLK_N)
-
-    # --- each row selects ITS group's mask (one-hot matmul, MXU) ---
-    n_groups = preds.shape[0]
-    gid = gid_ref[...]                                     # (BLK_B, 1)
-    onehot = (gid == jax.lax.broadcasted_iota(
-        jnp.int32, (1, n_groups), 1)).astype(jnp.float32)  # (BLK_B, G)
-    row_keep = jax.lax.dot_general(
-        onehot, keep.astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32) > 0.0          # (BLK_B, BLK_N)
-    scores = jnp.where(row_keep, scores, NEG_INF)
-
-    # --- running ORDER BY ... LIMIT k ---
-    base = bn * blk_n
-    idx = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    new_s, new_i = _merge_topk(best_s[...], best_i[...], scores, idx, k)
-    best_s[...] = new_s
-    best_i[...] = new_i
-
-    @pl.when(bn == n_blocks - 1)
-    def _finish():
-        out_s_ref[...] = best_s[...]
-        out_i_ref[...] = jnp.where(best_s[...] > NEG_INF, best_i[...], -1)
+from repro.kernels.arena_scan.kernel import arena_scan_pallas
+from repro.kernels.arena_scan.stages import ScanSpec
 
 
 def grouped_topk_pallas(q: jax.Array, emb: jax.Array, meta: jax.Array,
                         gids: jax.Array, preds: jax.Array, k: int, *,
                         blk_b: int = 8, blk_n: int = 512,
+                        page_rows: int | None = None,
                         interpret: bool = False):
     """q: (B, D); emb: (N, D); meta: (N, 4) int32 [tenant, ts, cat, acl];
     gids: (B, 1) int32 group id per query row; preds: (G, 4) int32 stacked
-    lowered predicates. B % blk_b == 0, N % blk_n == 0, D % 128 == 0 (the
-    ops.py wrapper pads). Returns (scores (B, k) f32, slots (B, k) i32)."""
-    B, D = q.shape
-    N = emb.shape[0]
-    G = preds.shape[0]
-    assert B % blk_b == 0 and N % blk_n == 0, (B, N, blk_b, blk_n)
-    assert gids.shape == (B, 1), gids.shape
-
-    grid = (B // blk_b, N // blk_n)
-    kernel = functools.partial(_kernel, k=k, blk_n=blk_n)
-    out_shape = (jax.ShapeDtypeStruct((B, k), jnp.float32),
-                 jax.ShapeDtypeStruct((B, k), jnp.int32))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=0,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((blk_b, 1), lambda b, n: (b, 0)),   # gids
-            pl.BlockSpec((G, 4), lambda b, n: (0, 0)),       # preds, replicated
-            pl.BlockSpec((blk_b, D), lambda b, n: (b, 0)),
-            pl.BlockSpec((blk_n, D), lambda b, n: (n, 0)),
-            pl.BlockSpec((blk_n, 4), lambda b, n: (n, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((blk_b, k), lambda b, n: (b, 0)),
-            pl.BlockSpec((blk_b, k), lambda b, n: (b, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((blk_b, k), jnp.float32),
-            pltpu.VMEM((blk_b, k), jnp.int32),
-        ],
-    )
-    fn = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
-                        interpret=interpret)
-    return fn(gids, preds, q, emb, meta)
+    lowered predicates. B % blk_b == 0, N % blk_n == 0 (or N % page_rows
+    == 0 in the paged regime), D % 128 == 0 (the ops.py wrapper pads).
+    Returns (scores (B, k) f32, slots (B, k) i32)."""
+    s, i = arena_scan_pallas(q, emb, meta, gids, preds, k,
+                             spec=ScanSpec(score="dense"),
+                             blk_b=blk_b, blk_n=blk_n, page_rows=page_rows,
+                             interpret=interpret)
+    return s, i

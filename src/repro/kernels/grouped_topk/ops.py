@@ -4,10 +4,11 @@ Handles metadata packing, padding to tile multiples, and engine dispatch
 (Pallas on TPU, jnp ref elsewhere; tests pass ``use_kernel=True,
 interpret=True`` to execute the kernel body on CPU).
 
-Padding invariants:
-  * arena rows pad to the N-block multiple as DEAD rows (tenant = -1) for
-    BOTH engines, so kernel and ref run on identical arrays and bit-identity
-    is testable;
+Padding invariants (shared with every arena-scan family — see
+`repro.kernels.arena_scan.ops`):
+  * arena rows pad to the N-block (or page) multiple as DEAD rows
+    (tenant = -1) for BOTH engines, so kernel and ref run on identical
+    arrays and bit-identity is testable;
   * query rows pad to the B-block multiple with group id 0 — retrieval is
     row-parallel, so padding rows cannot perturb real rows, and they are
     sliced off before returning;
@@ -17,86 +18,46 @@ Padding invariants:
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.arena_scan.ops import (BLK_SCAN,  # noqa: F401
+                                          _META_CACHE, _pack_meta,
+                                          _packed_meta, _pad_axis0,
+                                          default_blk_n, default_interpret,
+                                          default_use_kernel, pad_d128,
+                                          pad_dead_rows)
 from repro.kernels.grouped_topk.grouped_topk import grouped_topk_pallas
 from repro.kernels.grouped_topk.ref import NEG_INF, grouped_topk_scan_ref
 
 
-def _pack_meta(tenant, updated_at, category, acl):
-    return jnp.stack([tenant.astype(jnp.int32), updated_at.astype(jnp.int32),
-                      category.astype(jnp.int32), acl.astype(jnp.int32)], axis=1)
-
-
-#: Packed-metadata memo: snapshot columns are immutable (a write can only be
-#: observed through NEW column arrays), so the (N, 4) interleave is packed
-#: once per snapshot instead of once per scan. Keyed on the column object
-#: ids; entries HOLD the source columns so a key can never alias a freed
-#: array, and the tiny LRU bounds that retention to a few snapshots' worth
-#: of int32 columns (the embedding matrix is never held).
-_META_CACHE: OrderedDict[tuple, tuple] = OrderedDict()
-_META_CACHE_CAP = 4
-
-
-def _packed_meta(tenant, updated_at, category, acl):
-    key = (id(tenant), id(updated_at), id(category), id(acl))
-    hit = _META_CACHE.get(key)
-    if hit is not None:
-        _META_CACHE.move_to_end(key)
-        return hit[0]
-    meta = _pack_meta(tenant, updated_at, category, acl)
-    _META_CACHE[key] = (meta, tenant, updated_at, category, acl)
-    while len(_META_CACHE) > _META_CACHE_CAP:
-        _META_CACHE.popitem(last=False)
-    return meta
-
-
-def _pad_axis0(x, mult, fill):
-    pad = (-x.shape[0]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
-    return jnp.pad(x, widths, constant_values=fill)
-
-
 @partial(jax.jit, static_argnames=("k", "use_kernel", "blk_b", "blk_n",
-                                   "interpret"))
-def _run(q, emb, meta, gids, preds, k, use_kernel, blk_b, blk_n, interpret):
-    # pad N to the block multiple with dead rows (tenant = -1) for BOTH
-    # engines, so kernel and ref stream identically-shaped arenas
-    n = emb.shape[0]
-    emb = _pad_axis0(emb, blk_n, 0)
-    meta = _pad_axis0(meta, blk_n, 0)
-    if meta.shape[0] != n:
-        dead = jnp.arange(meta.shape[0]) >= n
-        meta = jnp.where(dead[:, None],
-                         jnp.asarray([-1, 0, 0, 0], jnp.int32)[None, :], meta)
+                                   "page_rows", "interpret"))
+def _run(q, emb, meta, gids, preds, k, use_kernel, blk_b, blk_n, page_rows,
+         interpret):
+    # pad N to the block (or page) multiple with dead rows (tenant = -1)
+    # for BOTH engines, so kernel and ref stream identically-shaped arenas
+    emb, meta = pad_dead_rows(emb, meta, page_rows or blk_n)
     if not use_kernel:
-        return grouped_topk_scan_ref(q, emb, meta, gids, preds, k, blk_n)
-    B, D = q.shape
-    d_pad = (-D) % 128
-    if d_pad:
-        q = jnp.pad(q, ((0, 0), (0, d_pad)))
-        emb = jnp.pad(emb, ((0, 0), (0, d_pad)))
+        # the scan tile IS the page: blk_n = page_rows in the paged regime
+        return grouped_topk_scan_ref(q, emb, meta, gids, preds, k,
+                                     page_rows or blk_n)
+    B = q.shape[0]
+    q, emb = pad_d128(q, emb)
     q = _pad_axis0(q, blk_b, 0)
     gids = _pad_axis0(gids.reshape(-1, 1), blk_b, 0)
     s, i = grouped_topk_pallas(q, emb, meta, gids, preds, k,
-                               blk_b=blk_b, blk_n=blk_n, interpret=interpret)
+                               blk_b=blk_b, blk_n=blk_n, page_rows=page_rows,
+                               interpret=interpret)
     return s[:B], i[:B]
-
-
-#: jnp streaming-scan tile: big enough that tile overhead (local top-k,
-#: scan step) amortizes, small enough that a tile's scores stay cache-close.
-BLK_SCAN = 32768
 
 
 def grouped_topk(q, emb, tenant, updated_at, category, acl, gids, preds,
                  k: int, *, use_kernel: bool | None = None,
                  blk_b: int = 8, blk_n: int | None = None,
+                 page_rows: int | None = None,
                  interpret: bool | None = None):
     """Fused multi-predicate grouped top-k over one arena scan.
 
@@ -111,26 +72,24 @@ def grouped_topk(q, emb, tenant, updated_at, category, acl, gids, preds,
     to execute the kernel body on CPU. ``blk_n=None`` picks the engine's
     default tile (512 VMEM rows for the kernel; `BLK_SCAN` for the jnp
     scan, clamped to the arena so small stores stay single-tile).
+    ``page_rows`` selects the paged regime: the Pallas kernel switches to
+    HBM-resident streams with double-buffered DMA, the jnp scan tiles at
+    the page size — bits are unchanged either way (arena_scan contract).
     """
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    use_kernel = default_use_kernel(use_kernel)
+    interpret = default_interpret(interpret)
     if blk_n is None:
-        if use_kernel:
-            blk_n = 512
-        else:
-            cap = 1 << max(int(emb.shape[0]) - 1, 0).bit_length()
-            blk_n = min(BLK_SCAN, max(cap, 1))
+        blk_n = default_blk_n(emb.shape[0], use_kernel)
     n = emb.shape[0]
     if k > n:   # LIMIT larger than the arena: SQL semantics, padded to k
         s, i = grouped_topk(q, emb, tenant, updated_at, category, acl, gids,
                             preds, n, use_kernel=use_kernel, blk_b=blk_b,
-                            blk_n=blk_n, interpret=interpret)
+                            blk_n=blk_n, page_rows=page_rows,
+                            interpret=interpret)
         pad = ((0, 0), (0, k - n))
         return (jnp.pad(s, pad, constant_values=NEG_INF),
                 jnp.pad(i, pad, constant_values=-1))
     meta = _packed_meta(tenant, updated_at, category, acl)
     return _run(jnp.asarray(q), emb, meta, jnp.asarray(gids, jnp.int32),
                 jnp.asarray(preds, jnp.int32), k, use_kernel, blk_b, blk_n,
-                interpret)
+                page_rows, interpret)

@@ -8,10 +8,10 @@ arena rows that satisfy ITS group's predicate, never another group's (the
 kernel-level multi-tenant isolation claim, property-tested in
 tests/test_grouped_topk.py).
 
-Per query row the math is exactly `filtered_topk_ref` under that row's
-predicate: scores are row-parallel and the mask depends only on the row's
-own group id, which is why the fused path is bit-identical to the per-group
-loop it replaces.
+Both engines here are the arena-scan framework's dense jnp engines
+(`repro.kernels.arena_scan.ref`) under this family's contract; bit-identity
+with the Pallas kernel is structural (shared stages — see
+arena_scan/stages.py).
 """
 from __future__ import annotations
 
@@ -19,6 +19,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.arena_scan.ref import arena_scan_ref, arena_scan_scan_ref
+from repro.kernels.arena_scan.stages import ScanSpec, predicate_keep
 
 NEG_INF = jnp.float32(jnp.finfo(jnp.float32).min)
 
@@ -29,15 +32,9 @@ def group_masks(meta: jax.Array, preds: jax.Array) -> jax.Array:
     meta: (N, 4) int32 [tenant, updated_at, category, acl];
     preds: (G, 4) int32 stacked `Predicate.as_array()` rows.
     Returns (G, N) bool — row n is live AND satisfies group g's clauses.
+    (Alias of the framework's `predicate_keep` mask stage.)
     """
-    tenant, ts, cat, acl = (meta[:, i] for i in range(4))
-    p_tenant, p_ts, p_cat, p_acl = (preds[:, i:i + 1] for i in range(4))
-    keep = (tenant >= 0)[None, :]                         # live rows only
-    keep &= (p_tenant == -2) | (tenant[None, :] == p_tenant)
-    keep &= ts[None, :] >= p_ts
-    keep &= (jnp.left_shift(1, cat)[None, :] & p_cat) != 0
-    keep &= (acl[None, :] & p_acl) != 0
-    return keep
+    return predicate_keep(meta, preds)
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -46,12 +43,9 @@ def grouped_topk_ref(q: jax.Array, emb: jax.Array, meta: jax.Array,
     """Dense oracle. q: (B, D); emb: (N, D); meta: (N, 4) int32; gids: (B,)
     int32 group id per query row (values in [0, G)); preds: (G, 4) int32.
     Returns (scores (B, k) f32, slots (B, k) i32, -1 past the fill)."""
-    keep = group_masks(meta, preds)                       # (G, N)
-    row_keep = keep[gids]                                 # (B, N)
-    scores = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
-    scores = jnp.where(row_keep, scores, NEG_INF)
-    top_s, top_i = jax.lax.top_k(scores, k)
-    return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
+    s, i = arena_scan_ref(q, emb, meta, gids, preds, k,
+                          spec=ScanSpec(score="dense"))
+    return s, i
 
 
 @partial(jax.jit, static_argnames=("k", "blk_n"))
@@ -65,36 +59,10 @@ def grouped_topk_scan_ref(q: jax.Array, emb: jax.Array, meta: jax.Array,
     on a CPU rig this is what makes the fused scan beat the per-group loop
     (the Pallas kernel does the same with VMEM scratch on TPU).
 
-    BIT-identical to `grouped_topk_ref` by construction, not by luck: every
-    score is the same dot product over the unchanged D axis (tiling splits
-    N only), and `lax.top_k` breaks ties toward the lower index — locally
-    (tile candidates keep index order) and in the final merge (candidates
-    concatenate in tile order) — so tied scores select the same slots as
-    the dense oracle's single top_k. N % blk_n == 0 (ops.py pads).
-    """
-    n = emb.shape[0]
-    assert n % blk_n == 0, (n, blk_n)
-    n_tiles = n // blk_n
-    emb_t = emb.reshape(n_tiles, blk_n, emb.shape[1])
-    meta_t = meta.reshape(n_tiles, blk_n, 4)
-    base_t = jnp.arange(n_tiles, dtype=jnp.int32) * blk_n
-
-    def step(_, tile):
-        e, m, base = tile
-        keep = group_masks(m, preds)                      # (G, blk_n)
-        scores = q.astype(jnp.float32) @ e.astype(jnp.float32).T
-        scores = jnp.where(keep[gids], scores, NEG_INF)
-        loc_s, loc_i = jax.lax.top_k(scores, min(k, blk_n))
-        return None, (loc_s, base + loc_i)
-
-    _, (loc_s, loc_i) = jax.lax.scan(step, None, (emb_t, meta_t, base_t))
-    all_s = jnp.moveaxis(loc_s, 0, 1).reshape(q.shape[0], -1)   # (B, T*k)
-    all_i = jnp.moveaxis(loc_i, 0, 1).reshape(q.shape[0], -1)
-    k_eff = min(k, all_s.shape[1])
-    top_s, sel = jax.lax.top_k(all_s, k_eff)
-    top_i = jnp.take_along_axis(all_i, sel, axis=1)
-    if k_eff < k:
-        pad = ((0, 0), (0, k - k_eff))
-        top_s = jnp.pad(top_s, pad, constant_values=NEG_INF)
-        top_i = jnp.pad(top_i, pad, constant_values=-1)
-    return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
+    BIT-identical to `grouped_topk_ref` by construction — the framework's
+    streaming engine runs the same stage functions per tile, tiling splits
+    N only, and `lax.top_k` breaks ties toward the lower index locally and
+    in the merge. N % blk_n == 0 (ops.py pads)."""
+    s, i = arena_scan_scan_ref(q, emb, meta, gids, preds, k, blk_n,
+                               spec=ScanSpec(score="dense"))
+    return s, i

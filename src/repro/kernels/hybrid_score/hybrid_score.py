@@ -8,28 +8,25 @@ for whichever signal each candidate list is missing. Retrieval at this
 scale is memory-bandwidth-bound, so this kernel streams each arena tile
 ONCE and computes everything in the same VMEM residency:
 
-  grid = (B_blocks, N_blocks)              # N innermost -> sequential scan
-  per step:
-    VMEM tiles:  q (BLK_B, D), emb (BLK_N, D), meta (BLK_N, 4) int32,
-                 terms (BLK_N, T) int32, lexnorm (BLK_N, T) f32,
-                 gids (BLK_B, 1), preds (G, 4) int32 (replicated),
-                 qterms (BLK_B, QT) int32, qidf (BLK_B, QT) f32
-    MXU:         dense    = q @ emb^T
-    VPU:         bm25     = masked-gather: lane t of doc n contributes
-                            qidf[b, j] * lexnorm[n, t] iff
-                            terms[n, t] == qterms[b, j]
-                            (T x QT unrolled 2D compare/accumulate passes —
-                            the fixed accumulation order shared with
-                            ref.bm25_block, which is what makes interpret
-                            mode bit-identical)
-                 keep_g   = live & tenant & recency & category & ACL for
-                            ALL G predicates, one broadcast pass
-    MXU:         row_keep = onehot(gids) @ keep_g
-    scratch:     running top-k on the FUSED score:
-                   wsum: ONE (BLK_B, K) list on w_dense*dense + w_lex*bm25
-                   rrf:  TWO lists (dense, bm25); rank fusion happens in
-                         the ops wrapper once the lists exist (ranks only
-                         exist after retrieval — the standard RRF form)
+  MXU:         dense    = (w_dense * q) @ emb^T
+  VPU:         bm25     = masked-gather over postings lanes with the
+                          lex weight folded into qidf
+               keep_g   = ALL G predicate masks, one broadcast pass
+  MXU:         row_keep = onehot(gids) @ keep_g
+  scratch:     running top-k on the fused score:
+                 wsum: ONE (BLK_B, K) list on dense + bm25
+                 rrf:  TWO lists (dense, bm25); rank fusion happens in
+                       the ops wrapper once the lists exist (ranks only
+                       exist after retrieval — the standard RRF form)
+
+FUSION WEIGHTS ARE FOLDED INTO THE INPUTS (`w_dense` into q before the
+matmul, `w_lex` into qidf before the gather), so the wsum combine is a
+bare ``dense + bm25`` add. This is arena-scan pinning rule 1
+(arena_scan/stages.py): a weighted combine at the output is an FMA-
+contractible mul+add whose rounding depends on the surrounding fusion —
+the historical source of the wsum bit-identity failures. Folding is
+value-preserving for ranking (w > 0) and bit-stable across engines
+because every engine folds identically.
 
 Isolation is structural exactly as in grouped_topk: the predicate mask
 lands on BOTH signals before any merge, so a row outside a group's
@@ -37,15 +34,10 @@ predicate can never surface for that group's rows no matter how high its
 BM25 score (the lexical-path leakage property, attacked in
 tests/test_hybrid.py).
 
-Tiling notes (TPU v5e target):
-  * terms/lexnorm ride in the SAME grid step as their embedding tile —
-    (BLK_N, T) int32+f32, ~64 KB at BLK_N=512, T=16; the lexical stream
-    adds ~T/D to the bandwidth bill instead of a second full scan;
-  * the T x QT compare loop is unrolled 2D VPU work ((BLK_B, BLK_N) per
-    step); QT is bucketed to a pow2 by the caller so the compiled-shape
-    working set stays small;
-  * fuse weights are baked static — they change with the query MIX, not
-    per query, and the (mode, weights) pair is part of the plan group key.
+This family is the unified arena-scan framework's lexical configuration
+(`repro.kernels.arena_scan`, `ScanSpec(score="fused"|"both")`); the scan
+body, both residency regimes (resident BlockSpec pipelining / paged
+double-buffered DMA), and the running top-k merges live in the framework.
 
 CPU CI executes this body in interpret mode only (bit-identity vs the jnp
 refs); running it compiled on a real TPU rig is a ROADMAP follow-up,
@@ -53,109 +45,11 @@ mirroring ivf_probe / grouped_topk.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.filtered_topk.filtered_topk import NEG_INF, _merge_topk
-
-
-def _bm25_tile(terms_ref, lexnorm_ref, qterms, qidf):
-    """ref.bm25_block's accumulation, tile-shaped: lanes outer, query terms
-    inner, all 2D (BLK_B, BLK_N) VPU ops."""
-    blk_b = qterms.shape[0]
-    blk_n = terms_ref.shape[0]
-    qt = qterms.shape[1]
-    bm25 = jnp.zeros((blk_b, blk_n), jnp.float32)
-    for t in range(terms_ref.shape[1]):
-        lane = terms_ref[:, t]
-        ln = lexnorm_ref[:, t]
-        w = jnp.zeros((blk_b, blk_n), jnp.float32)
-        for j in range(qt):
-            hit = lane[None, :] == qterms[:, j][:, None]
-            w = w + jnp.where(hit, qidf[:, j][:, None], 0.0)
-        bm25 = bm25 + w * ln[None, :]
-    return bm25
-
-
-def _keep_tile(meta_ref, pred_ref, gid_ref):
-    """All G engine-level WHERE clauses + per-row group select (one-hot
-    matmul) — identical to grouped_topk's kernel body."""
-    tenant = meta_ref[:, 0]
-    ts = meta_ref[:, 1]
-    cat = meta_ref[:, 2]
-    acl = meta_ref[:, 3]
-    preds = pred_ref[...]                                  # (G, 4)
-    p_tenant = preds[:, 0][:, None]
-    p_ts = preds[:, 1][:, None]
-    p_cat = preds[:, 2][:, None]
-    p_acl = preds[:, 3][:, None]
-    keep = (tenant >= 0)[None, :]                          # live rows only
-    keep &= (p_tenant == -2) | (tenant[None, :] == p_tenant)
-    keep &= ts[None, :] >= p_ts
-    keep &= (jnp.left_shift(1, cat)[None, :] & p_cat) != 0
-    keep &= (acl[None, :] & p_acl) != 0                    # (G, BLK_N)
-    n_groups = preds.shape[0]
-    gid = gid_ref[...]                                     # (BLK_B, 1)
-    onehot = (gid == jax.lax.broadcasted_iota(
-        jnp.int32, (1, n_groups), 1)).astype(jnp.float32)
-    row_keep = jax.lax.dot_general(
-        onehot, keep.astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32) > 0.0          # (BLK_B, BLK_N)
-    return row_keep
-
-
-def _kernel(gid_ref, pred_ref, q_ref, emb_ref, meta_ref, terms_ref, ln_ref,
-            qterms_ref, qidf_ref, *refs, k: int, blk_n: int, mode: str,
-            w_dense: float, w_lex: float):
-    if mode == "wsum":
-        out_s_ref, out_i_ref, best_s, best_i = refs
-        scratch = ((best_s, best_i),)
-        outs = ((out_s_ref, out_i_ref),)
-    else:
-        (out_ds_ref, out_di_ref, out_ls_ref, out_li_ref,
-         best_ds, best_di, best_ls, best_li) = refs
-        scratch = ((best_ds, best_di), (best_ls, best_li))
-        outs = ((out_ds_ref, out_di_ref), (out_ls_ref, out_li_ref))
-    bn = pl.program_id(1)
-    n_blocks = pl.num_programs(1)
-
-    @pl.when(bn == 0)
-    def _init():
-        for s_ref, i_ref in scratch:
-            s_ref[...] = jnp.full(s_ref.shape, NEG_INF, jnp.float32)
-            i_ref[...] = jnp.full(i_ref.shape, -1, jnp.int32)
-
-    # --- both signals over ONE tile residency ---
-    q = q_ref[...]
-    e = emb_ref[...]
-    dense = jax.lax.dot_general(q, e, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-    bm25 = _bm25_tile(terms_ref, ln_ref, qterms_ref[...], qidf_ref[...])
-    row_keep = _keep_tile(meta_ref, pred_ref, gid_ref)
-
-    # --- running ORDER BY <fused score> LIMIT k ---
-    base = bn * blk_n
-    idx = base + jax.lax.broadcasted_iota(jnp.int32, dense.shape, 1)
-    if mode == "wsum":
-        signals = (jnp.where(row_keep, w_dense * dense + w_lex * bm25,
-                             NEG_INF),)
-    else:
-        signals = (jnp.where(row_keep, dense, NEG_INF),
-                   jnp.where(row_keep, bm25, NEG_INF))
-    for (s_ref, i_ref), sig in zip(scratch, signals):
-        new_s, new_i = _merge_topk(s_ref[...], i_ref[...], sig, idx, k)
-        s_ref[...] = new_s
-        i_ref[...] = new_i
-
-    @pl.when(bn == n_blocks - 1)
-    def _finish():
-        for (os_ref, oi_ref), (s_ref, i_ref) in zip(outs, scratch):
-            os_ref[...] = s_ref[...]
-            oi_ref[...] = jnp.where(s_ref[...] > NEG_INF, i_ref[...], -1)
+from repro.kernels.arena_scan.kernel import arena_scan_pallas
+from repro.kernels.arena_scan.stages import ScanSpec
 
 
 def hybrid_score_pallas(q: jax.Array, emb: jax.Array, meta: jax.Array,
@@ -164,48 +58,25 @@ def hybrid_score_pallas(q: jax.Array, emb: jax.Array, meta: jax.Array,
                         qterms: jax.Array, qidf: jax.Array, k: int, *,
                         mode: str = "wsum", w_dense: float = 1.0,
                         w_lex: float = 1.0, blk_b: int = 8, blk_n: int = 512,
+                        page_rows: int | None = None,
                         interpret: bool = False):
-    """q: (B, D); emb: (N, D); meta: (N, 4) int32; terms: (N, T) int32;
-    lexnorm: (N, T) f32; gids: (B, 1) int32; preds: (G, 4) int32;
-    qterms: (B, QT) int32; qidf: (B, QT) f32. B % blk_b == 0,
-    N % blk_n == 0, D % 128 == 0 (the ops.py wrapper pads). Returns
-    (scores, slots) each (B, k) for ``wsum``; the two per-signal lists
-    (d_s, d_i, l_s, l_i) for ``rrf`` (rank fusion happens in ops.py)."""
-    B, D = q.shape
-    N = emb.shape[0]
-    T = terms.shape[1]
-    QT = qterms.shape[1]
-    G = preds.shape[0]
-    assert B % blk_b == 0 and N % blk_n == 0, (B, N, blk_b, blk_n)
-    assert gids.shape == (B, 1), gids.shape
+    """q: (B, D); emb: (N, D); meta: (N, 4) int32; terms/lexnorm: (N, T);
+    gids: (B, 1) int32; preds: (G, 4) int32; qterms: (B, QT) int32 (-1
+    padding); qidf: (B, QT) f32 (0 on padding). B % blk_b == 0, N % blk_n
+    == 0 (or N % page_rows == 0 in the paged regime), D % 128 == 0 (the
+    ops.py wrapper pads).
 
-    grid = (B // blk_b, N // blk_n)
-    kernel = functools.partial(_kernel, k=k, blk_n=blk_n, mode=mode,
-                               w_dense=w_dense, w_lex=w_lex)
-    n_lists = 1 if mode == "wsum" else 2
-    out_shape = (jax.ShapeDtypeStruct((B, k), jnp.float32),
-                 jax.ShapeDtypeStruct((B, k), jnp.int32)) * n_lists
-    out_spec = (pl.BlockSpec((blk_b, k), lambda b, n: (b, 0)),
-                pl.BlockSpec((blk_b, k), lambda b, n: (b, 0))) * n_lists
-    scratch = (pltpu.VMEM((blk_b, k), jnp.float32),
-               pltpu.VMEM((blk_b, k), jnp.int32)) * n_lists
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=0,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((blk_b, 1), lambda b, n: (b, 0)),   # gids
-            pl.BlockSpec((G, 4), lambda b, n: (0, 0)),       # preds
-            pl.BlockSpec((blk_b, D), lambda b, n: (b, 0)),   # q
-            pl.BlockSpec((blk_n, D), lambda b, n: (n, 0)),   # emb
-            pl.BlockSpec((blk_n, 4), lambda b, n: (n, 0)),   # meta
-            pl.BlockSpec((blk_n, T), lambda b, n: (n, 0)),   # terms
-            pl.BlockSpec((blk_n, T), lambda b, n: (n, 0)),   # lexnorm
-            pl.BlockSpec((blk_b, QT), lambda b, n: (b, 0)),  # qterms
-            pl.BlockSpec((blk_b, QT), lambda b, n: (b, 0)),  # qidf
-        ],
-        out_specs=list(out_spec),
-        scratch_shapes=list(scratch),
-    )
-    fn = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
-                        interpret=interpret)
-    return fn(gids, preds, q, emb, meta, terms, lexnorm, qterms, qidf)
+    Returns ``wsum``: (fused scores (B, k) f32, slots (B, k) i32);
+    ``rrf``: the two per-signal lists (d_s, d_i, l_s, l_i) — rank fusion
+    happens post-kernel (weights are unused: RRF ranks are scale-free)."""
+    if mode == "wsum":
+        # fold fusion weights into the inputs (pinning rule 1)
+        q = q * jnp.float32(w_dense)
+        qidf = qidf * jnp.float32(w_lex)
+        spec = ScanSpec(score="fused")
+    else:
+        spec = ScanSpec(score="both")
+    return arena_scan_pallas(q, emb, meta, gids, preds, k, spec=spec,
+                             lex=(terms, lexnorm, qterms, qidf),
+                             blk_b=blk_b, blk_n=blk_n, page_rows=page_rows,
+                             interpret=interpret)

@@ -5,10 +5,11 @@ gathering, engine dispatch (Pallas on TPU, jnp streaming scan elsewhere;
 tests pass ``use_kernel=True, interpret=True`` to execute the kernel body
 on CPU), and the RRF rank fusion of the kernel's per-signal lists.
 
-Padding invariants (mirrors grouped_topk.ops):
-  * arena rows pad to the N-block multiple as DEAD rows (tenant = -1,
-    term lanes empty, lexnorm 0) for BOTH engines, so kernel and refs run
-    on identical arrays and bit-identity is testable;
+Padding invariants (shared with every arena-scan family — see
+`repro.kernels.arena_scan.ops`):
+  * arena rows pad to the N-block (or page) multiple as DEAD rows
+    (tenant = -1, term lanes empty, lexnorm 0) for BOTH engines, so kernel
+    and refs run on identical arrays and bit-identity is testable;
   * query rows pad to the B-block multiple with group id 0 and no query
     terms — retrieval is row-parallel, so padding rows cannot perturb real
     rows, and they are sliced off before returning;
@@ -24,8 +25,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.grouped_topk.ops import (BLK_SCAN, _packed_meta,
-                                            _pad_axis0)
+from repro.kernels.arena_scan.ops import (_packed_meta, _pad_axis0,
+                                          default_blk_n, default_interpret,
+                                          default_use_kernel, pad_d128,
+                                          pad_dead_rows)
 from repro.kernels.hybrid_score.hybrid_score import hybrid_score_pallas
 from repro.kernels.hybrid_score.ref import (NEG_INF, hybrid_score_scan_ref,
                                             qidf_of, rrf_fuse)
@@ -33,30 +36,23 @@ from repro.kernels.hybrid_score.ref import (NEG_INF, hybrid_score_scan_ref,
 
 @partial(jax.jit, static_argnames=("k", "mode", "w_dense", "w_lex", "rrf_c",
                                    "lists", "use_kernel", "blk_b", "blk_n",
-                                   "interpret"))
+                                   "page_rows", "interpret"))
 def _run(q, emb, meta, terms, lexnorm, idf, gids, preds, qterms, k, mode,
-         w_dense, w_lex, rrf_c, lists, use_kernel, blk_b, blk_n, interpret):
+         w_dense, w_lex, rrf_c, lists, use_kernel, blk_b, blk_n, page_rows,
+         interpret):
     qidf = qidf_of(idf, qterms)
-    # pad N to the block multiple with dead rows for BOTH engines
-    n = emb.shape[0]
-    emb = _pad_axis0(emb, blk_n, 0)
-    meta = _pad_axis0(meta, blk_n, 0)
-    terms = _pad_axis0(terms, blk_n, -1)
-    lexnorm = _pad_axis0(lexnorm, blk_n, 0)
-    if meta.shape[0] != n:
-        dead = jnp.arange(meta.shape[0]) >= n
-        meta = jnp.where(dead[:, None],
-                         jnp.asarray([-1, 0, 0, 0], jnp.int32)[None, :], meta)
+    # pad N to the block (or page) multiple with dead rows for BOTH engines
+    emb, meta, terms, lexnorm = pad_dead_rows(emb, meta, page_rows or blk_n,
+                                              terms, lexnorm)
     if not use_kernel:
+        # the scan tile IS the page: blk_n = page_rows in the paged regime
         return hybrid_score_scan_ref(q, emb, meta, terms, lexnorm, gids,
-                                     preds, qterms, qidf, k, blk_n,
+                                     preds, qterms, qidf, k,
+                                     page_rows or blk_n,
                                      mode=mode, w_dense=w_dense, w_lex=w_lex,
                                      rrf_c=rrf_c, lists=lists)
-    B, D = q.shape
-    d_pad = (-D) % 128
-    if d_pad:
-        q = jnp.pad(q, ((0, 0), (0, d_pad)))
-        emb = jnp.pad(emb, ((0, 0), (0, d_pad)))
+    B = q.shape[0]
+    q, emb = pad_d128(q, emb)
     q = _pad_axis0(q, blk_b, 0)
     gids = _pad_axis0(gids.reshape(-1, 1), blk_b, 0)
     qterms = _pad_axis0(qterms, blk_b, -1)
@@ -64,7 +60,7 @@ def _run(q, emb, meta, terms, lexnorm, idf, gids, preds, qterms, k, mode,
     out = hybrid_score_pallas(q, emb, meta, terms, lexnorm, gids, preds,
                               qterms, qidf, k, mode=mode, w_dense=w_dense,
                               w_lex=w_lex, blk_b=blk_b, blk_n=blk_n,
-                              interpret=interpret)
+                              page_rows=page_rows, interpret=interpret)
     if mode == "wsum":
         s, i = out
         return s[:B], i[:B]
@@ -79,7 +75,8 @@ def hybrid_score(q, emb, tenant, updated_at, category, acl, terms, lexnorm,
                  w_dense: float = 1.0, w_lex: float = 1.0,
                  rrf_c: float = 60.0, lists: bool = False,
                  use_kernel: bool | None = None, blk_b: int = 8,
-                 blk_n: int | None = None, interpret: bool | None = None):
+                 blk_n: int | None = None, page_rows: int | None = None,
+                 interpret: bool | None = None):
     """Fused hybrid dense+BM25 grouped top-k over ONE arena scan.
 
     q: (B, D) stacked query rows for every predicate group in the batch;
@@ -90,8 +87,9 @@ def hybrid_score(q, emb, tenant, updated_at, category, acl, terms, lexnorm,
     `Predicate.as_array()` rows; qterms: (B, QT) int32 per-row query term
     ids (-1 padding); k: LIMIT.
 
-    ``mode="wsum"`` ranks on w_dense*dense + w_lex*bm25; ``mode="rrf"``
-    retrieves both per-signal k-lists in the same pass and rank-fuses them
+    ``mode="wsum"`` ranks on w_dense*dense + w_lex*bm25 (weights folded
+    into the inputs — see hybrid_score.py); ``mode="rrf"`` retrieves both
+    per-signal k-lists in the same pass and rank-fuses them
     (1/(rrf_c + rank), deduplicated union). ``lists=True`` (rrf only)
     skips the fusion and returns (d_s, d_i, l_s, l_i) — the tiered
     executor merges per signal across tiers first.
@@ -99,29 +97,27 @@ def hybrid_score(q, emb, tenant, updated_at, category, acl, terms, lexnorm,
     Returns (scores (B, k) f32, slots (B, k) i32, -1 past the fill).
     ``use_kernel=None`` picks the Pallas kernel on a TPU backend and the
     jnp streaming scan elsewhere; tests pass ``use_kernel=True,
-    interpret=True`` to execute the kernel body on CPU.
+    interpret=True`` to execute the kernel body on CPU. ``page_rows``
+    selects the paged regime: the Pallas kernel switches to HBM-resident
+    streams with double-buffered DMA, the jnp scan tiles at the page size
+    — bits are unchanged either way (arena_scan contract).
     """
     if lists and mode != "rrf":
         raise ValueError("lists=True is only meaningful for mode='rrf'")
     if mode not in ("wsum", "rrf"):
         raise ValueError(f"unknown fusion mode {mode!r}")
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    use_kernel = default_use_kernel(use_kernel)
+    interpret = default_interpret(interpret)
     if blk_n is None:
-        if use_kernel:
-            blk_n = 512
-        else:
-            cap = 1 << max(int(emb.shape[0]) - 1, 0).bit_length()
-            blk_n = min(BLK_SCAN, max(cap, 1))
+        blk_n = default_blk_n(emb.shape[0], use_kernel)
     n = emb.shape[0]
     if k > n:   # LIMIT larger than the arena: SQL semantics, padded to k
         out = hybrid_score(q, emb, tenant, updated_at, category, acl, terms,
                            lexnorm, idf, gids, preds, qterms, n, mode=mode,
                            w_dense=w_dense, w_lex=w_lex, rrf_c=rrf_c,
                            lists=lists, use_kernel=use_kernel, blk_b=blk_b,
-                           blk_n=blk_n, interpret=interpret)
+                           blk_n=blk_n, page_rows=page_rows,
+                           interpret=interpret)
         pad = ((0, 0), (0, k - n))
         return tuple(jnp.pad(a, pad, constant_values=NEG_INF) if j % 2 == 0
                      else jnp.pad(a, pad, constant_values=-1)
@@ -133,4 +129,4 @@ def hybrid_score(q, emb, tenant, updated_at, category, acl, terms, lexnorm,
                 jnp.asarray(gids, jnp.int32), jnp.asarray(preds, jnp.int32),
                 jnp.asarray(qterms, jnp.int32), k, mode, float(w_dense),
                 float(w_lex), float(rrf_c), lists, use_kernel, blk_b, blk_n,
-                interpret)
+                page_rows, interpret)

@@ -3,29 +3,29 @@
 Contract shared with the Pallas kernel (hybrid_score.py): ONE pass over the
 arena computes BOTH retrieval signals for every query row —
 
-  dense  = q . emb^T                       (cosine / dot similarity)
+  dense  = (w_dense * q) . emb^T           (cosine / dot similarity)
   bm25   = sum over the row's T postings lanes of
-           idf(term) * tf*(k1+1)/(tf + k1*lennorm)      (masked gather:
-           a lane contributes iff its term id equals one of the row's
-           query terms)
+           w_lex * idf(term) * tf*(k1+1)/(tf + k1*lennorm)   (masked gather)
 
 — applies the row's lowered predicate mask (grouped, exactly as
-grouped_topk: each query row selects its group's mask, so a row failing
-group g's predicate is -inf in every g-row's lane BEFORE any ranking and
-can never surface no matter how high its BM25 score), and maintains a
-running top-k on the FUSED score:
+grouped_topk: a row failing group g's predicate is -inf in every g-row's
+lane BEFORE any ranking and can never surface no matter how high its BM25
+score), and maintains a running top-k on the FUSED score:
 
-  * ``wsum``: fused = w_dense * dense + w_lex * bm25, one running k-list;
+  * ``wsum``: fused = dense + bm25 with the fusion weights FOLDED into the
+              inputs (q and qidf) — arena-scan pinning rule 1: a weighted
+              combine at the output is an FMA-contractible mul+add whose
+              rounding depends on the surrounding fusion; the bare add is
+              not. One running k-list.
   * ``rrf``:  two running k-lists (dense, bm25), fused by reciprocal-rank
               over the retrieved lists (`rrf_fuse`) after the scan — rank
               fusion needs ranks, which only exist once the lists do, so
-              this is the one-pass form every production RRF uses.
+              this is the one-pass form every production RRF uses. Weights
+              are unused (ranks are scale-free).
 
 BIT-IDENTITY between kernel, dense oracle, and streaming scan is by
-construction, not luck: `bm25_block` fixes the float accumulation order
-(per (row, doc) element: lanes outer, query terms inner), the dense dot is
-the same contraction, tiling splits N only, and `lax.top_k` breaks ties
-toward the lower index locally and in every merge.
+construction: all three are the arena-scan framework's engines running the
+same stage functions (arena_scan/stages.py) with identical weight folding.
 """
 from __future__ import annotations
 
@@ -34,7 +34,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.grouped_topk.ref import group_masks
+from repro.kernels.arena_scan.ref import arena_scan_ref, arena_scan_scan_ref
+from repro.kernels.arena_scan.stages import ScanSpec, bm25_scores
 
 NEG_INF = jnp.float32(jnp.finfo(jnp.float32).min)
 
@@ -51,31 +52,11 @@ def qidf_of(idf: jax.Array, qterms: jax.Array) -> jax.Array:
 
 def bm25_block(terms: jax.Array, lexnorm: jax.Array, qterms: jax.Array,
                qidf: jax.Array) -> jax.Array:
-    """Masked-gather BM25 over one block of postings lanes.
-
-    terms: (N, T) int32 lane term ids (-1 empty); lexnorm: (N, T) f32
-    per-lane tf/length weight (idf excluded, 0 on empty lanes);
-    qterms: (B, QT) int32 query term ids (-1 padding); qidf: (B, QT) f32
-    per-term idf (0 on padding). Returns (B, N) f32.
-
-    The accumulation order is FIXED (lanes outer, query terms inner) and
-    shared verbatim with the Pallas kernel body — float sums are
-    order-sensitive, and this order is what makes kernel and refs
-    bit-identical. Padding safety: a padding query term (-1) can only
-    "match" an empty doc lane (-1), and its idf is 0, so it contributes
-    exactly 0.0.
-    """
-    n, t_lanes = terms.shape
-    qt = qterms.shape[1]
-    bm25 = jnp.zeros((qterms.shape[0], n), jnp.float32)
-    for t in range(t_lanes):
-        lane = terms[:, t]
-        w = jnp.zeros_like(bm25)
-        for j in range(qt):
-            hit = lane[None, :] == qterms[:, j][:, None]
-            w = w + jnp.where(hit, qidf[:, j][:, None], 0.0)
-        bm25 = bm25 + w * lexnorm[:, t][None, :]
-    return bm25
+    """Masked-gather BM25 over one block of postings lanes — the arena-scan
+    framework's lexical score stage (see `arena_scan.stages.bm25_scores`
+    for the fixed accumulation order and the select-guarded lane product
+    that pin its bits across fusion contexts). Returns (B, N) f32."""
+    return bm25_scores(terms, lexnorm, qterms, qidf)
 
 
 def rrf_fuse(ds: jax.Array, di: jax.Array, ls: jax.Array, li: jax.Array,
@@ -115,20 +96,14 @@ def rrf_fuse(ds: jax.Array, di: jax.Array, ls: jax.Array, li: jax.Array,
     return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
 
 
-def _scores_block(q, emb, meta, terms, lexnorm, gids, preds, qterms, qidf):
-    """Shared per-block math: (dense (B, N), bm25 (B, N), row_keep (B, N)).
-
-    The barrier sequences the elementwise BM25 chain BEFORE the threaded
-    dense matmul: letting XLA CPU schedule them interleaved measures ~1.5x
-    slower than running them back to back (the matmul loses its blocked
-    schedule). Values are untouched, so bit-identity is unaffected.
-    """
-    keep = group_masks(meta, preds)                              # (G, N)
-    row_keep = keep[gids]                                        # (B, N)
-    bm25 = bm25_block(terms, lexnorm, qterms, qidf)
-    bm25 = jax.lax.optimization_barrier(bm25)
-    dense = q.astype(jnp.float32) @ emb.astype(jnp.float32).T
-    return dense, bm25, row_keep
+def _fold(q, qidf, mode, w_dense, w_lex):
+    """Identical weight folding in every engine (pinning rule 1): wsum
+    scales the inputs once, elementwise — the same bits no matter which
+    engine performs the multiply. RRF leaves inputs untouched (rank fusion
+    is scale-free and its lists carry RAW signal scores)."""
+    if mode == "wsum":
+        return q * jnp.float32(w_dense), qidf * jnp.float32(w_lex)
+    return q, qidf
 
 
 @partial(jax.jit, static_argnames=("k", "mode", "w_dense", "w_lex", "rrf_c"))
@@ -139,19 +114,13 @@ def hybrid_score_ref(q, emb, meta, terms, lexnorm, gids, preds, qterms, qidf,
     lexnorm: (N, T); gids: (B,) int32; preds: (G, 4) int32; qterms: (B, QT)
     int32; qidf: (B, QT) f32. Returns (scores (B, k) f32, slots (B, k) i32)
     for ``wsum`` and the fused RRF lists for ``rrf``."""
-    dense, bm25, row_keep = _scores_block(q, emb, meta, terms, lexnorm,
-                                          gids, preds, qterms, qidf)
+    q, qidf = _fold(q, qidf, mode, w_dense, w_lex)
+    spec = ScanSpec(score="fused" if mode == "wsum" else "both")
+    out = arena_scan_ref(q, emb, meta, gids, preds, k, spec=spec,
+                         lex=(terms, lexnorm, qterms, qidf))
     if mode == "wsum":
-        fused = jnp.where(row_keep, w_dense * dense + w_lex * bm25, NEG_INF)
-        top_s, top_i = jax.lax.top_k(fused, k)
-        return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
-    ds = jnp.where(row_keep, dense, NEG_INF)
-    lx = jnp.where(row_keep, bm25, NEG_INF)
-    d_s, d_i = jax.lax.top_k(ds, k)
-    l_s, l_i = jax.lax.top_k(lx, k)
-    d_i = jnp.where(d_s > NEG_INF, d_i, -1)
-    l_i = jnp.where(l_s > NEG_INF, l_i, -1)
-    return rrf_fuse(d_s, d_i, l_s, l_i, k, rrf_c)
+        return out
+    return rrf_fuse(*out, k, rrf_c)
 
 
 @partial(jax.jit, static_argnames=("k", "mode", "w_dense", "w_lex", "rrf_c",
@@ -170,48 +139,12 @@ def hybrid_score_scan_ref(q, emb, meta, terms, lexnorm, gids, preds, qterms,
     the tiered executor merges them with the warm tier's lists per signal
     before rank fusion. N % blk_n == 0 (ops.py pads).
     """
-    n = emb.shape[0]
-    assert n % blk_n == 0, (n, blk_n)
-    n_tiles = n // blk_n
-    emb_t = emb.reshape(n_tiles, blk_n, emb.shape[1])
-    meta_t = meta.reshape(n_tiles, blk_n, 4)
-    terms_t = terms.reshape(n_tiles, blk_n, terms.shape[1])
-    ln_t = lexnorm.reshape(n_tiles, blk_n, lexnorm.shape[1])
-    base_t = jnp.arange(n_tiles, dtype=jnp.int32) * blk_n
-    k_loc = min(k, blk_n)
-
-    def step(_, tile):
-        e, m, tm, ln, base = tile
-        dense, bm25, row_keep = _scores_block(q, e, m, tm, ln, gids, preds,
-                                              qterms, qidf)
-        if mode == "wsum":
-            fused = jnp.where(row_keep, w_dense * dense + w_lex * bm25,
-                              NEG_INF)
-            s, i = jax.lax.top_k(fused, k_loc)
-            return None, (s, base + i)
-        d_s, d_i = jax.lax.top_k(jnp.where(row_keep, dense, NEG_INF), k_loc)
-        l_s, l_i = jax.lax.top_k(jnp.where(row_keep, bm25, NEG_INF), k_loc)
-        return None, (d_s, base + d_i, l_s, base + l_i)
-
-    def merge(loc_s, loc_i):
-        all_s = jnp.moveaxis(loc_s, 0, 1).reshape(q.shape[0], -1)
-        all_i = jnp.moveaxis(loc_i, 0, 1).reshape(q.shape[0], -1)
-        k_eff = min(k, all_s.shape[1])
-        top_s, sel = jax.lax.top_k(all_s, k_eff)
-        top_i = jnp.take_along_axis(all_i, sel, axis=1)
-        if k_eff < k:
-            pad = ((0, 0), (0, k - k_eff))
-            top_s = jnp.pad(top_s, pad, constant_values=NEG_INF)
-            top_i = jnp.pad(top_i, pad, constant_values=-1)
-        return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
-
-    tiles = (emb_t, meta_t, terms_t, ln_t, base_t)
+    q, qidf = _fold(q, qidf, mode, w_dense, w_lex)
+    spec = ScanSpec(score="fused" if mode == "wsum" else "both")
+    out = arena_scan_scan_ref(q, emb, meta, gids, preds, k, blk_n, spec=spec,
+                              lex=(terms, lexnorm, qterms, qidf))
     if mode == "wsum":
-        _, (loc_s, loc_i) = jax.lax.scan(step, None, tiles)
-        return merge(loc_s, loc_i)
-    _, (d_s, d_i, l_s, l_i) = jax.lax.scan(step, None, tiles)
-    d_s, d_i = merge(d_s, d_i)
-    l_s, l_i = merge(l_s, l_i)
+        return out
     if lists:
-        return d_s, d_i, l_s, l_i
-    return rrf_fuse(d_s, d_i, l_s, l_i, k, rrf_c)
+        return out
+    return rrf_fuse(*out, k, rrf_c)

@@ -2,16 +2,7 @@
 
 The exact scan (kernels/filtered_topk) streams the WHOLE arena HBM->VMEM
 every query batch, so p50 grows linearly with corpus size. The probe kernel
-scans only the candidate rows named by a predicate group's probed clusters:
-
-  grid = (B_blocks, P_blocks)            # P = deduplicated probed rows
-  per step:
-    VMEM tiles:  q (BLK_B, D), cand_emb (BLK_P, D), cand_meta (BLK_P, 5)
-    MXU:         scores = q @ cand_emb^T              (similarity)
-    VPU:         keep   = member & live & tenant & recency & category & ACL
-                 scores = where(keep, scores, -inf)   (engine-level WHERE)
-    scratch:     running top-k merge across P blocks  (ORDER BY .. LIMIT k)
-
+scans only the candidate rows named by a predicate group's probed clusters.
 The candidate tiles are gathered ONCE per predicate group — the whole batch
 of stacked query rows shares one (P, D) stream, never a per-row (B, P, D)
 copy. The 5th metadata lane carries each candidate's ARENA slot, so the
@@ -22,95 +13,37 @@ Isolation is preserved by construction: the predicate mask is evaluated on
 metadata gathered from the ARENA (the single source of truth), not from any
 index-side copy — a corrupted/stale member table can only change which rows
 get scored, never allow a row that fails the WHERE clause to surface.
+
+This family is the unified arena-scan framework's slot-lane configuration
+(`repro.kernels.arena_scan`, `ScanSpec(slot_lane=True)`): the 5th metadata
+lane is the output index source and `slot < 0` rows (member-table padding)
+are masked in the shared mask stage. Scan body, residency regimes, and the
+running top-k merge live in the framework.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.filtered_topk.filtered_topk import NEG_INF, _merge_topk
-
-
-def _kernel(pred_ref, q_ref, emb_ref, meta_ref, out_s_ref, out_i_ref,
-            best_s, best_i, *, k: int):
-    bn = pl.program_id(1)
-    n_blocks = pl.num_programs(1)
-
-    @pl.when(bn == 0)
-    def _init():
-        best_s[...] = jnp.full(best_s.shape, NEG_INF, jnp.float32)
-        best_i[...] = jnp.full(best_i.shape, -1, jnp.int32)
-
-    # --- similarity over the candidate tile (MXU) ---
-    q = q_ref[...]
-    e = emb_ref[...]
-    scores = jax.lax.dot_general(q, e, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-
-    # --- engine-level WHERE (VPU), same pass ---
-    tenant = meta_ref[:, 0]
-    ts = meta_ref[:, 1]
-    cat = meta_ref[:, 2]
-    acl = meta_ref[:, 3]
-    slot = meta_ref[:, 4]
-    p_tenant, p_ts, p_cat, p_acl = pred_ref[0], pred_ref[1], pred_ref[2], pred_ref[3]
-    keep = slot >= 0                                      # member-table padding
-    keep &= tenant >= 0                                   # live rows only
-    keep &= (p_tenant == -2) | (tenant == p_tenant)       # tenant isolation
-    keep &= ts >= p_ts                                    # freshness
-    keep &= (jnp.left_shift(1, cat) & p_cat) != 0         # category set
-    keep &= (acl & p_acl) != 0                            # ACL groups
-    scores = jnp.where(keep[None, :], scores, NEG_INF)
-
-    # --- running ORDER BY ... LIMIT k over ARENA slots ---
-    idx = jnp.broadcast_to(slot[None, :], scores.shape)
-    new_s, new_i = _merge_topk(best_s[...], best_i[...], scores, idx, k)
-    best_s[...] = new_s
-    best_i[...] = new_i
-
-    @pl.when(bn == n_blocks - 1)
-    def _finish():
-        out_s_ref[...] = best_s[...]
-        out_i_ref[...] = jnp.where(best_s[...] > NEG_INF, best_i[...], -1)
+from repro.kernels.arena_scan.kernel import arena_scan_pallas
+from repro.kernels.arena_scan.stages import ScanSpec
 
 
 def ivf_probe_pallas(q: jax.Array, cand_emb: jax.Array, cand_meta: jax.Array,
                      pred: jax.Array, k: int, *,
                      blk_b: int = 8, blk_p: int = 256,
+                     page_rows: int | None = None,
                      interpret: bool = False):
     """q: (B, D); cand_emb: (P, D); cand_meta: (P, 5) int32
     [tenant, ts, cat, acl, arena_slot]; pred: (4,) int32.
-    B % blk_b == 0, P % blk_p == 0, D % 128 == 0 (the ops.py wrapper pads).
+    B % blk_b == 0, P % blk_p == 0 (or P % page_rows == 0 in the paged
+    regime), D % 128 == 0 (the ops.py wrapper pads).
     Returns (scores (B, k) f32, arena slots (B, k) i32)."""
-    B, D = q.shape
-    P = cand_emb.shape[0]
-    assert B % blk_b == 0 and P % blk_p == 0, (B, P, blk_b, blk_p)
-
-    grid = (B // blk_b, P // blk_p)
-    kernel = functools.partial(_kernel, k=k)
-    out_shape = (jax.ShapeDtypeStruct((B, k), jnp.float32),
-                 jax.ShapeDtypeStruct((B, k), jnp.int32))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((blk_b, D), lambda b, n, *_: (b, 0)),
-            pl.BlockSpec((blk_p, D), lambda b, n, *_: (n, 0)),
-            pl.BlockSpec((blk_p, 5), lambda b, n, *_: (n, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((blk_b, k), lambda b, n, *_: (b, 0)),
-            pl.BlockSpec((blk_b, k), lambda b, n, *_: (b, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((blk_b, k), jnp.float32),
-            pltpu.VMEM((blk_b, k), jnp.int32),
-        ],
-    )
-    fn = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
-                        interpret=interpret)
-    return fn(pred, q, cand_emb, cand_meta)
+    B = q.shape[0]
+    gids = jnp.zeros((B, 1), jnp.int32)
+    s, i = arena_scan_pallas(q, cand_emb, cand_meta, gids,
+                             pred[None, :].astype(jnp.int32), k,
+                             spec=ScanSpec(score="dense", slot_lane=True),
+                             blk_b=blk_b, blk_n=blk_p, page_rows=page_rows,
+                             interpret=interpret)
+    return s, i

@@ -25,6 +25,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.arena_scan.ops import (_pad_axis0, pad_d128,
+                                          pad_dead_rows)
 from repro.kernels.ivf_probe.ivf_probe import ivf_probe_pallas
 from repro.kernels.ivf_probe.ref import NEG_INF, ivf_probe_ref
 
@@ -51,37 +53,20 @@ def _assemble(emb, tenant, updated_at, category, acl, members, overflow,
     return emb[safe], meta
 
 
-def _pad_axis0(x, mult, fill):
-    pad = (-x.shape[0]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
-    return jnp.pad(x, widths, constant_values=fill)
-
-
 @partial(jax.jit, static_argnames=("k", "use_kernel", "blk_b", "blk_p",
                                    "interpret"))
 def _run(q, emb, tenant, updated_at, category, acl, members, overflow,
          clusters, pred, k, use_kernel, blk_b, blk_p, interpret):
     cand_emb, cand_meta = _assemble(emb, tenant, updated_at, category, acl,
                                     members, overflow, clusters)
-    # pad P to the block multiple with dead rows (slot -1) for BOTH engines,
-    # so kernel and ref run on identical arrays (bit-identity is testable)
-    n_cand = cand_emb.shape[0]
-    cand_emb = _pad_axis0(cand_emb, blk_p, 0)
-    cand_meta = _pad_axis0(cand_meta, blk_p, 0)
-    if cand_meta.shape[0] != n_cand:
-        dead = jnp.arange(cand_meta.shape[0]) >= n_cand
-        cand_meta = jnp.where(dead[:, None],
-                              jnp.asarray([-1, 0, 0, 0, -1], jnp.int32)[None, :],
-                              cand_meta)
+    # pad P to the block multiple with dead rows (tenant -1, slot -1) for
+    # BOTH engines, so kernel and ref run on identical arrays
+    # (bit-identity is testable)
+    cand_emb, cand_meta = pad_dead_rows(cand_emb, cand_meta, blk_p)
     if not use_kernel:
         return ivf_probe_ref(q, cand_emb, cand_meta, pred, k)
-    B, D = q.shape
-    d_pad = (-D) % 128
-    if d_pad:
-        q = jnp.pad(q, ((0, 0), (0, d_pad)))
-        cand_emb = jnp.pad(cand_emb, ((0, 0), (0, d_pad)))
+    B = q.shape[0]
+    q, cand_emb = pad_d128(q, cand_emb)
     q = _pad_axis0(q, blk_b, 0)
     s, i = ivf_probe_pallas(q, cand_emb, cand_meta, pred, k,
                             blk_b=blk_b, blk_p=blk_p, interpret=interpret)

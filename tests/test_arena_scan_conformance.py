@@ -1,0 +1,417 @@
+"""Arena-scan conformance matrix — ONE grid proving every scan family.
+
+All four kernel families (filtered_topk, grouped_topk, ivf_probe,
+hybrid_score) are thin wrappers over `repro.kernels.arena_scan`; this file
+is the framework's acceptance contract (ISSUE 7):
+
+  * ENGINE CONFORMANCE: for every (family x shape bucket x page size x
+    group count) cell, the dense jnp oracle, the streaming jnp scan, the
+    Pallas kernel body (interpret mode on CPU), and BOTH paged variants
+    (scan tiled at the page, kernel on double-buffered DMA) return
+    bit-equal scores AND slots. The grid includes arenas larger than one
+    page (N > page_rows -> multi-page DMA loop), N not a tile multiple
+    (dead-row padding path), G at pow2 pad boundaries (3 -> blocker lane,
+    4 -> exact), and the historical wsum FMA-divergence shapes
+    (5,700,48) / (8,1024,128) at qt in {4, 16} that ISSUE 7 turned green;
+  * LEAKAGE IMPOSSIBILITY holds in every cell: a returned slot always
+    satisfies ITS group's predicate under an independent numpy oracle —
+    the multi-tenant isolation claim, per family and per regime;
+  * AUDIT CONFORMANCE: `rows_scanned` / `terms_scanned` report the same
+    arena traffic for paged and resident launches (paging changes the DMA
+    schedule, never the rows scored), and paged/resident launches occupy
+    DISTINCT compiled-shape slots (different grid -> different program);
+  * PLAN CONFORMANCE: a planner-stamped paged plan (PlannerConfig
+    .paged_min_rows) executes bit-identical to its resident twin through
+    `execute_plans`, increments `ExecStats.paged_scans`, and renders the
+    "paging:" EXPLAIN line.
+
+The per-family regression grids (test_kernels / test_grouped_topk /
+test_hybrid / test_ivf_engine) stay as deep per-family coverage; this
+matrix is the single cross-family gate CI runs on every push.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import executor as executor_mod
+from repro.api.executor import (CompiledShapes, ExecStats, _finish_hot,
+                                _launch_hybrid, run_grouped_fused)
+from repro.api.plan import LogicalPlan
+from repro.api.planner import PlannerConfig, compile_plan
+from repro.core.query import (Predicate, stack_predicates, unified_query,
+                              unified_query_ref)
+from repro.kernels.arena_scan.ops import _pad_axis0, pad_d128
+from repro.kernels.grouped_topk.ops import _packed_meta, grouped_topk
+from repro.kernels.grouped_topk.ref import grouped_topk_ref
+from repro.kernels.hybrid_score.ops import hybrid_score
+from repro.kernels.hybrid_score.ref import hybrid_score_ref
+from repro.kernels.ivf_probe.ivf_probe import ivf_probe_pallas
+from repro.kernels.ivf_probe.ref import ivf_probe_ref, ivf_probe_scan_ref
+
+pytestmark = [pytest.mark.kernels, pytest.mark.slow]
+
+W_DENSE, W_LEX = 0.8, 1.7    # the historical FMA-divergence weights
+V, T_LANES = 64, 6
+
+
+# ---------------------------------------------------------------------------
+# shared fixtures: one arena schema serves every family
+# ---------------------------------------------------------------------------
+
+def _arena(rng, n, d, n_tenants=5):
+    terms = rng.integers(-1, V, (n, T_LANES)).astype(np.int32)
+    lexnorm = np.where(terms >= 0,
+                       (rng.random((n, T_LANES)) * 2).astype(np.float32),
+                       0.0).astype(np.float32)
+    return {
+        "emb": jnp.asarray(rng.standard_normal((n, d)).astype(np.float32)),
+        "tenant": jnp.asarray(rng.integers(-1, n_tenants, n, dtype=np.int32)),
+        "updated_at": jnp.asarray(rng.integers(0, 1000, n, dtype=np.int32)),
+        "category": jnp.asarray(rng.integers(0, 8, n, dtype=np.int32)),
+        "acl": jnp.asarray(rng.integers(1, 16, n, dtype=np.int64)
+                           .astype(np.uint32)),
+        "terms": jnp.asarray(terms),
+        "lexnorm": jnp.asarray(lexnorm),
+        "idf": jnp.asarray((rng.random(V) * 5).astype(np.float32)),
+    }
+
+
+def _oracle_mask(store, pred: Predicate) -> np.ndarray:
+    """Independent numpy WHERE clause (no jax) for leakage assertions."""
+    tenant = np.asarray(store["tenant"])
+    ok = tenant >= 0
+    if pred.tenant != -2:
+        ok &= tenant == pred.tenant
+    ok &= np.asarray(store["updated_at"]) >= pred.min_ts
+    ok &= (np.uint32(pred.cat_mask)
+           >> np.asarray(store["category"]).astype(np.uint32)) & 1 != 0
+    ok &= (np.asarray(store["acl"]) & np.uint32(pred.acl_bits)) != 0
+    return ok
+
+
+def _assert_no_leak(store, preds, gids, slots):
+    """Every returned slot must satisfy ITS group's predicate."""
+    masks = [_oracle_mask(store, p) for p in preds]
+    slots = np.asarray(slots)
+    for b in range(slots.shape[0]):
+        real = slots[b][slots[b] >= 0]
+        assert masks[int(gids[b])][real].all(), (
+            f"row {b} (group {int(gids[b])}) leaked slots "
+            f"{real[~masks[int(gids[b])][real]]}")
+
+
+def _assert_all_equal(outs: dict):
+    """Bit-equality across every engine lane, named for the failure."""
+    names = list(outs)
+    s0, i0 = (np.asarray(a) for a in outs[names[0]])
+    for name in names[1:]:
+        s, i = (np.asarray(a) for a in outs[name])
+        assert (s == s0).all(), f"{name} scores != {names[0]}"
+        assert (i == i0).all(), f"{name} slots != {names[0]}"
+
+
+# ---------------------------------------------------------------------------
+# per-family engine lanes: oracle / scan / kernel x resident / paged
+# ---------------------------------------------------------------------------
+
+def _lanes_filtered(rng, store, B, N, D, k, G, qt, page):
+    """Single-predicate family. The bit oracle is the G=1 arena-scan dense
+    oracle; the core `unified_query_ref` is a DIFFERENT XLA program (its
+    own matmul + mask fusion) and is held to allclose + same winner set,
+    not bits — the framework's bit contract covers its own engines."""
+    pred = Predicate(tenant=1, min_ts=100)
+    q = rng.standard_normal((B, D)).astype(np.float32)
+    meta = _packed_meta(store["tenant"], store["updated_at"],
+                        store["category"], store["acl"])
+    outs = {
+        "oracle": grouped_topk_ref(jnp.asarray(q), store["emb"], meta,
+                                   jnp.zeros(B, jnp.int32),
+                                   pred.as_array()[None, :], k),
+        "scan": unified_query(store, jnp.asarray(q), pred, k, engine="ref",
+                              page_rows=N),   # one tile = classic scan
+        "kernel": unified_query(store, jnp.asarray(q), pred, k,
+                                engine="pallas"),
+    }
+    if page is not None:
+        outs["scan-paged"] = unified_query(store, jnp.asarray(q), pred, k,
+                                           engine="ref", page_rows=page)
+        outs["kernel-paged"] = unified_query(store, jnp.asarray(q), pred, k,
+                                             engine="pallas", page_rows=page)
+    s_core, i_core = unified_query_ref(store, jnp.asarray(q),
+                                       pred.as_array(), k)
+    s_o, i_o = outs["oracle"]
+    assert np.allclose(np.asarray(s_core), np.asarray(s_o), atol=1e-5)
+    assert (np.asarray(i_core) == np.asarray(i_o)).all()
+    return outs, [pred], np.zeros(B, np.int32)
+
+
+def _lanes_grouped(rng, store, B, N, D, k, G, qt, page):
+    q = rng.standard_normal((B, D)).astype(np.float32)
+    gids = rng.integers(0, G, B).astype(np.int32)
+    preds = [Predicate(tenant=i % 3, min_ts=100) for i in range(G)]
+    pa = stack_predicates(preds)
+    meta = _packed_meta(store["tenant"], store["updated_at"],
+                        store["category"], store["acl"])
+
+    def call(**kw):
+        return grouped_topk(q, store["emb"], store["tenant"],
+                            store["updated_at"], store["category"],
+                            store["acl"], gids, pa, k, **kw)
+
+    outs = {
+        "oracle": grouped_topk_ref(jnp.asarray(q), store["emb"], meta,
+                                   jnp.asarray(gids), pa, k),
+        "scan": call(use_kernel=False),
+        "kernel": call(use_kernel=True, interpret=True),
+    }
+    if page is not None:
+        outs["scan-paged"] = call(use_kernel=False, page_rows=page)
+        outs["kernel-paged"] = call(use_kernel=True, interpret=True,
+                                    page_rows=page)
+    return outs, preds, gids
+
+
+def _lanes_ivf(rng, store, B, N, D, k, G, qt, page):
+    """ivf probes a gathered candidate set with a slot lane; ~1/8 of the
+    candidates are dead member-table padding (slot -1), exercising the
+    dead-slot path in every regime. N here is the candidate count P."""
+    pred = Predicate(tenant=1, min_ts=100)
+    q = rng.standard_normal((B, D)).astype(np.float32)
+    slots = rng.permutation(4 * N)[:N].astype(np.int32)
+    dead = rng.random(N) < 0.125
+    slots[dead] = -1
+    meta = np.stack([np.asarray(store["tenant"]),
+                     np.asarray(store["updated_at"]),
+                     np.asarray(store["category"]),
+                     np.asarray(store["acl"]).view(np.int32),
+                     slots], axis=1).astype(np.int32)
+    meta[dead] = [-1, 0, 0, 0, -1]
+    cand_emb = np.asarray(store["emb"]).copy()
+    cand_emb[dead] = 0.0
+    cand_emb, meta = jnp.asarray(cand_emb), jnp.asarray(meta)
+    pa = pred.as_array()
+
+    qp, embp = pad_d128(jnp.asarray(q), cand_emb)
+    qp = _pad_axis0(qp, 8, 0)
+
+    def kernel(**kw):
+        s, i = ivf_probe_pallas(qp, embp, meta, pa, k, blk_b=8,
+                                interpret=True, **kw)
+        return s[:B], i[:B]
+
+    outs = {
+        "oracle": ivf_probe_ref(jnp.asarray(q), cand_emb, meta, pa, k),
+        "scan": ivf_probe_scan_ref(jnp.asarray(q), cand_emb, meta, pa, k,
+                                   blk_p=N),
+        "kernel": kernel(blk_p=256),
+    }
+    if page is not None:
+        outs["scan-paged"] = ivf_probe_scan_ref(jnp.asarray(q), cand_emb,
+                                                meta, pa, k, blk_p=page)
+        outs["kernel-paged"] = kernel(blk_p=256, page_rows=page)
+
+    # slot-lane leakage: returned ARENA slots must come from live candidates
+    # that pass the predicate
+    cand_ok = _oracle_mask(store, pred) & ~dead
+    legal = set(slots[cand_ok].tolist())
+    for name, (_, i) in outs.items():
+        for slot in np.asarray(i).ravel():
+            assert slot == -1 or int(slot) in legal, (
+                f"{name} returned slot {slot} outside the qualifying "
+                f"candidate set")
+    return outs, None, None
+
+
+def _lanes_hybrid(mode):
+    def lanes(rng, store, B, N, D, k, G, qt, page):
+        q = rng.standard_normal((B, D)).astype(np.float32)
+        qterms = rng.integers(-1, V, (B, qt)).astype(np.int32)
+        qterms[:, 0] = rng.integers(0, V, B)     # at least one real term
+        gids = rng.integers(0, G, B).astype(np.int32)
+        preds = [Predicate(tenant=i % 3, min_ts=100) for i in range(G)]
+        pa = stack_predicates(preds)
+        kw = dict(mode=mode, w_dense=W_DENSE, w_lex=W_LEX)
+
+        def call(**extra):
+            return hybrid_score(q, store["emb"], store["tenant"],
+                                store["updated_at"], store["category"],
+                                store["acl"], store["terms"],
+                                store["lexnorm"], store["idf"], gids, pa,
+                                qterms, k, **kw, **extra)
+
+        meta = _packed_meta(store["tenant"], store["updated_at"],
+                            store["category"], store["acl"])
+        qidf = np.where(qterms >= 0,
+                        np.asarray(store["idf"])[np.clip(qterms, 0, None)],
+                        0.0).astype(np.float32)
+        outs = {
+            "oracle": hybrid_score_ref(jnp.asarray(q), store["emb"], meta,
+                                       store["terms"], store["lexnorm"],
+                                       jnp.asarray(gids), pa,
+                                       jnp.asarray(qterms),
+                                       jnp.asarray(qidf), k, **kw),
+            "scan": call(use_kernel=False),
+            "kernel": call(use_kernel=True, interpret=True),
+        }
+        if page is not None:
+            outs["scan-paged"] = call(use_kernel=False, page_rows=page)
+            outs["kernel-paged"] = call(use_kernel=True, interpret=True,
+                                        page_rows=page)
+        return outs, preds, gids
+    return lanes
+
+
+FAMILIES = {
+    "filtered": _lanes_filtered,
+    "grouped": _lanes_grouped,
+    "ivf": _lanes_ivf,
+    "hybrid-wsum": _lanes_hybrid("wsum"),
+    "hybrid-rrf": _lanes_hybrid("rrf"),
+}
+
+# (family, B, N, D, k, G, qt, page_rows) — page_rows=None pins the resident
+# regime only; page_rows < N exercises a genuine multi-page DMA loop.
+CASES = [
+    # --- filtered (G=1 by construction) ---
+    ("filtered", 1, 64, 8, 4, 1, 0, None),
+    ("filtered", 5, 700, 48, 8, 1, 0, 256),     # 3 pages, N % page != 0
+    ("filtered", 8, 1024, 128, 10, 1, 0, 512),  # 2 pages, exact multiple
+    ("filtered", 3, 513, 64, 8, 1, 0, 128),     # 5 pages, odd N
+    # --- grouped (G spans the pow2 pad boundary) ---
+    ("grouped", 1, 64, 8, 4, 1, 0, None),
+    ("grouped", 8, 1000, 96, 10, 3, 0, 256),    # G=3 -> blocker-padded to 4
+    ("grouped", 3, 513, 64, 8, 4, 0, 128),      # G=4 -> exact pow2
+    ("grouped", 16, 2048, 128, 5, 7, 0, 512),
+    # --- ivf (slot-lane candidates incl. dead member padding) ---
+    ("ivf", 8, 512, 64, 8, 1, 0, None),
+    ("ivf", 5, 512, 48, 8, 1, 0, 128),          # 4 pages
+    ("ivf", 3, 768, 32, 6, 1, 0, 256),          # 3 pages
+    # --- hybrid wsum (incl. the historical FMA-divergence shapes) ---
+    ("hybrid-wsum", 1, 64, 8, 4, 1, 1, None),
+    ("hybrid-wsum", 5, 700, 48, 8, 3, 4, 256),
+    ("hybrid-wsum", 8, 1024, 128, 10, 3, 16, 512),
+    ("hybrid-wsum", 3, 513, 64, 8, 4, 4, 128),
+    # --- hybrid rrf ---
+    ("hybrid-rrf", 1, 64, 8, 4, 1, 1, None),
+    ("hybrid-rrf", 5, 700, 48, 8, 3, 4, 256),
+    ("hybrid-rrf", 8, 1024, 128, 10, 3, 16, 512),
+]
+
+IDS = [f"{f}-B{B}-N{N}-D{D}-k{k}-G{G}-qt{qt}-pg{pg}"
+       for f, B, N, D, k, G, qt, pg in CASES]
+
+
+@pytest.mark.parametrize("family,B,N,D,k,G,qt,page", CASES, ids=IDS)
+def test_conformance_matrix(family, B, N, D, k, G, qt, page, rng):
+    """Every engine lane of every family returns the same bits, and no lane
+    can leak a row its group's predicate rejects."""
+    store = _arena(rng, N, D)
+    outs, preds, gids = FAMILIES[family](rng, store, B, N, D, k, G, qt, page)
+    if page is not None:
+        assert N > page, "paged cells must cover arena > 1 page"
+        assert {"scan-paged", "kernel-paged"} <= outs.keys()
+    _assert_all_equal(outs)
+    if preds is not None:   # ivf asserts its slot-lane leakage inline
+        for name, (_, slots) in outs.items():
+            _assert_no_leak(store, preds, gids, slots)
+
+
+# ---------------------------------------------------------------------------
+# audit conformance: paging changes the DMA schedule, never the audit trail
+# ---------------------------------------------------------------------------
+
+def test_rows_scanned_audit_paged_equals_resident(rng):
+    """A paged fused grouped scan reports the same `rows_scanned` as its
+    resident twin (the arena N, ONCE — not per page, not per group), returns
+    the same bits, and occupies a DISTINCT compiled-shape slot."""
+    N, D, B, G, k = 1000, 32, 9, 3, 7
+    store = _arena(rng, N, D)
+    q = rng.standard_normal((B, D)).astype(np.float32)
+    uniq = [Predicate(tenant=i % 3, min_ts=100) for i in range(G)]
+    preds = [uniq[i % G] for i in range(B)]
+
+    shapes = CompiledShapes()
+    st_res, st_pg = ExecStats(), ExecStats()
+    s_r, i_r, _ = run_grouped_fused(dict(store), q, preds, k, stats=st_res,
+                                    shapes=shapes)
+    s_p, i_p, _ = run_grouped_fused(dict(store), q, preds, k, stats=st_pg,
+                                    shapes=shapes, page_rows=256)
+    assert (np.asarray(s_r) == np.asarray(s_p)).all()
+    assert (np.asarray(i_r) == np.asarray(i_p)).all()
+    assert st_res.rows_scanned == N
+    assert st_pg.rows_scanned == N, "paging must not inflate the row audit"
+    assert shapes.misses == 2, (
+        "paged and resident launches compile different programs and must "
+        "key separate compiled-shape slots")
+
+
+def test_terms_scanned_audit_paged_equals_resident(rng):
+    """The hybrid lexical-bandwidth audit (`terms_scanned` = N * doc term
+    lanes) is regime-independent, and the paged launch returns the same
+    bits through the executor's launch/finish path."""
+    N, D, B, G, k, qt = 768, 16, 6, 3, 5, 4
+    store = _arena(rng, N, D)
+    lex = {"terms": store["terms"], "lexnorm": store["lexnorm"],
+           "idf": store["idf"]}
+    q = rng.standard_normal((B, D)).astype(np.float32)
+    qterms = rng.integers(0, V, (B, qt)).astype(np.int32)
+    gids = np.asarray([i % G for i in range(B)], np.int32)
+    preds = [Predicate(tenant=i % 3, min_ts=100) for i in range(G)]
+    kw = dict(mode="wsum", w_dense=W_DENSE, w_lex=W_LEX, rrf_c=60.0)
+
+    st_res, st_pg = ExecStats(), ExecStats()
+    hot_r = _launch_hybrid(dict(store), lex, q, gids, preds, qterms, k,
+                           stats=st_res, shapes=CompiledShapes(), **kw)
+    hot_p = _launch_hybrid(dict(store), lex, q, gids, preds, qterms, k,
+                           stats=st_pg, shapes=CompiledShapes(),
+                           page_rows=256, **kw)
+    s_r, i_r = _finish_hot(hot_r)
+    s_p, i_p = _finish_hot(hot_p)
+    assert (s_r == s_p).all() and (i_r == i_p).all()
+    assert st_res.terms_scanned == N * T_LANES
+    assert st_pg.terms_scanned == N * T_LANES
+
+
+# ---------------------------------------------------------------------------
+# plan conformance: the planner's paged regime end to end
+# ---------------------------------------------------------------------------
+
+def test_paged_plan_execution_bit_identical(rng):
+    """compile_plan stamps page_rows past the threshold; execute_plans then
+    returns the same bits as the resident plans, counts the paged launches,
+    and the EXPLAIN output names the regime."""
+    N, D, K = 3000, 16, 8
+    store = _arena(rng, N, D)
+    q = rng.standard_normal((6, D)).astype(np.float32)
+    lps = [LogicalPlan(tenant=t % 3, k=K, q=q[2 * t:2 * t + 2])
+           for t in range(3)]
+    cfg_res = PlannerConfig()
+    cfg_pg = PlannerConfig(paged_min_rows=1, page_rows=512)
+
+    def compiled(cfg):
+        return [compile_plan(lp, n_rows=N, hot_window_s=100, now_ts=1000,
+                             warm_rows=0, cfg=cfg) for lp in lps]
+
+    plans_res, plans_pg = compiled(cfg_res), compiled(cfg_pg)
+    assert plans_res[0].page_rows is None
+    assert plans_pg[0].page_rows == 512
+    assert "paged arena scan" in plans_pg[0].explain()
+    assert "paged regime" in plans_pg[0].engine_reason
+    assert plans_res[0].group_key != plans_pg[0].group_key
+    assert plans_res[0].fuse_key != plans_pg[0].fuse_key
+
+    st_res, st_pg = ExecStats(), ExecStats()
+    s_r, i_r, _ = executor_mod.execute_plans(dict(store), None, plans_res,
+                                             stats=st_res)
+    s_p, i_p, _ = executor_mod.execute_plans(dict(store), None, plans_pg,
+                                             stats=st_pg, planner_cfg=cfg_pg)
+    assert (np.asarray(s_r) == np.asarray(s_p)).all()
+    assert (np.asarray(i_r) == np.asarray(i_p)).all()
+    assert st_res.paged_scans == 0
+    assert st_pg.paged_scans >= 1
+
+    # below the threshold the knob stays cold: identical plans, no stamping
+    cfg_cold = dataclasses.replace(cfg_pg, paged_min_rows=N + 1)
+    assert compiled(cfg_cold)[0].page_rows is None

@@ -12,6 +12,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+pytestmark = [pytest.mark.distributed, pytest.mark.slow]
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -58,11 +60,11 @@ def test_sharded_kernels_and_vp_loss_subprocess():
         from repro.kernels.filtered_topk.ref import filtered_topk_ref
         from repro.kernels.decode_attention.ops import decode_attention_sharded
         from repro.kernels.decode_attention.ref import decode_attention_ref
+        from repro.launch.mesh import make_mesh
         from repro.models.transformer import TransformerConfig, init, loss_fn, make_vp_loss_fn
 
         rng = np.random.default_rng(0)
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 2), ("data", "model"))
 
         # sharded filtered_topk == global oracle
         N, D, kk = 2048, 64, 7
@@ -134,7 +136,8 @@ def test_compression_psum_subprocess():
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import psum_bf16, psum_int8
-        mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("d",))
         x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 256), np.float32))
         want = np.asarray(x).sum(0)
         for fn, tol in [(psum_bf16, 2e-2), (psum_int8, 4e-2)]:

@@ -30,6 +30,8 @@ from repro.core.query import BLOCK_ALL, stack_predicates
 from repro.data.corpus import DAY_S, CorpusConfig, make_corpus
 from repro.kernels.grouped_topk.ops import grouped_topk
 
+pytestmark = [pytest.mark.kernels]
+
 GROUP_COUNTS = (1, 2, 7, 16)
 
 

@@ -36,6 +36,8 @@ from repro.kernels.hybrid_score.ops import hybrid_score
 from repro.kernels.hybrid_score.ref import hybrid_score_ref
 from repro.kernels.grouped_topk.ops import _packed_meta
 
+pytestmark = [pytest.mark.kernels, pytest.mark.slow]
+
 T_MAX = 16   # LexicalConfig.max_query_terms default
 
 

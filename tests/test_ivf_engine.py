@@ -26,6 +26,8 @@ from repro.core.ivf import IVFConfig, build_ivf
 from repro.data.corpus import CorpusConfig, make_corpus, make_queries
 from repro.kernels.ivf_probe.ops import ivf_probe
 
+pytestmark = [pytest.mark.kernels, pytest.mark.slow]
+
 
 def _db(n_docs=4000, dim=32, n_tenants=4, seed=0, index_cfg=None, **kwargs):
     ccfg = CorpusConfig(n_docs=n_docs, dim=dim, n_tenants=n_tenants,

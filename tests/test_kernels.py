@@ -10,6 +10,8 @@ from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.filtered_topk.ops import filtered_topk
 from repro.kernels.filtered_topk.ref import filtered_topk_ref
 
+pytestmark = [pytest.mark.kernels]
+
 
 @pytest.mark.parametrize("B,N,D,k,blk_n", [
     (1, 512, 128, 4, 128),

@@ -11,6 +11,8 @@ from repro.models.layers import gqa_chunked, gqa_scores_softmax_out
 from repro.models.transformer import (TransformerConfig, decode_step, forward,
                                       init, loss_fn, make_cache, prefill)
 
+pytestmark = [pytest.mark.slow]
+
 
 def test_decode_matches_forward(rng):
     cfg = TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=4,

@@ -15,6 +15,8 @@ from repro.models import transformer as tfm
 from repro.training.optimizer import adamw
 from repro.training.train_loop import init_state, make_train_step
 
+pytestmark = [pytest.mark.slow]
+
 LM_ARCHS = [a for a, v in ARCHS.items() if v.family == "lm"]
 RECSYS_ARCHS = [a for a, v in ARCHS.items() if v.family == "recsys"]
 

@@ -10,6 +10,8 @@ Usage:
         [--min-speedup 1.5]
     python tools/check_bench_regression.py --serving-only FRESH.json
         [COMMITTED.json] [--threshold 0.5] [--max-shed 0.3]
+    python tools/check_bench_regression.py --paged-only FRESH.json
+        [--paged-threshold 0.15]
 
 The ``--serving-only`` lane gates the serving subsystem instead (fresh
 file from ``bench_serving --smoke --out PATH``; committed references are
@@ -44,6 +46,18 @@ corpus size (default N=50000, the PR's acceptance point):
   3. recall ordering: keyword-anchored hybrid recall@10 strictly above
      dense-only recall@10, and the planner chose the 'hybrid' engine —
      a broken lexical signal fails CI regardless of timing.
+
+The ``--paged-only`` lane gates the paged arena-scan regime (ISSUE 7;
+fresh file from ``bench_latency --paged-only --out PATH``). It is SELF-
+CONTAINED: the fresh file carries its own baseline (the resident p50 of
+the same fused scan on the same machine in the same process), so no
+committed reference and no machine normalization are needed:
+  1. paged p50 within --paged-threshold (default 15%) of resident p50 at
+     the 50k point — the DMA pipeline must hide the paging, not add a
+     second latency tier;
+  2. the measured configuration really paged: n_pages >= 2 (arena larger
+     than one page) and the bench's pre-timing bit-identity assertion ran
+     (`bit_identical` recorded true).
 
 Grouped-lane checks, at the gated group count (default G=8, the PR's
 acceptance point):
@@ -269,6 +283,37 @@ def check_hybrid(args) -> int:
     return 0 if ok else 1
 
 
+def check_paged(args) -> int:
+    sec = _load(args.fresh, "paged_scan", "paged_ms")
+    f_res = sec["resident_ms"]["p50"]
+    f_pg = sec["paged_ms"]["p50"]
+    ratio = f_pg / max(f_res, 1e-9)
+    ok = True
+
+    print(f"paged-scan gate (N={sec['arena_rows']} rows, "
+          f"{sec['page_rows']} rows/page -> {sec['n_pages']} pages):")
+    print(f"  p50: paged {f_pg:.2f}ms vs resident {f_res:.2f}ms "
+          f"({(ratio - 1) * 100:+.1f}%, threshold "
+          f"+{args.paged_threshold * 100:.0f}%)")
+    if ratio > 1 + args.paged_threshold:
+        print("  FAIL: paging overhead exceeds the threshold — the DMA "
+              "pipeline is no longer hiding the page traffic")
+        ok = False
+
+    print(f"  paging: n_pages={sec['n_pages']} (need >= 2), "
+          f"bit_identical={sec.get('bit_identical')}")
+    if sec["n_pages"] < 2:
+        print("  FAIL: arena fits one page — the gate measured nothing")
+        ok = False
+    if sec.get("bit_identical") is not True:
+        print("  FAIL: bench did not record the paged/resident bit-identity "
+              "assertion")
+        ok = False
+
+    print("PASS" if ok else "REGRESSION")
+    return 0 if ok else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("fresh", help="freshly measured JSON "
@@ -282,6 +327,13 @@ def main(argv=None) -> int:
                     help="gate the serving subsystem instead (fresh file "
                          "from bench_serving --smoke --out PATH; committed "
                          "default results/bench_serving.json)")
+    ap.add_argument("--paged-only", action="store_true",
+                    help="gate the paged arena-scan regime instead (fresh "
+                         "file from bench_latency --paged-only; self-"
+                         "contained — no committed reference used)")
+    ap.add_argument("--paged-threshold", type=float, default=0.15,
+                    help="with --paged-only: max paged-over-resident p50 "
+                         "overhead (default 0.15 = 15%%)")
     ap.add_argument("--max-shed", type=float, default=0.3,
                     help="with --serving-only: ceiling on the fresh "
                          "overload shed rate (default 0.3)")
@@ -315,6 +367,8 @@ def main(argv=None) -> int:
         return check_serving(args)
     if args.hybrid_only:
         return check_hybrid(args)
+    if args.paged_only:
+        return check_paged(args)
 
     fresh = load_sweep(args.fresh)
     committed = load_sweep(args.committed)

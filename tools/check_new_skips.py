@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""CI guard: fail when the test suite grows a NEW skip (ISSUE 7).
+
+A skipped test is a hole in the conformance surface: a `skipif` on a
+missing backend, a forgotten `pytest.skip` in a slow path, or an xfail
+that quietly outlives its bug all read as "passed" in the green summary.
+The tier-1 suite currently runs with ZERO skips, and this guard keeps it
+that way: any skip not named in the allowlist fails CI.
+
+Usage:
+    PYTHONPATH=src python -m pytest -q -rs | tee /tmp/pytest.out
+    python tools/check_new_skips.py /tmp/pytest.out
+        [--allowlist tools/skip_allowlist.txt]
+
+The input must be pytest output produced WITH ``-rs`` (the skip-reason
+short summary): if the tail summary counts skips but no ``SKIPPED`` detail
+lines are present, the guard exits 2 rather than passing blind.
+
+Allowlist format (tools/skip_allowlist.txt): one entry per line,
+``<path-substring>: <reason-substring>`` (both matched as substrings so
+line numbers and parametrization ids never churn the list); ``#`` starts
+a comment. An empty/missing allowlist means no skip is tolerated.
+
+Exit code 0 = no new skips, 1 = unallowed skip found, 2 = malformed input.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+DEFAULT_ALLOWLIST = os.path.join(os.path.dirname(__file__),
+                                 "skip_allowlist.txt")
+
+# -rs detail lines:  "SKIPPED [2] tests/test_x.py:41: needs TPU backend"
+# xfail detail (-rx) rides the same format with XFAIL.
+_DETAIL = re.compile(r"^(SKIPPED|XFAIL)\s+(?:\[\d+\]\s+)?([^\s:]+[^:]*):\s*(.*)$")
+# tail summary:      "428 passed, 3 skipped, 1 xfailed in 377.02s"
+_SUMMARY = re.compile(r"(\d+)\s+(skipped|xfailed)\b")
+
+
+def load_allowlist(path: str) -> list[tuple[str, str]]:
+    entries = []
+    if not os.path.exists(path):
+        return entries
+    with open(path) as f:
+        for line in f:
+            line = line.split("#", 1)[0].strip()
+            if not line:
+                continue
+            where, _, why = line.partition(":")
+            entries.append((where.strip(), why.strip()))
+    return entries
+
+
+def allowed(where: str, why: str, allowlist) -> bool:
+    return any(w in where and r in why for w, r in allowlist)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("pytest_output",
+                    help="file holding `pytest -rs` output ('-' for stdin)")
+    ap.add_argument("--allowlist", default=DEFAULT_ALLOWLIST,
+                    help="allowlist file (default tools/skip_allowlist.txt)")
+    args = ap.parse_args(argv)
+
+    try:
+        if args.pytest_output == "-":
+            text = sys.stdin.read()
+        else:
+            with open(args.pytest_output) as f:
+                text = f.read()
+    except OSError as e:
+        print(f"error: cannot read {args.pytest_output}: {e}",
+              file=sys.stderr)
+        return 2
+
+    allowlist = load_allowlist(args.allowlist)
+    details = []
+    summary_counts = {}
+    for line in text.splitlines():
+        m = _DETAIL.match(line.strip())
+        if m:
+            details.append((m.group(1), m.group(2).strip(),
+                            m.group(3).strip()))
+        for n, kind in _SUMMARY.findall(line):
+            summary_counts[kind] = max(summary_counts.get(kind, 0), int(n))
+
+    total_summary = sum(summary_counts.values())
+    if total_summary > 0 and not details:
+        print(f"error: summary reports {summary_counts} but no "
+              f"SKIPPED/XFAIL detail lines found — was pytest run "
+              f"with -rs?", file=sys.stderr)
+        return 2
+
+    new = [(kind, where, why) for kind, where, why in details
+           if not allowed(where, why, allowlist)]
+    for kind, where, why in details:
+        tag = "allowed" if (kind, where, why) not in new else "NEW"
+        print(f"  {tag:7s} {kind} {where}: {why}")
+    if new:
+        print(f"FAIL: {len(new)} skip(s) not in {args.allowlist} — either "
+              f"fix the test or add an explicit allowlist entry with a "
+              f"reason")
+        return 1
+    print(f"PASS: {len(details)} skip(s), all allowlisted "
+          f"(suite target: zero)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
