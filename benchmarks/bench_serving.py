@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import time
 
 import numpy as np
 
@@ -36,10 +37,11 @@ from benchmarks.common import save_result
 from repro.api.planner import PlannerConfig
 from repro.api.ragdb import RagDB, ResultCache
 from repro.core.store import StoreConfig
-from repro.data.corpus import CorpusConfig, make_corpus
+from repro.data.corpus import DAY_S, CorpusConfig, make_corpus
+from repro.serving.faults import FaultPlan, FaultRule
 from repro.serving.load import (WorkloadConfig, lower_query, make_trace,
                                 run_scenario)
-from repro.serving.scheduler import SchedulerConfig
+from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
 
 #: staleness bounds (seconds) swept for the frontier
 FRONTIER_BOUNDS = (0.0, 0.05, 0.2, 1.0)
@@ -328,6 +330,195 @@ def run(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
     return out
 
 
+def _build_tiered_db(n_docs: int, dim: int, n_tenants: int):
+    """Two-tier db for the chaos lane: old docs land warm, so the storm's
+    warm-tier faults (errors, stalls, breaker trips) are actually on the
+    serving path — a hot-only db would make them unreachable."""
+    ccfg = CorpusConfig(n_docs=n_docs, dim=dim, n_tenants=n_tenants)
+    corpus = make_corpus(ccfg)
+    scfg = StoreConfig(capacity=1 << (n_docs - 1).bit_length(), dim=dim)
+    db = RagDB(scfg, warm_cfg=scfg, hot_window_s=90 * DAY_S,
+               now_ts=ccfg.now_ts,
+               planner_cfg=PlannerConfig.with_measured_costs())
+    db.ingest(corpus)
+    db.build_index()
+    assert db.router.warm.n_docs > 0
+    return db, ccfg
+
+
+def _audit_silent_wrong(db: RagDB, results, *, limit: int = 200) -> dict:
+    """THE zero-silent-wrong bar: every response the storm run served
+    undegraded must be bit-identical to the fault-free execution of its
+    plan (read-only trace, so the snapshot is fixed). Degraded/failed
+    responses are exempt — they declared themselves."""
+    import numpy as np
+    cand = [r for r in results
+            if r.served in ("fresh", "cache") and not r.degraded]
+    sample = cand[:limit]
+    wrong = 0
+    saved, guard = db.faults, db.warm_guard
+    db.attach_faults(None)
+    db.warm_guard = None
+    try:
+        for r in sample:
+            s, sl, tr = db.execute([r.request.plan], use_cache=False)
+            if not (np.array_equal(r.scores, s)
+                    and np.array_equal(r.slots, sl)
+                    and np.array_equal(r.tiers, tr)):
+                wrong += 1
+    finally:
+        db.attach_faults(saved)
+        db.warm_guard = guard
+    return {"checked": len(sample), "undegraded_total": len(cand),
+            "silent_wrong": wrong}
+
+
+def _breaker_recovery(db: RagDB, ccfg, seed: int) -> dict:
+    """Trip the breaker under a total warm outage, lift the outage, and
+    count serving steps until the first clean response — the 'breaker
+    recovers within N steps' bar."""
+    import numpy as np
+    storm = FaultPlan(seed, {"warm.error": FaultRule(rate=1.0)})
+    db.attach_faults(storm)
+    sched = Scheduler(db, SchedulerConfig(
+        slo_ms=1e9, max_queue=32, max_batch=1, degrade_pressure=2.0,
+        stale_pressure=2.0, use_cache=False, warm_retries=0,
+        breaker_failures=3, breaker_reset_s=0.01, seed=seed))
+    rng = np.random.default_rng(seed)
+    sess = db.admin_session()
+
+    def serve_one(i):
+        q = rng.standard_normal(ccfg.dim).astype(np.float32)
+        sched.offer(ServeRequest(plan=sess.search(q, normalize=False)
+                                 .limit(8).plan(),
+                                 arrival_t=sched.clock(), req_id=i))
+        (res,) = sched.run_until_idle()
+        return res
+
+    opened_after = 0
+    for i in range(16):
+        serve_one(i)
+        opened_after += 1
+        if sched.guard.state == "open":
+            break
+    opened = sched.guard.state == "open"
+    storm.clear()
+    time.sleep(0.05)                       # past breaker_reset_s
+    recovery_steps, recovered = 0, False
+    for i in range(16):
+        res = serve_one(100 + i)
+        recovery_steps += 1
+        if not res.degraded and res.served != "failed":
+            recovered = True
+            break
+    db.attach_faults(None)
+    db.warm_guard = None
+    return {"opened": opened, "opened_after_failures": opened_after,
+            "recovery_steps": recovery_steps, "recovered": recovered,
+            "breaker_reset_s": 0.01}
+
+
+def run_chaos(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
+              duration_s: float = 3.0, seed: int = 0, smoke: bool = False,
+              out_path: str | None = None) -> dict:
+    """The chaos lane (ISSUE 8): the SAME read-only trace served twice —
+    fault-free, then under `FaultPlan.storm` — with the hardened scheduler.
+    Reports p99/goodput/shed/retry both ways, audits sampled undegraded
+    storm responses for bit-identity (zero silent wrong), and measures
+    breaker trip/recovery. Merged as the "chaos" section of the
+    bench_serving artifact; gated by check_bench_regression --chaos-only."""
+    if smoke:
+        n_docs, dim, n_tenants, duration_s = 3_000, 32, 4, 0.8
+    db, ccfg = _build_tiered_db(n_docs, dim, n_tenants)
+    # read-only trace (no writes): the snapshot is fixed for the whole run,
+    # so the silent-wrong audit can re-execute any plan fault-free and
+    # demand bit-identity. engine=None: the planner routes hot+warm.
+    wl = WorkloadConfig(duration_s=duration_s, n_tenants=n_tenants, dim=dim,
+                        k=8, engine=None, seed=seed, rate_rps=100.0,
+                        write_rate_rps=0.0)
+    cap = measure_capacity(db, wl)
+    rate = 0.4 * cap["capacity_rps"]
+    slo_ms = float(np.clip(50.0 * cap["service_ms_per_req"], 25.0, 500.0))
+    wl = dataclasses.replace(wl, rate_rps=rate)
+    trace = [e for e in make_trace(wl) if e.kind == "query"]
+    sched_cfg = SchedulerConfig(
+        slo_ms=slo_ms, max_queue=max(8, int(rate * slo_ms / 1e3 * 0.5)),
+        max_batch=8, degrade_pressure=0.3,
+        # the resilience surface under test
+        warm_timeout_ms=20.0 * cap["service_ms_per_req"] + 5.0,
+        warm_retries=1, retry_base_ms=0.2, breaker_failures=5,
+        breaker_reset_s=0.05, launch_retries=2, requeue_limit=1, seed=seed)
+    print(f"chaos lane: {len(trace)} queries at {rate:.0f} rps "
+          f"(0.4x capacity), SLO {slo_ms:.0f} ms")
+
+    # warmup pass (compiles every shape on this mix), then the clean run
+    run_scenario(db, wl, sched_cfg, events=list(trace))
+    reset_serving_state(db)
+    clean = run_scenario(db, wl, sched_cfg, events=list(trace))
+    cr = clean.report()
+    _print_row("chaos/clean", cr, slo_ms)
+
+    # the storm: same trace, every query-path fault site firing
+    storm = FaultPlan.storm(seed)
+    reset_serving_state(db)
+    db.attach_faults(storm)
+    stormed = run_scenario(db, wl, sched_cfg, events=list(trace))
+    db.attach_faults(None)
+    sr = stormed.report()
+    _print_row("chaos/storm", sr, slo_ms)
+    fired = storm.counters()
+
+    audit = _audit_silent_wrong(db, stormed.results)
+    breaker = _breaker_recovery(db, ccfg, seed)
+    c_p99 = cr["histograms"]["e2e_ms"].get("p99", 0.0)
+    s_p99 = sr["histograms"]["e2e_ms"].get("p99", 0.0)
+    section = {
+        "config": {"n_docs": n_docs, "dim": dim, "n_tenants": n_tenants,
+                   "duration_s": duration_s, "seed": seed, "smoke": smoke,
+                   "rate_rps": rate, "slo_ms": slo_ms},
+        "storm_rates": {site: storm.rules[site].rate for site in storm.rules},
+        "clean": cr,
+        "storm": sr,
+        "faults_injected": sum(n for _, n in fired.values()),
+        "faults_by_site": {site: n for site, (_, n) in fired.items()},
+        "p99_ratio": s_p99 / max(c_p99, 1e-9),
+        "audit": audit,
+        "breaker": breaker,
+        "classified": {
+            "correct": audit["undegraded_total"],
+            "degraded": sr["degraded"],
+            "failed": sr["failed"],
+            "shed": sr["shed"],
+        },
+    }
+    print(f"  storm: {section['faults_injected']} faults injected, "
+          f"p99 {s_p99:.1f}ms vs clean {c_p99:.1f}ms "
+          f"(x{section['p99_ratio']:.2f}); audit "
+          f"{audit['silent_wrong']}/{audit['checked']} silent-wrong; "
+          f"breaker opened={breaker['opened']} recovered in "
+          f"{breaker['recovery_steps']} step(s)")
+
+    if out_path:
+        import json
+        with open(out_path, "w") as f:
+            json.dump({"chaos": section}, f, indent=1)
+        print(f"wrote {out_path}")
+    else:
+        # merge into the committed artifact next to the scenario sections
+        import json
+        import os
+        from benchmarks.common import RESULTS_DIR
+        name = "bench_serving_smoke" if smoke else "bench_serving"
+        path = os.path.join(RESULTS_DIR, f"{name}.json")
+        payload = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                payload = json.load(f)
+        payload["chaos"] = section
+        save_result(name, payload)
+    return section
+
+
 def _print_row(name: str, r: dict, slo_ms: float) -> None:
     e = r["histograms"].get("e2e_ms", {})
     q = r["histograms"].get("queue_wait_ms", {})
@@ -342,6 +533,11 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (tiny corpus, sub-second scenarios)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-storm lane instead (clean vs storm "
+                         "on the same trace, silent-wrong audit, breaker "
+                         "recovery); gated by check_bench_regression "
+                         "--chaos-only")
     ap.add_argument("--duration", type=float, default=3.0)
     ap.add_argument("--n-docs", type=int, default=20_000)
     ap.add_argument("--seed", type=int, default=0)
@@ -350,6 +546,10 @@ def main(argv=None) -> int:
                          "bench_serving.json; CI passes a temp path so the "
                          "committed baseline is not touched)")
     args = ap.parse_args(argv)
+    if args.chaos:
+        run_chaos(n_docs=args.n_docs, duration_s=args.duration,
+                  seed=args.seed, smoke=args.smoke, out_path=args.out)
+        return 0
     run(n_docs=args.n_docs, duration_s=args.duration, seed=args.seed,
         smoke=args.smoke, out_path=args.out)
     return 0

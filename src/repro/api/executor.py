@@ -80,6 +80,13 @@ class ExecStats:
                                   # under a declared staleness bound
                                   # (RagDB.execute stale_within_s); never
                                   # incremented by exact-key hits
+    warm_failovers: int = 0       # hot+warm plans served hot-only because the
+                                  # guarded warm probe gave up (retries
+                                  # exhausted or breaker open) — every one
+                                  # carries an explicit degraded annotation
+    stale_epoch_rejected: int = 0 # poisoned cache reads refused because the
+                                  # entry's commit-epoch key no longer matches
+                                  # the live snapshot (chaos site cache.stale)
 
 
 class CompiledShapes:
@@ -569,11 +576,17 @@ class InFlightPlans:
     scheduler pipelines by holding several of these at once — batch N+1's
     hot scans launch while batch N's results are still on the device."""
     inflight: list               # (FusedGroup, member row-index lists, _Hot)
-    warm_results: list           # per unit: list of probe tuples, or None
+    warm_results: list           # per unit: list of probe tuples (an entry is
+                                 # None when the guarded probe gave up), or
+                                 # None for hot-route units
     B: int                       # total query rows across plans
     k: int
     stats: "ExecStats | None"
     lex: object                  # hot-tier LexicalArena (rrf merge needs it)
+    warm_failed: set = dataclasses.field(default_factory=set)
+                                 # group_keys whose warm probe failed over to
+                                 # hot-only (RagDB.finish stamps the explicit
+                                 # degraded annotation and skips the cache)
 
 
 def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
@@ -616,10 +629,16 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
 def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                  sharded_fn=None, stats: ExecStats | None = None,
                  shapes: CompiledShapes | None = None, index=None,
-                 planner_cfg=None, lex=None) -> InFlightPlans:
+                 planner_cfg=None, lex=None, warm_guard=None) -> InFlightPlans:
     """Phases 1+2 of `execute_plans` (see there): launch every hot device
     program and issue every warm probe WITHOUT a single device_get, and
-    return the in-flight handle `finish_plans` syncs."""
+    return the in-flight handle `finish_plans` syncs.
+
+    ``warm_guard`` (serving.faults.WarmGuard, optional) wraps each warm
+    probe with timeout / bounded retry / hedge / circuit breaker; when the
+    guard gives up, that group fails over to hot-only serving (its probe
+    entry is None and its group_key lands in `InFlightPlans.warm_failed`)
+    instead of propagating the warm tier's failure."""
     from repro.api.planner import PlannerConfig, fuse_batch
 
     ks = {p.logical.k for p in plans}
@@ -716,6 +735,7 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
 
     # -- phase 2: warm probes while the hot scans are in flight ----------
     warm_results: list[list[tuple] | None] = []
+    warm_failed: set = set()
     for unit, member_idxs, _ in inflight:
         if unit.plans[0].route != "hot+warm":
             warm_results.append(None)
@@ -729,24 +749,39 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                 # warm rows are scored by the same fused formula (global
                 # idf/avgdl), so the tier merge compares like with like
                 mode, qt_bucket, w_d, w_l = plan.lex
-                res = warm.query_hybrid(
-                    q_all[np.asarray(m)],
-                    _qterms_rows(row_plans, m, qt_bucket), plan.pred, k,
-                    mode=mode, w_dense=w_d, w_lex=w_l,
-                    rrf_c=lex.cfg.rrf_c, lists=(mode == "rrf"))
-                if stats is not None and warm.lex is not None:
+
+                def probe(plan=plan, m=m, mode=mode, qt_bucket=qt_bucket,
+                          w_d=w_d, w_l=w_l):
+                    return warm.query_hybrid(
+                        q_all[np.asarray(m)],
+                        _qterms_rows(row_plans, m, qt_bucket), plan.pred, k,
+                        mode=mode, w_dense=w_d, w_lex=w_l,
+                        rrf_c=lex.cfg.rrf_c, lists=(mode == "rrf"))
+            else:
+                def probe(plan=plan, m=m):
+                    return warm.query(q_all[np.asarray(m)], plan.pred, k,
+                                      pushdown=True)
+            res = warm_guard.call(probe) if warm_guard is not None else probe()
+            if stats is not None:
+                # real round trips issued, successful or not (retries count)
+                stats.device_calls += warm.stats.round_trips - rt0
+            if res is None:
+                # guard gave up: this group serves hot-only, explicitly
+                warm_failed.add(plan.group_key)
+                probes.append(None)
+                if stats is not None:
+                    stats.warm_failovers += 1
+                continue
+            probes.append(res)
+            if stats is not None:
+                stats.warm_queries += len(m)
+                if plan.engine == "hybrid" and warm.lex is not None:
                     stats.terms_scanned += (warm.cfg.capacity
                                             * warm.lex.cfg.doc_terms)
-                probes.append(res)
-            else:
-                probes.append(warm.query(q_all[np.asarray(m)], plan.pred, k,
-                                         pushdown=True))
-            if stats is not None:
-                stats.device_calls += warm.stats.round_trips - rt0
-                stats.warm_queries += len(m)
         warm_results.append(probes)
     return InFlightPlans(inflight=inflight, warm_results=warm_results,
-                         B=B, k=k, stats=stats, lex=lex)
+                         B=B, k=k, stats=stats, lex=lex,
+                         warm_failed=warm_failed)
 
 
 def finish_plans(pending: InFlightPlans):
@@ -766,6 +801,19 @@ def finish_plans(pending: InFlightPlans):
         for gi, m in enumerate(member_idxs):
             span = slice(off, off + len(m))
             if probes is None:
+                s_m, sl_m = hs[span], hi[span]
+                t_m = np.full_like(sl_m, TIER_HOT)
+            elif probes[gi] is None and hot.extra_np is not None:
+                # guarded warm probe failed for an rrf hybrid group: the hot
+                # program ran in lists mode, so rank-fuse the two HOT
+                # per-signal lists — hot-only, explicitly degraded upstream
+                h_ls, h_li = hot.extra_np
+                s_m, sl_m, t_m = _rrf_merge_np(
+                    hs[span], hi[span], np.full_like(hi[span], TIER_HOT),
+                    h_ls[span], h_li[span],
+                    np.full_like(h_li[span], TIER_HOT), k, lex.cfg.rrf_c)
+            elif probes[gi] is None:
+                # guarded warm probe failed: serve this group hot-only
                 s_m, sl_m = hs[span], hi[span]
                 t_m = np.full_like(sl_m, TIER_HOT)
             elif hot.extra_np is not None:

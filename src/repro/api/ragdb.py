@@ -47,6 +47,7 @@ from repro.core.store import DocBatch, StoreConfig
 from repro.core.tenancy import Principal, TenantRegistry, category_mask
 from repro.core.transactions import TransactionLog
 from repro.index.lexical import LexicalArena, LexicalConfig
+from repro.serving.faults import FaultPlan, HotLaunchError, WedgedBatchError
 
 _FOREVER = (1 << 31) - 1     # hot window that never expires (single-tier mode)
 
@@ -142,6 +143,19 @@ class ResultCache:
         self.stale_hits += 1
         self._lru.move_to_end(full)
         return value, age
+
+    def newest(self, stale_key: tuple):
+        """The newest full-key entry for this plan+query identity IGNORING
+        the commit-epoch key components — the raw read a buggy (or
+        chaos-injected, site ``cache.stale``) cache layer would serve.
+        RagDB.launch's epoch guard compares the returned full key against
+        the live one and refuses on mismatch. Returns (full_key, value) or
+        None; counts nothing and does not touch LRU order."""
+        full = self._latest.get(stale_key)
+        ent = self._lru.get(full) if full is not None else None
+        if ent is None:
+            return None
+        return full, ent[0]
 
     def put(self, key: tuple, value, *, now: float = 0.0,
             stale_key: tuple | None = None) -> None:
@@ -252,6 +266,23 @@ class RagDB:
             self.log.lex = self.lex
             if tiered:
                 self.router.warm.attach_lexical(lexical_cfg, self.lex.stats)
+        # chaos wiring (serving.faults): attach_faults threads one FaultPlan
+        # through the commit log, the warm client, and the launch/finish
+        # path; the serving Scheduler installs its WarmGuard here so warm
+        # probes get retry/hedge/breaker protection.
+        self.faults = None
+        self.warm_guard = None
+
+    def attach_faults(self, plan) -> None:
+        """Thread one `serving.faults.FaultPlan` through every injection
+        site: hot.launch / hot.wedge / hot.finish_error / cache.stale here,
+        warm.error / warm.stall in the warm SplitStackClient, and the
+        txn.<op>.<point> crash points in the TransactionLog."""
+        self.faults = plan
+        self.log.faults = plan
+        # the warm client always holds a plan (the filter_bug shim needs
+        # one) — detaching restores a fresh no-rule plan there
+        self.router.warm.faults = plan if plan is not None else FaultPlan()
 
     # -- storage facade --------------------------------------------------
     @property
@@ -515,6 +546,17 @@ class RagDB:
                 per_plan[i] = hit
                 served[i] = "cache"
                 continue
+            if (self.faults is not None and key is not None
+                    and self.faults.fires("cache.stale")):
+                # chaos site cache.stale: a buggy cache layer serves the
+                # newest entry for this plan+query IGNORING commit epochs.
+                # The epoch guard compares the entry's full key (which
+                # encodes hot/warm commit counts + index epoch + lex
+                # version) against the live one and refuses on mismatch —
+                # the query falls through to a fresh, correct execution.
+                poisoned = cache.newest(key[:3])
+                if poisoned is not None and poisoned[0] != key:
+                    self.stats.stale_epoch_rejected += 1
             if key is not None and stale_within_s is not None:
                 stale = cache.get_stale(key[:3], now=now,
                                         max_age_s=stale_within_s)
@@ -535,11 +577,17 @@ class RagDB:
             k = run_plans[0].logical.k
             before_hot = self.stats.hot_queries
             before_warm = self.stats.warm_queries
+            if self.faults is not None:
+                # chaos site hot.launch: the device dispatch fails before
+                # anything is issued — drawn ONCE per launch so a retrying
+                # caller (Scheduler) re-enters cleanly with no side effects
+                self.faults.raise_if("hot.launch", HotLaunchError)
             inflight = launch_plans(
                 self.log.snapshot(), self.router.warm, run_plans,
                 sharded_fn=self._sharded_fn(k) if needs_shard else None,
                 stats=self.stats, shapes=self.shapes, index=self.index,
-                planner_cfg=self.planner_cfg, lex=self.lex)
+                planner_cfg=self.planner_cfg, lex=self.lex,
+                warm_guard=self.warm_guard)
         return PendingExecution(plans=list(plans), per_plan=per_plan,
                                 rows=rows, misses=misses, inflight=inflight,
                                 served=served, stale_age_s=stale_age_s,
@@ -553,18 +601,35 @@ class RagDB:
         in plan order."""
         cache = self.result_cache if pending.use_cache else None
         if pending.inflight is not None:
+            if self.faults is not None:
+                # chaos sites on the sync path: a wedged batch (stall) and a
+                # hard finish failure — the Scheduler's watchdog/requeue
+                # logic is what keeps the serving loop alive through these
+                self.faults.stall("hot.wedge")
+                self.faults.raise_if("hot.finish_error", WedgedBatchError)
             s, sl, tr = finish_plans(pending.inflight)
             self.router.stats.hot_queries += (self.stats.hot_queries
                                               - pending.before_hot)
             self.router.stats.warm_queries += (self.stats.warm_queries
                                                - pending.before_warm)
+            warm_failed = pending.inflight.warm_failed
             now = self.clock()
             off = 0
             for i, key in pending.misses:
                 n = pending.rows[i]
                 chunk = (s[off:off + n], sl[off:off + n], tr[off:off + n])
                 pending.per_plan[i] = chunk
-                if cache is not None and key is not None:
+                p = pending.plans[i]
+                if warm_failed and p.group_key in warm_failed:
+                    # guarded warm probe gave up: stamp the EXPLICIT
+                    # degradation (the chaos contract's "never silently
+                    # wrong") and keep the chunk OUT of the result cache —
+                    # the key doesn't encode degradation, so caching would
+                    # later serve this hot-only answer as complete
+                    pending.plans[i] = dataclasses.replace(
+                        p, degraded=p.degraded
+                        + ("warm-unavailable: served hot-only",))
+                elif cache is not None and key is not None:
                     cache.put(key, chunk, now=now, stale_key=key[:3])
                 off += n
         # concatenation copies, so cached arrays are never aliased to callers
@@ -612,7 +677,7 @@ class RagDB:
         else:
             lexical = "none (match() unavailable)"
         st = self.stats
-        return "\n".join([
+        lines = [
             f"RagDB  {snap['emb'].shape[0]} hot-tier rows "
             f"({int(snap['n_live'])} live), {self.router.warm.n_docs} warm docs, "
             f"commit_count={self.log.commit_count}",
@@ -628,10 +693,18 @@ class RagDB:
             f"{st.fused_scans} scans "
             f"({max(st.fused_groups - st.fused_scans, 0)} arena scans saved)",
             f"  serving:      {st.degraded_plans} degraded plans, "
-            f"{st.stale_serves} stale serves (within declared bound)",
+            f"{st.stale_serves} stale serves (within declared bound), "
+            f"{st.warm_failovers} warm failovers (hot-only), "
+            f"{st.stale_epoch_rejected} stale-epoch cache reads rejected",
             f"  ivf index:    {index}",
             f"  lexical:      {lexical}",
-        ])
+        ]
+        if self.faults is not None:
+            f = self.faults
+            lines.append(
+                f"  faults:       {f.total_fired()} injected across "
+                f"{len(f.fired)} site(s) (seed {f.seed})")
+        return "\n".join(lines)
 
 
 class Session:

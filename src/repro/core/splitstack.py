@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.query import NEG_INF, Predicate
 from repro.core.store import DocBatch, StoreConfig, normalize
+from repro.serving.faults import FaultPlan, FaultRule, WarmTierError
 
 
 # ---------------------------------------------------------------------------
@@ -189,7 +190,7 @@ class SplitStackClient:
                            # "query composition explosion" failure mode)
 
     def __init__(self, cfg: StoreConfig, *, filter_bug_rate: float = 0.0,
-                 cache_ttl_s: float = 1.0, rng_seed: int = 0):
+                 cache_ttl_s: float = 1.0, rng_seed: int = 0, faults=None):
         N, D = cfg.capacity, cfg.dim
         self.cfg = cfg
         self.emb = jnp.zeros((N, D), jnp.dtype(cfg.dtype))
@@ -204,7 +205,17 @@ class SplitStackClient:
         self.cache = MetadataCache(cache_ttl_s)
         self.stats = SplitStackStats()
         self.filter_bug_rate = filter_bug_rate
-        self._rng = np.random.default_rng(rng_seed)
+        # Unified injection surface (serving.faults): the legacy
+        # filter_bug_rate kwarg is now a shim that installs a
+        # ``split.filter_bug`` rule on a FaultPlan seeded by rng_seed, so
+        # bench_isolation and the chaos harness share ONE seeded mechanism.
+        # A caller-supplied plan may also carry warm.error / warm.stall
+        # rules, which fire on the pushdown (warm-tier) query paths.
+        if faults is None:
+            faults = FaultPlan(seed=rng_seed)
+        if filter_bug_rate > 0.0 and "split.filter_bug" not in faults.rules:
+            faults.rules["split.filter_bug"] = FaultRule(rate=filter_bug_rate)
+        self.faults = faults
         self._cursor = 0
         self._slot_of_doc: dict[int, int] = {}
         # monotone write counter (bumped once per ingest/update/delete call):
@@ -348,6 +359,11 @@ class SplitStackClient:
         loop. The front-door executor always probes the warm tier this way.
         """
         if pushdown:
+            # warm-tier fault sites: a stall (slow replica) and a hard error,
+            # both scheduled by the attached FaultPlan — WarmGuard handles
+            # retry/hedge/breaker above this layer.
+            self.faults.stall("warm.stall")
+            self.faults.raise_if("warm.error", WarmTierError)
             k_eff = min(k, self.cfg.capacity)
             s, i = vector_topk_filtered(self.emb, self.valid, self.meta, q,
                                         pred.as_array(), k_eff)
@@ -360,7 +376,7 @@ class SplitStackClient:
                 i = np.pad(i, pad, constant_values=-1)
             return s, i
         B = q.shape[0]
-        bug_active = self._rng.random() < self.filter_bug_rate
+        bug_active = self.faults.fires("split.filter_bug")
         fetch = k * self.OVERFETCH
         out_scores = np.full((B, k), np.float32(jax.device_get(NEG_INF)), np.float32)
         out_slots = np.full((B, k), -1, np.int32)
@@ -416,6 +432,8 @@ class SplitStackClient:
         if self.lex is None:
             raise ValueError("warm tier has no lexical lanes — "
                              "attach_lexical() first")
+        self.faults.stall("warm.stall")
+        self.faults.raise_if("warm.error", WarmTierError)
         snap = self.lex.snapshot()
         k_eff = min(k, self.cfg.capacity)
         out = vector_topk_hybrid(self.emb, self.valid, self.meta,

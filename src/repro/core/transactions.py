@@ -13,6 +13,7 @@ is the measurable inconsistency window of Table 2.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from functools import partial
 
@@ -79,6 +80,40 @@ def delete(store: Store, slots: jax.Array) -> Store:
 
 
 # ---------------------------------------------------------------------------
+# write-ahead intent journal (crash consistency for the host-side publish)
+# ---------------------------------------------------------------------------
+
+#: publish steps in order; "commit" is the atomic flip, the rest are
+#: host-side write-through that the journal makes redo-safe.
+WRITE_STEPS = ("commit", "alloc", "ivf", "lex")
+
+#: crash points the fault injector may fire between write steps, in order.
+#: "prepare" = before the device program ran; "intent" = after the journal
+#: record exists but before anything published; the rest = after that step.
+CRASH_POINTS = ("prepare", "intent") + WRITE_STEPS
+
+
+@dataclasses.dataclass
+class IntentRecord:
+    """One write's journal entry: everything needed to redo its host-side
+    publish steps, plus a done-set so redo after a crash replays each step
+    exactly once (the ivf/lex write-through hooks are redo-safe but not
+    blindly re-runnable without double-counting churn)."""
+    op: str                                   # "ingest" | "update" | "delete"
+    epoch: int                                # commit_count after this write
+    store: Store                              # post-write device snapshot
+    state: str = "intent"                     # intent -> committed -> done
+    done: set = dataclasses.field(default_factory=set)
+    slot_updates: tuple = ()                  # (doc_id, slot) pairs (ingest)
+    slot_removals: tuple = ()                 # doc_ids leaving the map (delete)
+    free_take: int = 0                        # recycled slots consumed (ingest)
+    free_add: tuple = ()                      # slots returned (delete)
+    cursor_after: int | None = None           # fresh-frontier cursor (ingest)
+    ivf_op: tuple | None = None               # ("add", slots, emb) | ("remove", slots)
+    lex_op: tuple | None = None               # (slots, terms, tfs)
+
+
+# ---------------------------------------------------------------------------
 # host-side commit log (slot allocation + snapshot swap + instrumentation)
 # ---------------------------------------------------------------------------
 
@@ -113,6 +148,14 @@ class TransactionLog:
         # for batches without lexical content, so a recycled slot can never
         # serve the previous occupant's postings.
         self.lex = None
+        # optional FaultPlan (serving.faults): when attached, every write
+        # checks the txn.<op>.<point> crash sites between publish steps.
+        self.faults = None
+        # write-ahead intent journal: at most one in-flight record (writes
+        # are serial); recover() consults it after a CrashError.
+        self._wal: IntentRecord | None = None
+        # bounded audit trail of journal outcomes for explain()/debugging.
+        self.journal: list[str] = []
 
     # -- reads ---------------------------------------------------------
     def snapshot(self) -> Store:
@@ -123,6 +166,89 @@ class TransactionLog:
 
     def has_doc(self, doc_id: int) -> bool:
         return int(doc_id) in self._slot_of_doc
+
+    # -- crash consistency ---------------------------------------------
+    def _crash(self, op: str, point: str) -> None:
+        """Injected crash point BETWEEN write steps (serving.faults site
+        txn.<op>.<point>). The real failure this models is the process dying
+        mid-publish; the chaos grid proves recover() then lands bit-identical
+        to pre- or post-write state."""
+        if self.faults is not None:
+            self.faults.crashes(op, point)
+
+    def _publish(self, rec: IntentRecord, *, inject: bool) -> None:
+        """Run the host-side publish steps of a journaled write.
+
+        The first step is THE commit: journal state, snapshot reference, and
+        the host commit counter flip together in one uninterruptible host
+        step (no crash point inside), so readers — and the result cache,
+        which keys on commit_count — can never observe a new snapshot under
+        an old epoch or vice versa. Every later step is guarded by the
+        record's done-set, so redo after a crash replays it exactly once.
+        """
+        crash = self._crash if inject else (lambda op, pt: None)
+        if "commit" not in rec.done:
+            rec.state = "committed"
+            self._store = rec.store
+            self.commit_count = rec.epoch
+            rec.done.add("commit")
+        crash(rec.op, "commit")
+        if "alloc" not in rec.done:
+            if rec.free_take:
+                del self._free_slots[len(self._free_slots) - rec.free_take:]
+            for d, s in rec.slot_updates:
+                self._slot_of_doc[d] = s
+            for d in rec.slot_removals:
+                self._slot_of_doc.pop(d, None)
+            if rec.free_add:
+                self._free_slots.extend(rec.free_add)
+            if rec.cursor_after is not None:
+                self._cursor = rec.cursor_after
+            rec.done.add("alloc")
+        crash(rec.op, "alloc")
+        if "ivf" not in rec.done:
+            if self.ivf is not None and rec.ivf_op is not None:
+                if rec.ivf_op[0] == "add":
+                    self.ivf.add_rows(rec.ivf_op[1], rec.ivf_op[2])
+                else:
+                    self.ivf.remove_slots(rec.ivf_op[1])
+            rec.done.add("ivf")
+        crash(rec.op, "ivf")
+        if "lex" not in rec.done:
+            if self.lex is not None and rec.lex_op is not None:
+                self.lex.write_rows(*rec.lex_op)
+            rec.done.add("lex")
+        crash(rec.op, "lex")
+        rec.state = "done"
+        self._wal = None
+        self._log_outcome(rec, "done")
+
+    def _log_outcome(self, rec: IntentRecord, outcome: str) -> None:
+        self.journal.append(f"{rec.op}@{rec.epoch} {outcome}")
+        if len(self.journal) > 64:
+            del self.journal[:-64]
+
+    def recover(self) -> str:
+        """Recover from a crash at any injected point. Returns the action:
+
+        - ``"noop"``: no in-flight record (crash before intent, or none) —
+          state is the pre-write snapshot already.
+        - ``"rolled-back"``: intent journaled but commit never happened —
+          discard the record; nothing was mutated, state is pre-write.
+        - ``"rolled-forward"``: the commit flip happened — finish the
+          remaining done-guarded publish steps with injection disabled;
+          state becomes exactly the post-write state.
+        """
+        rec = self._wal
+        if rec is None:
+            return "noop"
+        if rec.state == "intent":
+            self._wal = None
+            self._log_outcome(rec, "rolled-back")
+            return "rolled-back"
+        self._publish(rec, inject=False)
+        self.journal[-1] = f"{rec.op}@{rec.epoch} rolled-forward"
+        return "rolled-forward"
 
     # -- writes --------------------------------------------------------
     def ingest(self, batch: DocBatch) -> None:
@@ -138,38 +264,40 @@ class TransactionLog:
         n_fresh = m - n_recycled
         slot_list = recycled + list(range(self._cursor, self._cursor + n_fresh))
         slots = jnp.asarray(slot_list, jnp.int32)
+        self._crash("ingest", "prepare")
         t0 = time.perf_counter()
         new = ingest(self._store, self.cfg, slots, batch.emb, batch.tenant,
                      batch.category, batch.updated_at, batch.acl, batch.doc_id)
         jax.block_until_ready(new["commit_ts"])
         self.write_latencies_s.append(time.perf_counter() - t0)
-        # single reference swap = the commit point
-        self._store = new
-        self.commit_count += 1
-        if n_recycled:
-            del self._free_slots[len(self._free_slots) - n_recycled:]
-        for s, d in zip(slot_list, jax.device_get(batch.doc_id)):
-            self._slot_of_doc[int(d)] = s
-        self._cursor += n_fresh
-        if self.ivf is not None:
-            self.ivf.add_rows(slot_list, np.asarray(batch.emb))
-        if self.lex is not None:
-            self.lex.write_rows(
-                slot_list,
-                None if batch.terms is None else np.asarray(batch.terms),
-                None if batch.tfs is None else np.asarray(batch.tfs))
+        doc_ids = [int(d) for d in jax.device_get(batch.doc_id)]
+        rec = IntentRecord(
+            op="ingest", epoch=self.commit_count + 1, store=new,
+            slot_updates=tuple(zip(doc_ids, slot_list)),
+            free_take=n_recycled, cursor_after=self._cursor + n_fresh,
+            ivf_op=("add", slot_list, np.asarray(batch.emb)),
+            lex_op=(slot_list,
+                    None if batch.terms is None else np.asarray(batch.terms),
+                    None if batch.tfs is None else np.asarray(batch.tfs)))
+        self._wal = rec                     # write-ahead: journal the intent
+        self._crash("ingest", "intent")
+        self._publish(rec, inject=True)
 
     def update(self, doc_ids, new_emb, updated_at) -> None:
         slot_list = [self._slot_of_doc[int(d)] for d in doc_ids]
         slots = jnp.asarray(slot_list, jnp.int32)
+        self._crash("update", "prepare")
         t0 = time.perf_counter()
         new = update(self._store, self.cfg, slots, new_emb, jnp.asarray(updated_at, jnp.int32))
         jax.block_until_ready(new["commit_ts"])
         self.write_latencies_s.append(time.perf_counter() - t0)
-        self._store = new
-        self.commit_count += 1
-        if self.ivf is not None:   # re-embedded rows move to their new centroid
-            self.ivf.add_rows(slot_list, np.asarray(new_emb))
+        rec = IntentRecord(
+            op="update", epoch=self.commit_count + 1, store=new,
+            # re-embedded rows move to their new centroid
+            ivf_op=("add", slot_list, np.asarray(new_emb)))
+        self._wal = rec
+        self._crash("update", "intent")
+        self._publish(rec, inject=True)
 
     def delete(self, doc_ids) -> list[int]:
         """Tombstone the given docs. Returns the freed slots (one per unique
@@ -178,18 +306,21 @@ class TransactionLog:
         # dedupe: a repeated doc_id must not double-free its slot
         slot_list = [self._slot_of_doc[d]
                      for d in dict.fromkeys(int(d) for d in doc_ids)]
+        self._crash("delete", "prepare")
         new = delete(self._store, jnp.asarray(slot_list, jnp.int32))
         jax.block_until_ready(new["commit_ts"])
-        self._store = new
-        self.commit_count += 1
-        for d in doc_ids:
-            self._slot_of_doc.pop(int(d), None)
-        # tombstoned slots return to the allocator (free-slot recycling)
-        self._free_slots.extend(slot_list)
-        if self.ivf is not None:   # freed slots leave the member table too
-            self.ivf.remove_slots(slot_list)
-        if self.lex is not None:   # postings leave with the row (df refunds)
-            self.lex.clear_rows(slot_list)
+        rec = IntentRecord(
+            op="delete", epoch=self.commit_count + 1, store=new,
+            slot_removals=tuple(int(d) for d in doc_ids),
+            # tombstoned slots return to the allocator (free-slot recycling);
+            # they leave the ivf member table and drop their postings (df
+            # refunds) in the ivf/lex steps.
+            free_add=tuple(slot_list),
+            ivf_op=("remove", slot_list),
+            lex_op=(slot_list, None, None))
+        self._wal = rec
+        self._crash("delete", "intent")
+        self._publish(rec, inject=True)
         return slot_list
 
     @property

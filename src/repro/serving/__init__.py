@@ -2,7 +2,11 @@
 
   engine.py     RAGEngine — retrieval -> prompt assembly -> prefill -> decode
   scheduler.py  admission-controlled batching scheduler with deadline-aware
-                plan degradation and staleness-bounded cache serves
+                plan degradation, staleness-bounded cache serves, bounded
+                launch retry, and a wedged-batch watchdog
+  faults.py     deterministic seeded fault injection (FaultPlan) + the
+                resilience primitives (retry/hedge/circuit breaker) the
+                chaos suite hardens the stack against
   load.py       open-loop load harness (Poisson arrivals, Zipfian mix,
                 interleaved writes) and scenario runner
   metrics.py    monotonic-clock histograms + labeled counters; the

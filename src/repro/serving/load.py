@@ -157,6 +157,7 @@ class ScenarioResult:
             "shed_rate": self.shed / max(self.offered, 1),
             "deadline_met_rate": len(ok) / max(len(self.results), 1),
             "degraded": sum(1 for r in self.results if r.degraded),
+            "failed": sum(1 for r in self.results if r.served == "failed"),
             "stale_serves": len(stale_ages),
             "max_stale_age_s": max(stale_ages, default=0.0),
             "writes": self.writes,
@@ -259,6 +260,12 @@ def run_scenario(db: RagDB, cfg: WorkloadConfig, sched_cfg: SchedulerConfig,
             # long gap still polls the clock)
             time.sleep(min(max(events[i].t - now, 0.0), 0.002))
     results.extend(sched.flush())
+    # a wedged batch may have been requeued by the watchdog during the final
+    # flush — drain until genuinely idle (bounded: requeues are limited)
+    while sched.busy:
+        results.extend(sched.step())
+        if not sched.queue:
+            results.extend(sched.flush())
     wall = clock() - start
     return ScenarioResult(results=results, metrics=metrics, wall_s=wall,
                           offered=offered, admitted=admitted,

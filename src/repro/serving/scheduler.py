@@ -30,12 +30,15 @@ host threads. `clock` is injectable so tests drive it deterministically.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import numpy as np
 
 from repro.api.plan import PhysicalPlan
 from repro.api.ragdb import PendingExecution, RagDB
+from repro.serving.faults import (FaultError, HotLaunchError,
+                                  ResilienceConfig, WarmGuard)
 from repro.serving.metrics import MetricsRegistry
 
 
@@ -54,6 +57,20 @@ class SchedulerConfig:
     stale_pressure: float = 0.9     # queue-fill fraction -> allow stale serves
     stale_within_s: float | None = None   # staleness bound; None disables
     use_cache: bool = True          # snapshot-exact result cache on/off
+    # -- resilience (serving.faults; all timings on the injected clock) ----
+    warm_timeout_ms: float | None = None  # refuse warm probes slower than this
+    hedge_ms: float | None = None   # hedge warm probes slower than this
+    warm_retries: int = 2           # warm probe attempts = warm_retries + 1
+    retry_base_ms: float = 1.0      # backoff = base * 2^attempt * jitter
+    retry_jitter: float = 0.5       # seeded jitter factor in [1, 1 + jitter]
+    breaker_failures: int = 3       # consecutive warm failures -> breaker opens
+    breaker_reset_s: float = 1.0    # open -> half-open probe delay
+    launch_retries: int = 2         # extra db.launch attempts on launch fault
+    watchdog_ms: float | None = None      # fail/requeue batches wedged past
+                                          # this service time; None disables
+    requeue_limit: int = 1          # watchdog/finish-fault requeues before a
+                                    # request is shed as "failed"
+    seed: int = 0                   # backoff-jitter RNG seed
 
 
 @dataclasses.dataclass
@@ -66,6 +83,7 @@ class ServeRequest:
     arrival_t: float               # scheduler-clock seconds (queue-wait base)
     req_id: int = 0
     tenant: int = -2               # metrics label only (plan.pred is the law)
+    retries: int = 0               # watchdog/fault requeues consumed so far
 
     @property
     def rows(self) -> int:
@@ -80,7 +98,11 @@ class ServedResult:
     scores: np.ndarray
     slots: np.ndarray
     tiers: np.ndarray
-    served: str                    # "fresh" | "cache" | "stale"
+    served: str                    # "fresh" | "cache" | "stale" | "failed"
+                                   # ("failed" = explicitly shed after
+                                   # retries/watchdog gave up: scores are
+                                   # NEG_INF, slots are -1 — never a
+                                   # silently-wrong answer)
     stale_age_s: float | None
     degraded: tuple[str, ...]      # ladder rungs applied (() = full plan)
     queue_wait_ms: float
@@ -94,7 +116,8 @@ class Scheduler:
     open-loop harness is single-threaded by design)."""
 
     def __init__(self, db: RagDB, cfg: SchedulerConfig = SchedulerConfig(),
-                 *, clock=None, metrics: MetricsRegistry | None = None):
+                 *, clock=None, metrics: MetricsRegistry | None = None,
+                 sleep=None):
         self.db = db
         self.cfg = cfg
         # one clock for queue waits AND cache-entry ages — tests inject a
@@ -102,7 +125,25 @@ class Scheduler:
         self.clock = clock if clock is not None else db.clock
         if clock is not None:
             db.clock = clock
+        # injectable backoff sleep — fake-clock tests pass clock.advance so
+        # retry delays advance virtual time instead of blocking
+        self._sleep = sleep if sleep is not None else time.sleep
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._rng = np.random.default_rng(cfg.seed)
+        # guarded warm probes: timeout / bounded retry / hedge / breaker.
+        # Installed on the db so the executor's phase-2 probes run through
+        # it; breaker-open serves hot-only with an explicit annotation.
+        self.guard = WarmGuard(
+            ResilienceConfig(
+                timeout_ms=cfg.warm_timeout_ms, hedge_ms=cfg.hedge_ms,
+                max_retries=cfg.warm_retries,
+                retry_base_ms=cfg.retry_base_ms,
+                retry_jitter=cfg.retry_jitter,
+                breaker_failures=cfg.breaker_failures,
+                breaker_reset_s=cfg.breaker_reset_s),
+            clock=self.clock, sleep=self._sleep, metrics=self.metrics,
+            seed=cfg.seed)
+        db.warm_guard = self.guard
         self.queue: deque[ServeRequest] = deque()
         # at most one batch in flight beyond the one being launched: the
         # executor's device_get pipeline depth
@@ -203,18 +244,85 @@ class Scheduler:
             for r, p in zip(batch, plans):
                 self.metrics.inc("requests", engine=p.engine)
                 self.metrics.inc("requests", tenant=r.tenant)
-            pending = self.db.launch(
-                plans, use_cache=self.cfg.use_cache,
-                stale_within_s=(self.cfg.stale_within_s if allow_stale
-                                else None))
+            # bounded launch retry: hot.launch faults fire BEFORE any device
+            # dispatch, so re-entering db.launch is side-effect-clean
+            pending = None
+            for attempt in range(self.cfg.launch_retries + 1):
+                try:
+                    pending = self.db.launch(
+                        plans, use_cache=self.cfg.use_cache,
+                        stale_within_s=(self.cfg.stale_within_s if allow_stale
+                                        else None))
+                    break
+                except HotLaunchError:
+                    if attempt < self.cfg.launch_retries:
+                        self.metrics.inc("launch_retries")
+                        self._backoff(attempt)
             # overwrite queued plans with what actually ran, so results
             # carry the degraded explain()/audit tags
             for r, p in zip(batch, plans):
                 r.plan = p
-            self._pending.append((pending, batch, waits, now))
+            if pending is None:
+                # retries exhausted: shed the batch EXPLICITLY (served =
+                # "failed", sentinel scores/slots) instead of wedging or
+                # silently dropping it
+                self.metrics.inc("launch_failures")
+                out.extend(self._failed_results(batch, waits, now))
+            else:
+                self._pending.append((pending, batch, waits, now))
         if len(self._pending) > (1 if batch else 0):
             out.extend(self._finish_oldest())
         return out
+
+    def _backoff(self, attempt: int) -> None:
+        """Exponential backoff with seeded jitter between retry attempts."""
+        base = self.cfg.retry_base_ms * (2.0 ** attempt)
+        jitter = 1.0 + self.cfg.retry_jitter * float(self._rng.random())
+        self._sleep(base * jitter / 1e3)
+
+    def _failed_results(self, batch: list[ServeRequest], waits: list[float],
+                        t_launch: float) -> list[ServedResult]:
+        """Explicit failure results: NEG_INF scores, -1 slots, served =
+        "failed" — the chaos contract's 'explicitly shed' class."""
+        t_done = self.clock()
+        out = []
+        for r, wait_ms in zip(batch, waits):
+            self.metrics.inc("failed", tenant=r.tenant)
+            k, n = r.plan.logical.k, r.rows
+            e2e_ms = (t_done - r.arrival_t) * 1e3
+            out.append(ServedResult(
+                request=r,
+                scores=np.full((n, k), np.float32(np.finfo(np.float32).min),
+                               np.float32),
+                slots=np.full((n, k), -1, np.int32),
+                tiers=np.zeros((n, k), np.int32),
+                served="failed", stale_age_s=None,
+                degraded=r.plan.degraded, queue_wait_ms=wait_ms,
+                service_ms=(t_done - t_launch) * 1e3, e2e_ms=e2e_ms,
+                deadline_met=False))
+        return out
+
+    def _fail_or_requeue(self, batch: list[ServeRequest],
+                         waits: list[float],
+                         t_launch: float) -> list[ServedResult]:
+        """A batch's finish was wedged or faulted: requeue each request
+        (front of queue, bounded by ``requeue_limit``) or shed it as
+        "failed". The serving loop keeps moving either way."""
+        retry: list[tuple[ServeRequest, float]] = []
+        give_up: list[tuple[ServeRequest, float]] = []
+        for r, w in zip(batch, waits):
+            if r.retries < self.cfg.requeue_limit:
+                r.retries += 1
+                retry.append((r, w))
+            else:
+                give_up.append((r, w))
+        for r, _ in reversed(retry):
+            self.metrics.inc("requeued", tenant=r.tenant)
+            self.queue.appendleft(r)
+        if not give_up:
+            return []
+        return self._failed_results([r for r, _ in give_up],
+                                    [w for _, w in give_up], t_launch)
 
     def flush(self) -> list[ServedResult]:
         """Finish every in-flight batch (end-of-trace drain)."""
@@ -225,9 +333,24 @@ class Scheduler:
 
     def _finish_oldest(self) -> list[ServedResult]:
         pending, batch, waits, t_launch = self._pending.pop(0)
-        scores, slots, tiers = self.db.finish(pending)
+        try:
+            scores, slots, tiers = self.db.finish(pending)
+        except FaultError:
+            # the in-flight batch died at finish: fail-and-requeue instead
+            # of letting the exception wedge flush()/run_until_idle()
+            self.metrics.inc("finish_faults")
+            return self._fail_or_requeue(batch, waits, t_launch)
         t_done = self.clock()
         service_ms = (t_done - t_launch) * 1e3
+        if (self.cfg.watchdog_ms is not None
+                and service_ms > self.cfg.watchdog_ms):
+            # deadline watchdog: the batch finished, but so late (wedged
+            # device/tier stall) that its results are refused — requeued
+            # requests re-run against the (now warm) cache, the rest are
+            # shed explicitly. A single stuck launch can no longer hang
+            # the serving loop forever.
+            self.metrics.inc("watchdog_fired")
+            return self._fail_or_requeue(batch, waits, t_launch)
         self.metrics.hist("service_ms").observe(service_ms)
         out, off = [], 0
         for i, r in enumerate(batch):

@@ -1,0 +1,477 @@
+"""Chaos property suite: the stack under deterministic, seeded faults.
+
+The contract (ISSUE 8 / the paper's reliability claims, proven adversarially):
+under ANY fault schedule, every served response is
+
+  * CORRECT      — bit-identical to the fault-free execution of the plan
+                   that ran, or
+  * DEGRADED     — explicitly annotated (``warm-unavailable`` / ladder rungs
+                   / ``served == "stale"`` within its declared bound), or
+  * SHED/FAILED  — ``served == "failed"`` with sentinel scores/slots,
+
+never silently wrong, never cross-tenant, never mixed-state. One test per
+fault class asserts the classification (warm stall, warm error, hot-launch
+failure, mid-commit crash, stale cache epoch); the crash grid proves the
+TransactionLog's write-ahead intent journal recovers bit-identically to the
+pre- or post-write snapshot at EVERY injected crash point (inconsistency
+count == 0); the storm test sweeps a seed grid over every query-path site
+at once.
+
+All timing runs on the injected fake clock (faults stall via
+``clock.advance``), so stalls, timeouts, backoff, and breaker resets are
+deterministic and instant.
+"""
+import numpy as np
+import pytest
+
+from repro.api import RagDB
+from repro.core import Principal, StoreConfig
+from repro.core.store import DocBatch
+from repro.core.transactions import CRASH_POINTS
+from repro.data.corpus import DAY_S, CorpusConfig, make_corpus
+from repro.index.lexical import LexicalConfig
+from repro.serving.faults import (CircuitBreaker, CrashError, FaultPlan,
+                                  FaultRule, WarmTierError)
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
+from tests.test_scheduler import FakeClock
+
+ALL_BITS = 0xFFFFFFFF
+
+
+# -- helpers ---------------------------------------------------------------
+
+def _tiered_db() -> tuple[RagDB, CorpusConfig]:
+    """Two-tier RagDB: recent docs hot, old docs warm — warm probes (and
+    their faults) are reachable through unconstrained queries."""
+    ccfg = CorpusConfig(n_docs=400, dim=16, n_tenants=3, n_categories=4)
+    scfg = StoreConfig(capacity=1024, dim=16)
+    db = RagDB(scfg, warm_cfg=scfg, hot_window_s=90 * DAY_S,
+               now_ts=ccfg.now_ts)
+    db.ingest(make_corpus(ccfg))
+    assert db.router.warm.n_docs > 0
+    return db, ccfg
+
+
+def _sched(db, clock, **over) -> Scheduler:
+    """Hardened scheduler on a fake clock; pressure degradation disabled so
+    the only degradations in these tests are fault-driven."""
+    base = dict(slo_ms=1e9, max_queue=64, max_batch=8,
+                degrade_pressure=2.0, stale_pressure=2.0)
+    base.update(over)
+    return Scheduler(db, SchedulerConfig(**base), clock=clock,
+                     metrics=MetricsRegistry(), sleep=clock.advance)
+
+
+def _admin_req(db, clock, q, k=6, req_id=0):
+    plan = db.admin_session().search(q, normalize=False).limit(k).plan()
+    assert plan.route == "hot+warm"
+    return ServeRequest(plan=plan, arrival_t=clock(), req_id=req_id)
+
+
+def _clean_ref(db, plan):
+    """Fault-free execution of exactly the plan that ran (faults + guard
+    detached, cache bypassed) — the bit-identity reference."""
+    saved, guard = db.faults, db.warm_guard
+    db.attach_faults(None)
+    db.warm_guard = None
+    try:
+        return db.execute([plan], use_cache=False)
+    finally:
+        db.attach_faults(saved)
+        db.warm_guard = guard
+
+
+def _serve_one(db, clock, req, **cfg):
+    sched = _sched(db, clock, **cfg)
+    assert sched.offer(req)
+    res = sched.run_until_idle()
+    assert len(res) == 1
+    return res[0], sched
+
+
+# -- FaultPlan determinism -------------------------------------------------
+
+def test_fault_plan_schedule_is_pure_in_seed_site_and_call_index():
+    mk = lambda seed: FaultPlan(seed, {
+        "a": FaultRule(rate=0.4), "b": FaultRule(rate=0.4, after=3, until=9)})
+    runs = [[(p.fires("a"), p.fires("b")) for _ in range(32)]
+            for p in (mk(7), mk(7))]
+    assert runs[0] == runs[1], "same seed must replay the same schedule"
+    other = [( FaultPlan(8, {"a": FaultRule(rate=0.4)}).fires("a"))
+             for _ in range(0)]  # distinct-seed check below, over one plan
+    p7, p8 = mk(7), mk(8)
+    assert ([p7.fires("a") for _ in range(64)]
+            != [p8.fires("a") for _ in range(64)])
+    # windows gate firing without reshuffling the stream
+    assert all(not f for f, _ in runs[0][:0])
+    b_fired = [b for _, b in runs[0]]
+    assert not any(b_fired[:3]) and not any(b_fired[9:])
+
+
+def test_fault_plan_at_schedule_and_counters():
+    p = FaultPlan(0, {"x": FaultRule(at=(0, 2))})
+    assert [p.fires("x") for _ in range(4)] == [True, False, True, False]
+    assert p.counters()["x"] == (4, 2)
+    assert p.total_fired() == 2
+    p.clear()
+    assert not p.fires("x")
+
+
+def test_circuit_breaker_state_machine():
+    clock = FakeClock()
+    trans = []
+    br = CircuitBreaker(2, 1.0, clock=clock, on_transition=trans.append)
+    assert br.allow()
+    br.record_failure()
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    clock.advance(1.5)
+    assert br.allow() and br.state == "half-open"   # one probe through
+    br.record_failure()
+    assert br.state == "open"                        # failed probe re-opens
+    clock.advance(1.5)
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+    assert trans == ["open", "half-open", "open", "half-open", "closed"]
+
+
+# -- fault class 1: warm error (transient -> retried -> CORRECT) -----------
+
+def test_warm_error_is_retried_to_a_bit_identical_response():
+    db, ccfg = _tiered_db()
+    clock = FakeClock()
+    db.attach_faults(FaultPlan(0, {"warm.error": FaultRule(at=(0,))},
+                               sleep=clock.advance))
+    q = np.random.default_rng(3).standard_normal(ccfg.dim).astype(np.float32)
+    res, sched = _serve_one(db, clock, _admin_req(db, clock, q),
+                            warm_retries=2)
+    assert res.served == "fresh" and res.degraded == ()
+    s, sl, tr = _clean_ref(db, res.request.plan)
+    assert (np.array_equal(res.scores, s) and np.array_equal(res.slots, sl)
+            and np.array_equal(res.tiers, tr)), \
+        "retried response must be bit-identical to fault-free"
+    assert sched.metrics.counter_total("warm_errors") == 1
+    assert sched.metrics.counter_total("warm_retries") == 1
+    db.attach_faults(None)
+
+
+# -- fault class 2: warm stall (timeout -> hot-only, EXPLICITLY DEGRADED) --
+
+def test_warm_stall_times_out_to_explicit_hot_only_degradation():
+    db, ccfg = _tiered_db()
+    clock = FakeClock()
+    db.attach_faults(FaultPlan(
+        0, {"warm.stall": FaultRule(rate=1.0, stall_s=0.05)},
+        sleep=clock.advance))
+    q = np.random.default_rng(4).standard_normal(ccfg.dim).astype(np.float32)
+    res, sched = _serve_one(db, clock, _admin_req(db, clock, q),
+                            warm_timeout_ms=10.0, warm_retries=1,
+                            breaker_failures=10)
+    assert any("warm-unavailable" in d for d in res.degraded), \
+        "a timed-out warm probe must surface as explicit degradation"
+    assert sched.metrics.counter_total("warm_timeouts") == 2   # 1 + 1 retry
+    assert sched.metrics.counter_total("warm_failovers") == 1
+    assert db.stats.warm_failovers == 1
+    # the hot-only rows really are hot-tier rows
+    assert (res.tiers[res.slots >= 0] == 0).all()
+    # the degraded chunk must NOT have been cached: the same query served
+    # fault-free computes fresh and is bit-identical to the clean reference
+    db.attach_faults(None)
+    req2 = _admin_req(db, clock, q, req_id=1)
+    res2, _ = _serve_one(db, clock, req2)
+    assert res2.served == "fresh" and res2.degraded == ()
+    s, sl, tr = _clean_ref(db, res2.request.plan)
+    assert np.array_equal(res2.scores, s) and np.array_equal(res2.slots, sl)
+
+
+# -- fault class 3: hot-launch failure (retried; exhausted -> FAILED) ------
+
+def test_hot_launch_fault_is_retried_then_bit_identical():
+    db, ccfg = _tiered_db()
+    clock = FakeClock()
+    db.attach_faults(FaultPlan(0, {"hot.launch": FaultRule(at=(0,))},
+                               sleep=clock.advance))
+    q = np.random.default_rng(5).standard_normal(ccfg.dim).astype(np.float32)
+    res, sched = _serve_one(db, clock, _admin_req(db, clock, q),
+                            launch_retries=2, use_cache=False)
+    assert res.served == "fresh" and res.degraded == ()
+    assert sched.metrics.counter_total("launch_retries") == 1
+    s, sl, tr = _clean_ref(db, res.request.plan)
+    assert np.array_equal(res.scores, s) and np.array_equal(res.slots, sl)
+    db.attach_faults(None)
+
+
+def test_hot_launch_exhaustion_fails_explicitly_never_wedges():
+    db, ccfg = _tiered_db()
+    clock = FakeClock()
+    db.attach_faults(FaultPlan(0, {"hot.launch": FaultRule(rate=1.0)},
+                               sleep=clock.advance))
+    q = np.random.default_rng(6).standard_normal(ccfg.dim).astype(np.float32)
+    res, sched = _serve_one(db, clock, _admin_req(db, clock, q),
+                            launch_retries=2, use_cache=False)
+    assert res.served == "failed"
+    assert (res.slots == -1).all(), "failed responses carry sentinel slots"
+    assert sched.metrics.counter_total("launch_failures") == 1
+    assert sched.metrics.counter_total("failed") == 1
+    db.attach_faults(None)
+
+
+# -- fault class 4: stale cache epoch (poisoned read REJECTED) -------------
+
+def test_stale_epoch_cache_read_is_rejected_and_recomputed():
+    db, ccfg = _tiered_db()
+    clock = FakeClock()
+    q = np.random.default_rng(7).standard_normal(ccfg.dim).astype(np.float32)
+    # 1) fill the cache under the current epoch
+    res0, _ = _serve_one(db, clock, _admin_req(db, clock, q))
+    assert res0.served == "fresh"
+    # 2) a write bumps the commit epoch, invalidating the entry's key
+    hot_doc = next(iter(db.log._slot_of_doc))
+    db.update([hot_doc], np.ones((1, ccfg.dim), np.float32), [ccfg.now_ts])
+    # 3) a poisoned cache layer serves the newest entry ignoring epochs —
+    #    the epoch guard must refuse it and fall through to fresh compute
+    db.attach_faults(FaultPlan(0, {"cache.stale": FaultRule(rate=1.0)},
+                               sleep=clock.advance))
+    res1, _ = _serve_one(db, clock, _admin_req(db, clock, q, req_id=1))
+    assert db.stats.stale_epoch_rejected >= 1
+    assert res1.served == "fresh" and res1.degraded == ()
+    s, sl, tr = _clean_ref(db, res1.request.plan)
+    assert np.array_equal(res1.scores, s) and np.array_equal(res1.slots, sl), \
+        "a rejected poisoned read must yield the post-write answer"
+    db.attach_faults(None)
+
+
+# -- breaker: trips to hot-only, recovers after faults stop ----------------
+
+def test_breaker_trips_to_hot_only_and_recovers_after_faults_stop():
+    db, ccfg = _tiered_db()
+    clock = FakeClock()
+    plan_f = FaultPlan(0, {"warm.error": FaultRule(rate=1.0)},
+                       sleep=clock.advance)
+    db.attach_faults(plan_f)
+    sched = _sched(db, clock, warm_retries=0, breaker_failures=2,
+                   breaker_reset_s=1.0, use_cache=False)
+    rng = np.random.default_rng(8)
+    results = []
+    for i in range(4):
+        q = rng.standard_normal(ccfg.dim).astype(np.float32)
+        assert sched.offer(_admin_req(db, clock, q, req_id=i))
+        results.extend(sched.run_until_idle())
+    assert len(results) == 4
+    assert all(any("warm-unavailable" in d for d in r.degraded)
+               for r in results), "breaker-open serving must stay explicit"
+    assert sched.guard.state == "open"
+    assert sched.metrics.counter_total("breaker_skips") >= 1
+    # while open, the warm tier is not probed at all
+    calls_while_open = plan_f.calls.get("warm.error", 0)
+    q = rng.standard_normal(ccfg.dim).astype(np.float32)
+    assert sched.offer(_admin_req(db, clock, q, req_id=10))
+    results.extend(sched.run_until_idle())
+    assert plan_f.calls.get("warm.error", 0) == calls_while_open
+    # faults stop; after reset_s the half-open probe succeeds -> closed,
+    # and the very next response is clean (recovery within one step)
+    plan_f.clear()
+    clock.advance(2.0)
+    q = rng.standard_normal(ccfg.dim).astype(np.float32)
+    assert sched.offer(_admin_req(db, clock, q, req_id=11))
+    (rec,) = sched.run_until_idle()
+    assert rec.degraded == () and rec.served == "fresh"
+    assert sched.guard.state == "closed"
+    s, sl, tr = _clean_ref(db, rec.request.plan)
+    assert np.array_equal(rec.scores, s) and np.array_equal(rec.slots, sl)
+    assert sched.metrics.counter_total("breaker_open") >= 1
+    assert sched.metrics.counter_total("breaker_closed") >= 1
+    db.attach_faults(None)
+
+
+# -- fault class 5: mid-commit crash grid (WAL recovery bit-identity) ------
+
+def _crash_db() -> RagDB:
+    """Hot-tier RagDB with ivf + lexical write-through and a populated
+    free-slot list — every publish step of every op does real work."""
+    ccfg = CorpusConfig(n_docs=48, dim=8, n_tenants=2, n_categories=2,
+                        vocab_size=64, doc_terms=4, n_entity_terms=8)
+    db = RagDB(StoreConfig(capacity=96, dim=8),
+               lexical_cfg=LexicalConfig(vocab_size=64, doc_terms=4))
+    db.ingest(make_corpus(ccfg))
+    db.build_index()
+    db.delete([40, 41, 42])          # free slots -> ingest recycles
+    return db
+
+
+def _mk_batch(ids, dim=8, seed=11):
+    rng = np.random.default_rng(seed)
+    n = len(ids)
+    return DocBatch(
+        emb=rng.standard_normal((n, dim)).astype(np.float32),
+        tenant=np.zeros(n, np.int32), category=np.zeros(n, np.int32),
+        updated_at=np.full(n, 5, np.int32),
+        acl=np.full(n, ALL_BITS, np.uint32),
+        doc_id=np.asarray(ids, np.int32),
+        terms=rng.integers(0, 64, (n, 4)).astype(np.int32),
+        tfs=rng.integers(1, 4, (n, 4)).astype(np.int32))
+
+
+def _apply_op(db, op):
+    if op == "ingest":
+        db.log.ingest(_mk_batch([100, 101, 102, 103]))
+    elif op == "update":
+        db.log.update([1, 2], np.full((2, 8), 0.5, np.float32), [7, 7])
+    else:
+        db.log.delete([3, 4])
+
+
+def _fingerprint(db) -> dict:
+    log = db.log
+    fp = {f"store.{k}": np.asarray(v).copy()
+          for k, v in log.snapshot().items()}
+    fp["cursor"] = log._cursor
+    fp["slot_of_doc"] = dict(log._slot_of_doc)
+    fp["free_slots"] = tuple(log._free_slots)
+    fp["commit_count"] = log.commit_count
+    lx = db.lex.snapshot()
+    fp.update({f"lex.{k}": np.asarray(v).copy() for k, v in lx.items()})
+    fp["lex.commits"] = db.lex.commit_count
+    ix = db.index
+    fp["ivf.members"] = np.asarray(ix.members).copy()
+    fp["ivf.overflow"] = tuple(ix.overflow)
+    fp["ivf.slot_pos"] = dict(ix._slot_pos)
+    fp["ivf.epoch"] = ix.epoch
+    return fp
+
+
+def _fp_diff(a: dict, b: dict) -> list[str]:
+    out = []
+    for k in a:
+        va, vb = a[k], b[k]
+        same = (np.array_equal(va, vb) if isinstance(va, np.ndarray)
+                else va == vb)
+        if not same:
+            out.append(k)
+    return out
+
+
+@pytest.mark.parametrize("point", CRASH_POINTS)
+@pytest.mark.parametrize("op", ["ingest", "update", "delete"])
+def test_crash_recovery_grid_bit_identical_never_torn(op, point):
+    # reference pre/post states from a fault-free twin
+    ref = _crash_db()
+    fp_pre = _fingerprint(ref)
+    _apply_op(ref, op)
+    fp_post = _fingerprint(ref)
+    # victim: identical construction, crash injected at exactly this point
+    db = _crash_db()
+    assert not _fp_diff(_fingerprint(db), fp_pre), "twin construction drifted"
+    db.log.faults = FaultPlan(0, {f"txn.{op}.{point}": FaultRule(at=(0,))})
+    with pytest.raises(CrashError):
+        _apply_op(db, op)
+    outcome = db.log.recover()
+    fp_rec = _fingerprint(db)
+    # commit_count monotonicity: never decreases, advances at most once
+    assert fp_rec["commit_count"] in (fp_pre["commit_count"],
+                                      fp_post["commit_count"])
+    # THE invariant: recovered state is bit-identical to pre- OR post-write
+    # — torn mixes (inconsistency) are structurally impossible
+    diff_pre, diff_post = _fp_diff(fp_rec, fp_pre), _fp_diff(fp_rec, fp_post)
+    assert not diff_pre or not diff_post, (
+        f"TORN STATE after crash at {op}.{point}: "
+        f"differs from pre in {diff_pre} and from post in {diff_post}")
+    if point in ("prepare", "intent"):
+        assert outcome in ("noop", "rolled-back") and not diff_pre
+    else:
+        assert outcome == "rolled-forward" and not diff_post
+
+
+def test_crash_then_recover_then_write_again_is_clean():
+    """Recovery leaves the log fully writable: the next write commits
+    normally and recover() is a no-op."""
+    db = _crash_db()
+    db.log.faults = FaultPlan(0, {"txn.ingest.ivf": FaultRule(at=(0,))})
+    with pytest.raises(CrashError):
+        _apply_op(db, "ingest")
+    assert db.log.recover() == "rolled-forward"
+    db.log.faults = None
+    before = db.log.commit_count
+    db.log.ingest(_mk_batch([200, 201], seed=12))
+    assert db.log.commit_count == before + 1
+    assert db.log.recover() == "noop"
+    assert db.log.has_doc(200) and db.log.has_doc(103)
+
+
+# -- the storm: every query-path site at once, across a seed grid ----------
+
+STORM_SEEDS = list(range(6))
+
+
+@pytest.fixture(scope="module")
+def storm_db():
+    return _tiered_db()
+
+
+@pytest.mark.parametrize("seed", STORM_SEEDS)
+def test_chaos_storm_every_response_classified(storm_db, seed):
+    db, ccfg = storm_db
+    clock = FakeClock()
+    plan_f = FaultPlan(seed, {
+        "warm.error": FaultRule(rate=0.3),
+        "warm.stall": FaultRule(rate=0.2, stall_s=0.05),
+        "hot.launch": FaultRule(rate=0.15),
+        "hot.wedge": FaultRule(rate=0.1, stall_s=0.5),
+        "hot.finish_error": FaultRule(rate=0.1),
+        "cache.stale": FaultRule(rate=0.5),
+    }, sleep=clock.advance)
+    db.attach_faults(plan_f)
+    try:
+        sched = _sched(db, clock, warm_timeout_ms=100.0, warm_retries=1,
+                       breaker_failures=3, breaker_reset_s=0.2,
+                       launch_retries=2, watchdog_ms=200.0, requeue_limit=1,
+                       max_batch=4, seed=seed)
+        rng = np.random.default_rng(100 + seed)
+        qs = rng.standard_normal((4, ccfg.dim)).astype(np.float32)
+        reqs = []
+        for i in range(16):
+            q = qs[i % 4]
+            if i % 5 == 4:
+                plan = (db.session(Principal(tenant_id=i % 3,
+                                             group_bits=ALL_BITS))
+                        .search(q, normalize=False).limit(6).plan())
+            else:
+                plan = (db.admin_session().search(q, normalize=False)
+                        .limit(6).plan())
+            reqs.append(ServeRequest(plan=plan, arrival_t=clock(),
+                                     req_id=i, tenant=i % 3))
+        assert all(sched.offer(r) for r in reqs)
+        results = sched.run_until_idle()
+        assert len(results) == 16, "every request must resolve exactly once"
+        assert plan_f.total_fired() > 0, "the storm must actually fire"
+        hot_tenant = np.asarray(db.log.snapshot()["tenant"])
+        warm_tenant = np.asarray(db.router.warm.meta["tenant"])
+        n_correct = n_degraded = n_failed = 0
+        for res in results:
+            # isolation holds for EVERY class (vacuous for sentinel slots)
+            t = res.request.plan.pred.tenant
+            if t != -2:
+                m = res.slots >= 0
+                owner = np.where(res.tiers == 0,
+                                 hot_tenant[res.slots], warm_tenant[res.slots])
+                assert (owner[m] == t).all(), "cross-tenant row under faults"
+            if res.served == "failed":
+                n_failed += 1
+                assert (res.slots == -1).all()
+            elif res.degraded:
+                n_degraded += 1
+                assert any("warm-unavailable" in d for d in res.degraded)
+            else:
+                n_correct += 1
+                s, sl, tr = _clean_ref(db, res.request.plan)
+                assert (np.array_equal(res.scores, s)
+                        and np.array_equal(res.slots, sl)
+                        and np.array_equal(res.tiers, tr)), \
+                    "undegraded response not bit-identical under faults"
+        assert n_correct + n_degraded + n_failed == 16
+    finally:
+        db.attach_faults(None)
+        db.warm_guard = None

@@ -184,6 +184,64 @@ def _check_scheduler_isolation(args):
                 assert (ts[got] >= pred.min_ts).all()
 
 
+def _check_chaos_isolation(args):
+    """Isolation survives the serving path UNDER FAULTS: with a storm firing
+    on every query-path site (warm errors, hot-launch failures, finish
+    faults, poisoned cache epochs), any row a non-failed response surfaces
+    still satisfies the plan's tenant/ACL/ts clauses. Faults may degrade or
+    fail a response — they can never widen it. Stall rates are zero so the
+    property runs at full speed; the timing-dependent fault classes get
+    their own fake-clock tests in tests/test_faults.py."""
+    from repro.serving.faults import FaultPlan, FaultRule
+    from repro.serving.scheduler import (Scheduler, SchedulerConfig,
+                                         ServeRequest)
+
+    emb, tenant, ts, cat, acl, pred, q, k = _corpus(args)
+    n = emb.shape[0]
+    db = RagDB(StoreConfig(capacity=n, dim=8, metric="dot"))
+    db.ingest(DocBatch(emb=jnp.asarray(emb), tenant=jnp.asarray(tenant),
+                       category=jnp.asarray(cat), updated_at=jnp.asarray(ts),
+                       acl=jnp.asarray(acl, jnp.uint32),
+                       doc_id=jnp.arange(n, dtype=jnp.int32)))
+    storm_seed = args[1] & 0xFFFF
+    db.attach_faults(FaultPlan(storm_seed, {
+        "warm.error": FaultRule(rate=0.4),
+        "hot.launch": FaultRule(rate=0.3),
+        "hot.finish_error": FaultRule(rate=0.2),
+        "cache.stale": FaultRule(rate=0.5),
+    }))
+    sched = Scheduler(db, SchedulerConfig(
+        slo_ms=0.0, max_queue=8, max_batch=2, degrade_pressure=0.0,
+        stale_pressure=0.0, stale_within_s=60.0, warm_retries=1,
+        launch_retries=1, breaker_failures=3, breaker_reset_s=0.0,
+        requeue_limit=1, seed=storm_seed))
+    principals = [Principal(tenant_id=t % 6, group_bits=pred.acl_bits)
+                  for t in range(3)]
+    plans = [db.session(p).search(q, normalize=False)
+             .newer_than(pred.min_ts).limit(k).plan() for p in principals]
+    served = 0
+    for round_ in range(2):
+        results = []
+        for i, plan in enumerate(plans):
+            if sched.offer(ServeRequest(plan=plan, arrival_t=sched.clock(),
+                                        req_id=i)):
+                results.extend(sched.run_until_idle())
+        for res in results:
+            if res.served == "failed":
+                assert (res.slots == -1).all()
+                continue
+            served += 1
+            p = principals[res.request.req_id]
+            for b in range(q.shape[0]):
+                got = res.slots[b][res.slots[b] >= 0]
+                assert (tenant[got] == p.tenant_id).all(), \
+                    f"cross-tenant leak under faults (served={res.served})"
+                assert ((acl[got] & np.uint32(pred.acl_bits)) != 0).all(), \
+                    f"ACL leak under faults (served={res.served})"
+                assert (ts[got] >= pred.min_ts).all()
+    db.attach_faults(None)
+
+
 SEED_GRID = list(range(40))
 
 if HAVE_HYPOTHESIS:
@@ -219,6 +277,11 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=15, deadline=None)
     def test_scheduler_isolation_property(args):
         _check_scheduler_isolation(args)
+
+    @given(corpus_st)
+    @settings(max_examples=15, deadline=None)
+    def test_chaos_isolation_property(args):
+        _check_chaos_isolation(args)
 else:
     @pytest.mark.parametrize("seed", SEED_GRID)
     def test_no_leak_and_topk_sound(seed):
@@ -235,3 +298,7 @@ else:
     @pytest.mark.parametrize("seed", SEED_GRID[:15])
     def test_scheduler_isolation_property(seed):
         _check_scheduler_isolation(_args_from_seed(seed))
+
+    @pytest.mark.parametrize("seed", SEED_GRID[:15])
+    def test_chaos_isolation_property(seed):
+        _check_chaos_isolation(_args_from_seed(seed))

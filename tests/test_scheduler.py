@@ -248,3 +248,79 @@ def test_step_pipelines_one_batch_deep():
     assert len(second) == 2 and len(sched._pending) == 1
     assert len(sched.flush()) == 2
     assert not sched.busy
+
+
+# -- watchdog: wedged batches are refused, requeued, and re-served ---------
+
+def _watchdog_sched(db, clock, **over):
+    from repro.serving.faults import FaultPlan, FaultRule  # noqa: F401
+    base = dict(slo_ms=1e9, max_queue=16, max_batch=4, degrade_pressure=2.0,
+                stale_pressure=2.0, use_cache=False, watchdog_ms=100.0,
+                requeue_limit=1)
+    base.update(over)
+    return Scheduler(db, SchedulerConfig(**base), clock=clock,
+                     metrics=MetricsRegistry(), sleep=clock.advance)
+
+
+def test_watchdog_refuses_wedged_batch_and_requeues_to_clean_result():
+    """A batch that stalls 10s past a 100ms watchdog is refused; its
+    requests requeue and the retry (fault exhausted) serves clean."""
+    from repro.serving.faults import FaultPlan, FaultRule
+    db, _ = _db()
+    clock = FakeClock()
+    db.attach_faults(FaultPlan(
+        0, {"hot.wedge": FaultRule(at=(0,), stall_s=10.0)},
+        sleep=clock.advance))
+    sched = _watchdog_sched(db, clock)
+    reqs = _requests(db, clock, 4)
+    for r in reqs:
+        assert sched.offer(r)
+    results = sched.run_until_idle()
+    assert len(results) == 4, "refused batch must still resolve every request"
+    assert sched.metrics.counter_total("watchdog_fired") == 1
+    assert sched.metrics.counter_total("requeued") == 4
+    assert all(r.served != "failed" for r in results)
+    # the re-served answers equal direct execution of the same plans
+    db.attach_faults(None)
+    for res in results:
+        s, sl, tr = db.execute([res.request.plan], use_cache=False)
+        np.testing.assert_array_equal(res.slots, sl)
+        np.testing.assert_array_equal(res.scores, s)
+
+
+def test_finish_fault_is_requeued_then_served():
+    from repro.serving.faults import FaultPlan, FaultRule
+    db, _ = _db()
+    clock = FakeClock()
+    db.attach_faults(FaultPlan(
+        0, {"hot.finish_error": FaultRule(at=(0,))}, sleep=clock.advance))
+    sched = _watchdog_sched(db, clock)
+    for r in _requests(db, clock, 2, seed=2):
+        assert sched.offer(r)
+    results = sched.run_until_idle()
+    assert len(results) == 2
+    assert sched.metrics.counter_total("finish_faults") == 1
+    assert all(r.served != "failed" for r in results)
+    db.attach_faults(None)
+
+
+def test_watchdog_exhaustion_fails_explicitly():
+    """A batch that wedges on EVERY attempt exhausts requeue_limit and is
+    failed with sentinel results — never silently wrong, never stuck."""
+    from repro.serving.faults import FaultPlan, FaultRule
+    db, _ = _db()
+    clock = FakeClock()
+    db.attach_faults(FaultPlan(
+        0, {"hot.wedge": FaultRule(rate=1.0, stall_s=10.0)},
+        sleep=clock.advance))
+    sched = _watchdog_sched(db, clock)
+    for r in _requests(db, clock, 2, seed=3):
+        assert sched.offer(r)
+    results = sched.run_until_idle()
+    assert len(results) == 2
+    assert all(r.served == "failed" for r in results)
+    assert all((r.slots == -1).all() for r in results)
+    assert not any(r.deadline_met for r in results)
+    assert sched.metrics.counter_total("watchdog_fired") == 2
+    assert sched.metrics.counter_total("failed") == 2
+    db.attach_faults(None)

@@ -12,6 +12,8 @@ Usage:
         [COMMITTED.json] [--threshold 0.5] [--max-shed 0.3]
     python tools/check_bench_regression.py --paged-only FRESH.json
         [--paged-threshold 0.15]
+    python tools/check_bench_regression.py --chaos-only FRESH.json
+        [--chaos-p99-mult 10] [--breaker-steps 10]
 
 The ``--serving-only`` lane gates the serving subsystem instead (fresh
 file from ``bench_serving --smoke --out PATH``; committed references are
@@ -230,6 +232,112 @@ def check_serving(args) -> int:
     return 0 if ok else 1
 
 
+def check_chaos(args) -> int:
+    """The chaos lane (fresh file from ``bench_serving --chaos --smoke
+    --out PATH``). SELF-CONTAINED like --paged-only: the fresh file carries
+    its own clean-run baseline (same trace, same machine, same process), so
+    no committed reference and no machine normalization are needed:
+      1. zero silent wrong: every sampled undegraded storm response was
+         bit-identical to its fault-free re-execution (and the sample was
+         non-empty);
+      2. the storm fired (faults_injected > 0) and the resilience machinery
+         visibly handled it — retries/requeues/failovers/degradations/
+         failures/sheds account for the faults instead of ignoring them;
+      3. the circuit breaker opened under a total warm outage and recovered
+         within --breaker-steps serving steps of the outage lifting;
+      4. storm p99 within --chaos-p99-mult of the clean p99 on the same
+         trace, and storm goodput >= half of clean goodput — resilience
+         must not cost the tail or the throughput it exists to protect.
+    """
+    try:
+        with open(args.fresh) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {args.fresh}: {e}", file=sys.stderr)
+        return 2
+    sec = payload.get("chaos")
+    if not sec:
+        print(f"error: {args.fresh} has no chaos section", file=sys.stderr)
+        return 2
+    ok = True
+    print("chaos gate (fault storm vs clean, same trace):")
+
+    audit = sec["audit"]
+    print(f"  silent-wrong audit: {audit['silent_wrong']} of "
+          f"{audit['checked']} sampled undegraded responses "
+          f"({audit['undegraded_total']} total)")
+    if audit["checked"] == 0:
+        print("  FAIL: audit sampled nothing — the bar was not measured")
+        ok = False
+    if audit["silent_wrong"] != 0:
+        print("  FAIL: a response served undegraded under faults differed "
+              "from its fault-free execution")
+        ok = False
+
+    counters = sec["storm"].get("counters", {})
+
+    def ctr(prefix: str) -> int:
+        return sum(v for k, v in counters.items()
+                   if k == prefix or k.startswith(prefix + "{"))
+
+    cls = sec["classified"]
+    handled = (cls["degraded"] + cls["failed"] + cls["shed"]
+               + sum(ctr(p) for p in ("warm_retries", "warm_timeouts",
+                                      "warm_failovers", "launch_retries",
+                                      "launch_failures", "requeued",
+                                      "finish_faults", "breaker_open")))
+    print(f"  storm: {sec['faults_injected']} faults injected "
+          f"({sec['faults_by_site']}), handled-events={handled} "
+          f"(classified {cls})")
+    if sec["faults_injected"] <= 0:
+        print("  FAIL: the storm injected nothing — the gate measured a "
+              "clean run twice")
+        ok = False
+    if handled <= 0:
+        print("  FAIL: faults fired but no retry/requeue/degradation/"
+              "failure accounts for them")
+        ok = False
+
+    br = sec["breaker"]
+    print(f"  breaker: opened={br['opened']} (after "
+          f"{br['opened_after_failures']} failures), recovered="
+          f"{br['recovered']} in {br['recovery_steps']} step(s) "
+          f"(ceiling {args.breaker_steps})")
+    if not br["opened"]:
+        print("  FAIL: total warm outage did not open the breaker")
+        ok = False
+    if not br["recovered"] or br["recovery_steps"] > args.breaker_steps:
+        print("  FAIL: breaker did not recover within the step ceiling "
+              "after the outage lifted")
+        ok = False
+
+    c_p99 = sec["clean"]["histograms"]["e2e_ms"].get("p99", 0.0)
+    s_p99 = sec["storm"]["histograms"]["e2e_ms"].get("p99", 0.0)
+    c_good = sec["clean"]["goodput_rps"]
+    s_good = sec["storm"]["goodput_rps"]
+    # the clean p99 is floored at half the SLO before the multiple is
+    # taken: sub-second smoke runs on a real clock see one-off scheduler
+    # hiccups of tens of ms in EITHER run, and an unfloored ratio of two
+    # tiny numbers turns that noise into a flake — the bar is "the storm
+    # must not blow the tail", not "two noise floors must agree"
+    denom = max(c_p99, 0.5 * sec["config"]["slo_ms"])
+    ratio = s_p99 / max(denom, 1e-9)
+    print(f"  tail: storm p99 {s_p99:.1f}ms vs clean {c_p99:.1f}ms "
+          f"(x{ratio:.2f} of max(clean, SLO/2)={denom:.1f}ms, ceiling "
+          f"x{args.chaos_p99_mult:g}); goodput storm {s_good:.0f} vs clean "
+          f"{c_good:.0f} rps")
+    if ratio > args.chaos_p99_mult:
+        print("  FAIL: the storm blew the tail past the allowed multiple "
+              "of the clean p99")
+        ok = False
+    if s_good < 0.5 * c_good:
+        print("  FAIL: storm goodput collapsed below half of clean")
+        ok = False
+
+    print("PASS" if ok else "REGRESSION")
+    return 0 if ok else 1
+
+
 def check_hybrid(args) -> int:
     fresh = load_hybrid(args.fresh)
     committed = load_hybrid(args.committed)
@@ -331,6 +439,18 @@ def main(argv=None) -> int:
                     help="gate the paged arena-scan regime instead (fresh "
                          "file from bench_latency --paged-only; self-"
                          "contained — no committed reference used)")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="gate the fault-storm lane instead (fresh file "
+                         "from bench_serving --chaos --smoke --out PATH; "
+                         "self-contained — the file carries its own clean "
+                         "baseline)")
+    ap.add_argument("--chaos-p99-mult", type=float, default=10.0,
+                    help="with --chaos-only: max storm-over-clean p99 "
+                         "multiple (default 10)")
+    ap.add_argument("--breaker-steps", type=int, default=10,
+                    help="with --chaos-only: max serving steps for the "
+                         "breaker to recover after the outage lifts "
+                         "(default 10)")
     ap.add_argument("--paged-threshold", type=float, default=0.15,
                     help="with --paged-only: max paged-over-resident p50 "
                          "overhead (default 0.15 = 15%%)")
@@ -369,6 +489,8 @@ def main(argv=None) -> int:
         return check_hybrid(args)
     if args.paged_only:
         return check_paged(args)
+    if args.chaos_only:
+        return check_chaos(args)
 
     fresh = load_sweep(args.fresh)
     committed = load_sweep(args.committed)
