@@ -55,10 +55,28 @@ CPU) vs VMEM-resident tiling, asserted bit-identical before timing.
 `tools/check_bench_regression.py --paged-only` gates paged p50 within 15%
 of resident at the 50k point. Run with ``--paged-only --out PATH`` for a
 fresh comparison file.
+
+The `sharded` section (PR 9) measures the shard-mapped arena scan: p50 at
+N in {250k, 1M} x S in {1, 2, 4, 8} shards, the collective wire payload
+read from the compiled HLO (the O(S*B*k) bound — three gathered (B, k)
+k-lists, constant in corpus size), merge bit-identity against the
+single-device lexicographic oracle, and the per-shard rows_scanned audit.
+Multi-device CPU requires --xla_force_host_platform_device_count BEFORE
+jax initializes, so the measurements run in ONE subprocess (this module
+re-invoked with --sharded-worker) and return as JSON; the corpus streams
+in via `data.corpus.stream_corpus`, so host memory stays O(chunk) at the
+million-row point. The S=8 curve joins the `cost_model` engines.
+`tools/check_bench_regression.py --sharded-only` gates every cell's
+invariants plus the S=8 p50 (machine-normalized by the S=1 baseline).
+Run with ``--sharded-only --out PATH`` for a fresh comparison file.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -142,6 +160,10 @@ def run(iters: int = 200, engine: str = "ref", n_docs: int = 50_000) -> dict:
     # the fused hybrid scan joins the measured cost model: the planner
     # prices (and explain() annotates) match() plans from these curves
     out["cost_model"]["engines"]["hybrid"] = out["hybrid"]["cost_curve"]
+    out["sharded"] = run_sharded_section(iters=max(iters // 20, 5))
+    # the shard-mapped scan joins the measured cost model at S=8: a
+    # mesh-built RagDB prices 'sharded' from these curves
+    out["cost_model"]["engines"]["sharded"] = out["sharded"]["cost_curve"]
     save_result("bench_latency", out)
     return out
 
@@ -352,6 +374,130 @@ def run_paged_section(*, iters: int, n_docs: int = 50_000, batch: int = 64,
           f"-> {n_pages} pages  resident p50={t_res['p50']:7.2f}ms  "
           f"paged p50={t_pg['p50']:7.2f}ms  "
           f"ratio {out['paged_over_resident_p50']:.3f} (bits identical)")
+    return out
+
+
+_SHARDED_K = 10        # k of the sharded lane's (B, k) lists
+_SHARDED_BATCH = 8     # one lane-padded query block (B <= 8 pads to 8)
+
+
+def run_sharded_section(*, iters: int, sizes=(250_000, 1_000_000),
+                        shard_counts=(1, 2, 4, 8), devices: int = 8,
+                        dim: int = 64) -> dict:
+    """The sharded-arena regime, measured (ISSUE 9): p50 of the shard-mapped
+    scan at N x S, the collective payload from compiled HLO, merge
+    bit-identity against the single-device lexicographic oracle, and the
+    per-shard rows audit. Multi-device CPU needs
+    --xla_force_host_platform_device_count set BEFORE jax initializes, so
+    this function only ORCHESTRATES: it re-invokes this module in a
+    subprocess with --sharded-worker (progress relayed from its stderr) and
+    parses the JSON section from its stdout."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, "-m", "benchmarks.bench_latency",
+           "--sharded-worker", "--iters", str(iters),
+           "--devices", str(devices), "--sharded-dim", str(dim),
+           "--sizes", *[str(n) for n in sizes],
+           "--shards", *[str(s) for s in shard_counts]]
+    proc = subprocess.run(cmd, env=env, cwd=root, capture_output=True,
+                          text=True, timeout=3600)
+    if proc.stderr:
+        print(proc.stderr, end="", flush=True)
+    if proc.returncode != 0:
+        raise RuntimeError("sharded bench worker failed:\n"
+                           + proc.stderr[-3000:])
+    return json.loads(proc.stdout)
+
+
+def _run_sharded_measurements(*, iters: int, sizes, shard_counts,
+                              devices: int, dim: int,
+                              k: int = _SHARDED_K,
+                              batch: int = _SHARDED_BATCH) -> dict:
+    """Measurement body of the sharded section. Runs INSIDE the
+    --sharded-worker subprocess (multi-device jax); prints progress to
+    stderr so stdout stays pure JSON for the parent."""
+    from repro.core.query import unified_query_ref
+    from repro.data.corpus import stream_corpus
+    from repro.kernels.arena_scan.sharded import (make_sharded_arena_scan,
+                                                  sharded_collective_bytes)
+    from repro.launch.mesh import make_mesh
+
+    def say(msg):
+        print(msg, file=sys.stderr, flush=True)
+
+    assert jax.device_count() >= max(shard_counts), (
+        f"worker sees {jax.device_count()} devices, "
+        f"needs {max(shard_counts)}")
+    out = {"k": k, "dim": dim, "batch": batch, "devices": devices,
+           "placement": "hash", "shard_counts": list(shard_counts),
+           "sizes": {}, "cost_curve": []}
+    for n in sizes:
+        ccfg = CorpusConfig(n_docs=n, dim=dim)
+        cols = {"emb": np.empty((n, dim), np.float32),
+                "tenant": np.empty(n, np.int32),
+                "category": np.empty(n, np.int32),
+                "updated_at": np.empty(n, np.int32),
+                "acl": np.empty(n, np.uint32),
+                "doc_id": np.empty(n, np.int32)}
+        i = 0
+        for ch in stream_corpus(ccfg):
+            m = int(ch.emb.shape[0])
+            for name, arr in cols.items():
+                arr[i:i + m] = np.asarray(getattr(ch, name))
+            i += m
+        say(f"sharded: N={n} corpus streamed in {-(-n // 65_536)} chunks "
+            f"(host holds one chunk + the arena columns)")
+        qj = jnp.asarray(make_queries(ccfg, 1, batch=batch, seed=11)[0])
+        pred = jnp.asarray(Predicate().as_array())
+        row = {"arena_rows": n, "arena_bytes": n * dim * 4, "shards": {}}
+        s1_p50 = None
+        for S in shard_counts:
+            rps = n // S
+            # hash placement realized directly: doc d owns slot
+            # (d % S) * rps + d // S — region r is slots [r*rps, (r+1)*rps)
+            order = np.concatenate([np.arange(r, n, S) for r in range(S)])
+            store = {name: jnp.asarray(arr[order])
+                     for name, arr in cols.items()}
+            store["version"] = jnp.zeros(n, jnp.int32)
+            store["commit_ts"] = jnp.int32(1)
+            store["n_live"] = jnp.int32(n)
+            mesh = make_mesh((S,), ("data",))
+            raw = make_sharded_arena_scan(mesh, ("data",), n, k)
+            fn = jax.jit(raw)
+            s, sl, rows = fn(store, qj, pred)
+            s0, i0 = unified_query_ref(store, qj, pred, k)
+            doc_col = cols["doc_id"][order]
+            ids = np.where(np.asarray(sl) >= 0, doc_col[np.asarray(sl)], -1)
+            ids0 = np.where(np.asarray(i0) >= 0, doc_col[np.asarray(i0)], -1)
+            bit_identical = bool(
+                np.array_equal(np.asarray(s), np.asarray(s0))
+                and np.array_equal(ids, ids0))
+            recall = float((ids == ids0).mean())
+            cbytes = int(sharded_collective_bytes(raw, store, qj, pred))
+            t = percentiles(timeit(lambda: fn(store, qj, pred), iters=iters))
+            if S == shard_counts[0]:
+                s1_p50 = t["p50"]
+            cell = {"scan_ms": t, "collective_bytes": cbytes,
+                    "payload_bound_bytes": 2 * S * batch * k * 8,
+                    "collective_frac_of_arena": cbytes / row["arena_bytes"],
+                    "shard_rows_scanned": np.asarray(rows).tolist(),
+                    "bit_identical": bit_identical, "recall_at_k": recall,
+                    "speedup_vs_s1_p50": (s1_p50 / max(t["p50"], 1e-9)
+                                          if s1_p50 is not None else None)}
+            row["shards"][str(S)] = cell
+            say(f"sharded: N={n:8d} S={S}  p50={t['p50']:8.2f}ms  "
+                f"collective={cbytes}B (bound {cell['payload_bound_bytes']}B"
+                f", {cell['collective_frac_of_arena']:.2e} of arena)  "
+                f"rows/shard={rps}  bit_identical={bit_identical}")
+            del store, fn, raw
+        out["cost_curve"].append(
+            [n, row["shards"][str(shard_counts[-1])]["scan_ms"]["p50"]])
+        out["sizes"][str(n)] = row
+        del cols
     return out
 
 
@@ -604,7 +750,6 @@ def run_batched_vs_looped(db, ccfg, *, iters: int, engine: str, k: int,
 
 def _main():
     import argparse
-    import json
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--gsweep-only", action="store_true",
                     help="run only the group_sweep section (CI regression "
@@ -615,6 +760,12 @@ def _main():
     ap.add_argument("--paged-only", action="store_true",
                     help="run only the paged_scan section (CI regression "
                          "gate); writes {'paged_scan': ...} to --out")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="run only the sharded section (CI regression "
+                         "gate; spawns one multi-device subprocess); "
+                         "writes {'sharded': ...} to --out")
+    ap.add_argument("--sharded-worker", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: the subprocess body
     ap.add_argument("--page-rows", type=int, default=1 << 15,
                     help="with --paged-only: rows per page tile")
     ap.add_argument("--iters", type=int, default=None)
@@ -622,13 +773,43 @@ def _main():
                     help="with --gsweep-only: group counts to measure "
                          "(default 1 2 4 8 16; CI gates on 8 alone)")
     ap.add_argument("--sizes", type=int, nargs="+", default=None,
-                    help="with --hybrid-only: corpus sizes to measure "
-                         "(default 50000 alone — the gated point)")
+                    help="with --hybrid-only/--sharded-only: corpus sizes "
+                         "to measure (hybrid default 50000 — the gated "
+                         "point; sharded default 250000 1000000, CI uses "
+                         "250000 alone)")
+    ap.add_argument("--shards", type=int, nargs="+", default=None,
+                    help="with --sharded-only: shard counts to measure "
+                         "(default 1 2 4 8)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="with --sharded-only: emulated host device count "
+                         "for the worker subprocess (default 8)")
+    ap.add_argument("--sharded-dim", type=int, default=64,
+                    help="with --sharded-only: embedding dim of the "
+                         "streamed bench corpus (default 64)")
     ap.add_argument("--out", default=None,
-                    help="with --gsweep-only/--hybrid-only: output JSON "
-                         "path (default results/bench_latency.json is NOT "
-                         "touched)")
+                    help="with --gsweep-only/--hybrid-only/--sharded-only: "
+                         "output JSON path (default "
+                         "results/bench_latency.json is NOT touched)")
     args = ap.parse_args()
+    if args.sharded_worker:
+        section = _run_sharded_measurements(
+            iters=args.iters or 10,
+            sizes=tuple(args.sizes) if args.sizes else (250_000, 1_000_000),
+            shard_counts=tuple(args.shards) if args.shards else (1, 2, 4, 8),
+            devices=args.devices, dim=args.sharded_dim)
+        print(json.dumps(section))
+        return
+    if args.sharded_only:
+        section = run_sharded_section(
+            iters=args.iters or 10,
+            sizes=tuple(args.sizes) if args.sizes else (250_000, 1_000_000),
+            shard_counts=tuple(args.shards) if args.shards else (1, 2, 4, 8),
+            devices=args.devices, dim=args.sharded_dim)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"sharded": section}, f, indent=1)
+            print(f"wrote {args.out}")
+        return
     if args.gsweep_only:
         sweep = run_group_sweep(iters=args.iters or 20,
                                 gs=tuple(args.gs) if args.gs else

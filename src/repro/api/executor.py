@@ -87,6 +87,18 @@ class ExecStats:
     stale_epoch_rejected: int = 0 # poisoned cache reads refused because the
                                   # entry's commit-epoch key no longer matches
                                   # the live snapshot (chaos site cache.stale)
+    shards_used: int = 0          # mesh shard count S of the sharded engine's
+                                  # programs (0 = never dispatched sharded)
+    collective_bytes: int = 0     # cross-device wire bytes moved by sharded
+                                  # launches, accumulated from the compiled
+                                  # HLO's collective ops — the O(S*B*k)
+                                  # merge-payload audit (constant in arena N)
+    shard_rows_scanned: list = dataclasses.field(default_factory=list)
+                                  # per-shard rows scored by sharded launches
+                                  # (index = shard id). Under tenant-affine
+                                  # placement a tenant-scoped query credits
+                                  # ONLY its owning shard — the structural-
+                                  # skip audit explain() surfaces.
 
 
 class CompiledShapes:
@@ -98,7 +110,8 @@ class CompiledShapes:
     identity (fusion mode + query-term-count bucket + weights, which bake
     into the compiled program). Paged launches key on their page size too:
     paged and resident regimes compile different programs (different grid
-    + DMA schedule). Bucketed batching guarantees that any group whose
+    + DMA schedule), and sharded launches on their mesh shard count (the
+    merge gathers S*k candidates — an S-dependent shape). Bucketed batching guarantees that any group whose
     shape is in this set reuses the already-compiled program (XLA caches by
     shape). `touch()` returns True on a hit and records the miss otherwise;
     evicting past ``cap`` models a bounded compile cache, so a shape falling
@@ -128,8 +141,9 @@ class CompiledShapes:
 
     def touch(self, engine: str, bucket: int, k: int,
               groups: int | None = None, lex=None,
-              page_rows: int | None = None) -> bool:
-        key = (engine, bucket, k, groups, lex, page_rows)
+              page_rows: int | None = None,
+              shards: int | None = None) -> bool:
+        key = (engine, bucket, k, groups, lex, page_rows, shards)
         if key in self._lru:
             self.hits += 1
             self._lru.move_to_end(key)
@@ -151,6 +165,20 @@ def _pad_rows(q: np.ndarray, bucket: int) -> np.ndarray:
         [q, np.zeros((bucket - q.shape[0], q.shape[1]), q.dtype)], axis=0)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedHandle:
+    """Compiled sharded-engine entry the RagDB caches per (k, n_rows,
+    placement): the shard-mapped program plus the static facts the stats
+    audit needs. ``fn(store, q, pred) -> (scores (B,k), slots (B,k),
+    rows_scanned (S,))`` — see kernels/arena_scan/sharded.py.
+    ``collective_bytes`` is measured ONCE from the compiled HLO
+    (`sharded_collective_bytes`), not re-lowered per launch."""
+    fn: object
+    n_shards: int
+    collective_bytes: int
+    placement: str = "hash"
+
+
 @dataclasses.dataclass
 class _Hot:
     """One in-flight hot-tier device program: launched, NOT yet synced.
@@ -160,7 +188,10 @@ class _Hot:
     grouped launch whose padding rows point at a BLOCK_ALL blocker lane:
     finish asserts those rows allocated no result rows (k=0 semantics).
     ``extra`` carries the second per-signal list of an unfused-rrf hybrid
-    launch (synced into ``extra_np`` at finish)."""
+    launch (synced into ``extra_np`` at finish). ``shard_rows`` is the
+    sharded engine's per-shard rows-scanned audit vector (a device future
+    until finish, a numpy (S,) after), with ``shard_meta`` carrying the
+    (n_shards, collective_bytes) facts of the launching handle."""
     s: jax.Array
     sl: jax.Array
     rows: int                     # arena rows this program scored
@@ -168,6 +199,8 @@ class _Hot:
     pad_check: int | None = None  # first padded (blocker-lane) row index
     extra: tuple | None = None    # (lex_s, lex_i) futures (hybrid rrf lists)
     extra_np: tuple | None = None # synced extra
+    shard_rows: object = None     # (S,) per-shard rows scanned (sharded only)
+    shard_meta: tuple | None = None  # (n_shards, collective_bytes)
 
 
 def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
@@ -177,8 +210,9 @@ def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
     """Launch one retrieval device program WITHOUT syncing on its result
     (jax dispatch is async: the arrays are futures until device_get).
 
-    `sharded_fn` is the cached make_sharded_query callable when engine ==
-    'sharded'; `ivf`/`nprobe` are the IVFIndex and probe depth when engine
+    `sharded_fn` is the RagDB's cached `ShardedHandle` (or a bare 2-output
+    callable, the legacy contract without the per-shard audit) when engine
+    == 'sharded'; `ivf`/`nprobe` are the IVFIndex and probe depth when engine
     == 'ivf'; `n_valid` is the real row count when q is bucket-padded (the
     probe union must come from real rows — zero padding rows would drag
     arbitrary clusters into the union). ``skip_rescan`` waives the ivf
@@ -192,6 +226,12 @@ def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
     if engine == "sharded":
         if sharded_fn is None:
             raise ValueError("engine='sharded' requires a mesh-built RagDB")
+        if isinstance(sharded_fn, ShardedHandle):
+            s, sl, rows_vec = sharded_fn.fn(store, q, pred.as_array())
+            return _Hot(s, sl, n_arena, shard_rows=rows_vec,
+                        shard_meta=(sharded_fn.n_shards,
+                                    sharded_fn.collective_bytes))
+        # bare callable (legacy 2-output contract): no per-shard audit
         s, sl = sharded_fn(store, q, pred.as_array())
         return _Hot(s, sl, n_arena)
     if engine == "ivf":
@@ -229,6 +269,12 @@ def _finish_hot(hot: _Hot) -> tuple[np.ndarray, np.ndarray]:
     to ONE exact rescan — completeness beats speed, and the extra arena
     scan shows up in `hot.rows` so the audit trail stays honest."""
     s, sl = jax.device_get((hot.s, hot.sl))
+    if hot.shard_rows is not None:
+        # sharded: the per-shard audit vector replaces the whole-arena row
+        # count — under the tenant-affine gate only the owning shard scans,
+        # and rows_scanned must reflect the rows actually scored
+        hot.shard_rows = np.asarray(jax.device_get(hot.shard_rows))
+        hot.rows = int(hot.shard_rows.sum())
     if hot.extra is not None:
         hot.extra_np = tuple(np.asarray(a) for a in jax.device_get(hot.extra))
         if hot.pad_check is not None:
@@ -250,16 +296,37 @@ def _finish_hot(hot: _Hot) -> tuple[np.ndarray, np.ndarray]:
     return s, sl
 
 
+def _note_sharded(stats: ExecStats | None, hot: _Hot) -> None:
+    """Credit one finished sharded launch to the stats: shard count, the
+    compiled program's collective wire bytes, and the per-shard rows-scanned
+    vector (extended if a later mesh is wider)."""
+    if stats is None or hot.shard_meta is None:
+        return
+    n_shards, cbytes = hot.shard_meta
+    stats.shards_used = max(stats.shards_used, n_shards)
+    stats.collective_bytes += cbytes
+    if hot.shard_rows is not None:
+        rows = [int(r) for r in hot.shard_rows]
+        if len(stats.shard_rows_scanned) < len(rows):
+            stats.shard_rows_scanned.extend(
+                [0] * (len(rows) - len(stats.shard_rows_scanned)))
+        for i, r in enumerate(rows):
+            stats.shard_rows_scanned[i] += r
+
+
 def _dispatch(store: Store, q: jax.Array, pred: Predicate, k: int,
               engine: str, sharded_fn=None, ivf=None, nprobe=None,
-              n_valid: int | None = None, page_rows: int | None = None):
+              n_valid: int | None = None, page_rows: int | None = None,
+              stats: ExecStats | None = None):
     """One retrieval device program, launched and synced. Returns
     (scores, slots, rows_scanned) where rows_scanned is the arena rows this
     program scored — the full arena for the exact engines, the probed
-    candidate set (plus any completeness rescan) for ivf."""
+    candidate set (plus any completeness rescan) for ivf, the per-shard sum
+    for sharded (whose shard-level audit lands in ``stats`` directly)."""
     hot = _launch_hot(store, q, pred, k, engine, sharded_fn, ivf, nprobe,
                       n_valid, page_rows=page_rows)
     s, sl = _finish_hot(hot)
+    _note_sharded(stats, hot)
     return s, sl, hot.rows
 
 
@@ -393,7 +460,7 @@ def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
             q_g = _pad_rows(q_g, bucket)
         s, sl, rows = _dispatch(store, jnp.asarray(q_g), pred, k, engine,
                                 sharded_fn, ivf, nprobe, n_valid,
-                                page_rows=page_rows)
+                                page_rows=page_rows, stats=stats)
         s, sl = np.asarray(s), np.asarray(sl)
         scores[idxs], slots[idxs] = s[:n_valid], sl[:n_valid]
         if stats is not None:
@@ -545,6 +612,7 @@ def query_tiered(hot_store: Store, warm, q: jax.Array, pred: Predicate,
         ws, wi = warm.query(q[:n_logical], pred, k, pushdown=True)
         warm_calls = warm.stats.round_trips - rt0
     hs, hi = _finish_hot(hot)
+    _note_sharded(stats, hot)
     if stats is not None:
         stats.device_calls += 1 + warm_calls
         stats.queries += n_logical
@@ -716,7 +784,7 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
             if shapes is not None:
                 bucket = bucket_rows(n_valid)
                 shapes.touch(plan.engine, bucket, k,
-                             page_rows=plan.page_rows)
+                             page_rows=plan.page_rows, shards=plan.shards)
                 if stats is not None:
                     stats.padded_rows += bucket - n_valid
                 q_g = _pad_rows(q_g, bucket)
@@ -795,6 +863,7 @@ def finish_plans(pending: InFlightPlans):
     for (unit, member_idxs, hot), probes in zip(pending.inflight,
                                                 pending.warm_results):
         hs, hi = _finish_hot(hot)
+        _note_sharded(stats, hot)
         if stats is not None:
             stats.rows_scanned += hot.rows
         off = 0

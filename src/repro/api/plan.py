@@ -125,6 +125,14 @@ class PhysicalPlan:
                                       # audit annotation, never part of the
                                       # group key (the degraded engine/
                                       # nprobe already key differently)
+    shards: int | None = None         # sharded engine: mesh shard count S
+                                      # (None = single-device engines). The
+                                      # merge program shape is S-dependent
+                                      # (S·k gathered candidates), so S is
+                                      # part of every compiled-shape key.
+    placement: str | None = None      # sharded engine: "hash" | "tenant"
+                                      # row placement (tenant-affine enables
+                                      # the owning-shard-only scan gate)
 
     @property
     def group_key(self) -> tuple:
@@ -140,9 +148,12 @@ class PhysicalPlan:
         per-row data, exactly like the query embedding. ``page_rows`` is
         part of the key because paged and resident launches compile
         different programs (different grid + DMA schedule), even though
-        they return the same bits."""
+        they return the same bits. ``shards``/``placement`` likewise: the
+        sharded merge gathers S·k candidates (an S-dependent shape) and
+        the tenant-affine gate compiles a different local program."""
         return (self.pred, self.logical.k, self.engine, self.route,
-                self.nprobe, self.lex, self.page_rows)
+                self.nprobe, self.lex, self.page_rows, self.shards,
+                self.placement)
 
     @property
     def fusable(self) -> bool:
@@ -161,10 +172,10 @@ class PhysicalPlan:
         fused grouped scan (planner.fuse_batch): same LIMIT k, same engine,
         same tier route, same score mix (``lex`` — None for dense engines,
         so dense and hybrid groups never fuse together), same paged/
-        resident regime — the predicates themselves are what the grouped
-        kernel keeps apart."""
+        resident regime, same mesh shape — the predicates themselves are
+        what the grouped kernel keeps apart."""
         return (self.logical.k, self.engine, self.route, self.lex,
-                self.page_rows)
+                self.page_rows, self.shards, self.placement)
 
     def explain(self) -> str:
         lp = self.logical
@@ -202,6 +213,16 @@ class PhysicalPlan:
                 f"  paging:    paged arena scan, {self.page_rows} rows/page "
                 f"-> {n_pages} page(s), DMA double-buffered (bit-identical "
                 f"to resident)")
+        if self.engine == "sharded" and self.shards is not None:
+            rows_per = self.n_rows // max(self.shards, 1)
+            owning = ("owning shard only (tenant-affine gate)"
+                      if self.placement == "tenant" and lp.tenant != ANY_TENANT
+                      else f"all {self.shards} shards")
+            lines.append(
+                f"  sharding:  {self.shards} shard(s) x {rows_per} rows "
+                f"({self.placement or 'hash'} placement), scan {owning}; "
+                f"merge gathers {self.shards}*{lp.k} candidates "
+                f"(O(S*B*k) wire bytes)")
         lines += [
             f"  route:     {self.route:8s} ({self.route_reason})",
             f"  batching:  predicate-group key {self.group_key!r}",

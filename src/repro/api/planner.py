@@ -240,7 +240,7 @@ def fuse_batch(plans, *, cfg: PlannerConfig = PlannerConfig()) -> list[FusedGrou
                     f"{gsz} group(s) share fuse key {p.fuse_key!r} "
                     f"< fuse_min_groups={cfg.fuse_min_groups}"))
             continue
-        k, engine, route, _lex, _page = group[0].fuse_key
+        k, engine, route, _lex, _page, _shards, _placement = group[0].fuse_key
         n_rows = group[0].n_rows
         est = (cfg.cost_model.estimate_ms(engine, n_rows)
                if cfg.cost_model is not None else None)
@@ -418,7 +418,8 @@ def choose_route(logical: LogicalPlan, *, hot_window_s: int, now_ts: int,
 def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
                  now_ts: int, warm_rows: int,
                  cfg: PlannerConfig = PlannerConfig(),
-                 has_mesh: bool = False, index=None,
+                 has_mesh: bool = False, mesh_shards: int = 0,
+                 placement: str | None = None, index=None,
                  lex=None, warm_lex: bool = False) -> PhysicalPlan:
     """Compile WHAT (LogicalPlan) into HOW (PhysicalPlan): engine + route +
     the predicate-group batching key, with the cost estimate attached so
@@ -429,7 +430,11 @@ def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
     clauses, which compile to the "hybrid" engine with the score-mix
     identity (fusion mode, query-term-count bucket, weights) stamped into
     the group key; ``warm_lex`` says whether the warm tier carries lanes
-    (hybrid plans only spill warm when it does)."""
+    (hybrid plans only spill warm when it does). ``mesh_shards`` /
+    ``placement`` describe the RagDB's mesh (shard count S and row
+    placement kind): sharded plans carry both — S shapes the compiled
+    merge (S·k gathered candidates) and a "tenant" placement lets
+    explain() show which shards the scan will actually touch."""
     engine, engine_reason = choose_engine(logical, n_rows=n_rows, cfg=cfg,
                                           has_mesh=has_mesh,
                                           has_index=index is not None,
@@ -472,6 +477,12 @@ def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
         q_rows = 1 if logical.q is None else len(np.atleast_2d(logical.q))
         ivf_est = (index.n_clusters, index.cluster_cap,
                    index.candidate_rows(nprobe, rows=q_rows))
+    shards = plc = None
+    if engine == "sharded":
+        if not has_mesh or mesh_shards < 1:
+            raise ValueError("engine='sharded' requires a mesh-built RagDB")
+        shards = mesh_shards
+        plc = placement or "hash"
     return PhysicalPlan(logical=logical, pred=logical.predicate(),
                         engine=engine, engine_reason=engine_reason,
                         route=route, route_reason=route_reason, n_rows=n_rows,
@@ -479,7 +490,7 @@ def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
                         cost_source=("measured" if est is not None
                                      else "static-thresholds"),
                         nprobe=nprobe, ivf_est=ivf_est, lex=lex_key,
-                        page_rows=page_rows)
+                        page_rows=page_rows, shards=shards, placement=plc)
 
 
 # ---------------------------------------------------------------------------
@@ -489,7 +500,8 @@ def compile_plan(logical: LogicalPlan, *, n_rows: int, hot_window_s: int,
 def degrade_plan(plan: PhysicalPlan, *, n_rows: int, hot_window_s: int,
                  now_ts: int, warm_rows: int,
                  cfg: PlannerConfig = PlannerConfig(),
-                 has_mesh: bool = False, index=None,
+                 has_mesh: bool = False, mesh_shards: int = 0,
+                 placement: str | None = None, index=None,
                  lex=None, warm_lex: bool = False) -> PhysicalPlan | None:
     """One rung DOWN the degradation ladder, or None when it is exhausted.
 
@@ -529,7 +541,8 @@ def degrade_plan(plan: PhysicalPlan, *, n_rows: int, hot_window_s: int,
     True
     """
     kw = dict(n_rows=n_rows, hot_window_s=hot_window_s, now_ts=now_ts,
-              warm_rows=warm_rows, cfg=cfg, has_mesh=has_mesh, index=index,
+              warm_rows=warm_rows, cfg=cfg, has_mesh=has_mesh,
+              mesh_shards=mesh_shards, placement=placement, index=index,
               lex=lex, warm_lex=warm_lex)
     if plan.engine == "ivf" and plan.nprobe is not None:
         floor = max(int(cfg.degrade_min_nprobe), 1)

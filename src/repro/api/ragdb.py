@@ -37,13 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.executor import (CompiledShapes, ExecStats, InFlightPlans,
-                                finish_plans, launch_plans)
+                                ShardedHandle, finish_plans, launch_plans)
 from repro.api.plan import ALL_BITS, ANY_TENANT, LogicalPlan, PhysicalPlan
 from repro.api.planner import PlannerConfig, compile_plan, degrade_plan
 from repro.core.ivf import IVFConfig, IVFIndex, build_ivf
-from repro.core.query import make_sharded_query
 from repro.core.router import TieredRouter
-from repro.core.store import DocBatch, StoreConfig
+from repro.core.store import DocBatch, ShardPlacement, StoreConfig
 from repro.core.tenancy import Principal, TenantRegistry, category_mask
 from repro.core.transactions import TransactionLog
 from repro.index.lexical import LexicalArena, LexicalConfig
@@ -221,7 +220,7 @@ class RagDB:
     def __init__(self, hot_cfg: StoreConfig, *, warm_cfg: StoreConfig | None = None,
                  hot_window_s: int | None = None, now_ts: int = 0,
                  planner_cfg: PlannerConfig = PlannerConfig(),
-                 mesh=None, shard_axes=None,
+                 mesh=None, shard_axes=None, placement: str = "hash",
                  result_cache_size: int = 256, shape_cache_size: int = 32,
                  lexical_cfg: LexicalConfig | None = None):
         tiered = warm_cfg is not None
@@ -233,18 +232,40 @@ class RagDB:
             # plumbing but is never routed to (hot window covers everything)
             # — give it a 1-row arena instead of duplicating the hot one.
             warm_cfg = dataclasses.replace(hot_cfg, capacity=1)
+        # mesh-built RagDB: the hot arena is row-sharded in contiguous
+        # slot-aligned regions (ShardPlacement), and ``placement`` picks the
+        # routing key — "hash" (doc_id % S) or "tenant" (tenant % S, which
+        # lets the sharded engine skip non-owning shards structurally)
+        self.mesh = mesh
+        self.shard_axes = (shard_axes if shard_axes is not None
+                           else (tuple(mesh.axis_names) if mesh is not None
+                                 else None))
+        self.placement = placement if mesh is not None else None
+        self.n_shards = 0
+        hot_placement = None
+        if mesh is not None:
+            ax = ((self.shard_axes,) if isinstance(self.shard_axes, str)
+                  else tuple(self.shard_axes))
+            n_shards = 1
+            for a in ax:
+                n_shards *= mesh.shape[a]
+            self.n_shards = n_shards
+            hot_placement = ShardPlacement(n_shards=n_shards,
+                                           capacity=hot_cfg.capacity,
+                                           kind=placement)
         self.router = TieredRouter(
             hot_cfg, warm_cfg,
             hot_window_s=hot_window_s if tiered else _FOREVER,
-            now_ts=now_ts)
+            now_ts=now_ts, hot_placement=hot_placement)
         self.tenants = TenantRegistry()
         self.planner_cfg = planner_cfg
-        self.mesh, self.shard_axes = mesh, shard_axes
         self.stats = ExecStats()
         # monotonic clock for cache-entry ages (staleness-bounded serves);
         # tests and the fake-clock scheduler override it
         self.clock = time.monotonic
-        self._sharded_fns: dict[int, object] = {}     # k -> compiled query
+        # (k, n_rows, placement) -> ShardedHandle (compiled program + the
+        # static collective-bytes / shard-count facts the stats audit needs)
+        self._sharded_fns: dict[tuple, ShardedHandle] = {}
         # adaptive serving fast path: bucketed program-shape reuse + the
         # snapshot-exact result cache (size 0 disables either).
         self.shapes = (CompiledShapes(shape_cache_size)
@@ -449,16 +470,31 @@ class RagDB:
             hot_window_s=self.router.hot_window_s, now_ts=self.router.now_ts,
             warm_rows=self.router.warm.n_docs, cfg=self.planner_cfg,
             has_mesh=self.mesh is not None, index=self.index,
-            lex=self.lex, warm_lex=self.router.warm.lex is not None)
+            lex=self.lex, warm_lex=self.router.warm.lex is not None,
+            mesh_shards=self.n_shards, placement=self.placement)
 
-    def _sharded_fn(self, k: int):
-        fn = self._sharded_fns.get(k)
-        if fn is None:
-            snap = self.log.snapshot()
-            fn = make_sharded_query(self.mesh, self.shard_axes,
-                                    snap["emb"].shape[0], k)
-            self._sharded_fns[k] = fn
-        return fn
+    def _sharded_fn(self, k: int) -> ShardedHandle:
+        """The compiled sharded-engine handle for LIMIT ``k`` over the
+        current arena shape. The collective wire bytes are measured ONCE per
+        handle from the compiled HLO (at the B=1 query shape — the lane-
+        padded (8, k) gather every B <= 8 launch shares)."""
+        from repro.kernels.arena_scan.sharded import (
+            make_sharded_arena_scan, sharded_collective_bytes)
+        snap = self.log.snapshot()
+        n_rows = snap["emb"].shape[0]
+        key = (k, n_rows, self.placement)
+        handle = self._sharded_fns.get(key)
+        if handle is None:
+            fn = make_sharded_arena_scan(self.mesh, self.shard_axes, n_rows,
+                                         k, placement_kind=self.placement)
+            cbytes = sharded_collective_bytes(
+                fn, snap, np.zeros((1, self.hot_cfg.dim), np.float32),
+                np.zeros((4,), np.int32))
+            handle = ShardedHandle(fn=fn, n_shards=self.n_shards,
+                                   collective_bytes=cbytes,
+                                   placement=self.placement)
+            self._sharded_fns[key] = handle
+        return handle
 
     def _result_key(self, plan: PhysicalPlan) -> tuple | None:
         """Snapshot-exact cache key for one plan, or None when the plan is
@@ -502,7 +538,8 @@ class RagDB:
             now_ts=self.router.now_ts, warm_rows=self.router.warm.n_docs,
             cfg=self.planner_cfg, has_mesh=self.mesh is not None,
             index=self.index, lex=self.lex,
-            warm_lex=self.router.warm.lex is not None)
+            warm_lex=self.router.warm.lex is not None,
+            mesh_shards=self.n_shards, placement=self.placement)
 
     def execute(self, plans: list[PhysicalPlan], *, use_cache: bool = True,
                 stale_within_s: float | None = None):
@@ -699,6 +736,12 @@ class RagDB:
             f"  ivf index:    {index}",
             f"  lexical:      {lexical}",
         ]
+        if self.mesh is not None:
+            lines.append(
+                f"  sharded:      {self.n_shards} shard(s) "
+                f"({self.placement} placement), "
+                f"{st.collective_bytes} collective bytes moved, "
+                f"per-shard rows scanned {st.shard_rows_scanned}")
         if self.faults is not None:
             f = self.faults
             lines.append(

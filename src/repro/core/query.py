@@ -111,7 +111,8 @@ def unified_query_ref(store: Store, q: jax.Array, pred: jax.Array, k: int):
     return top_scores, top_idx
 
 
-def make_sharded_query(mesh, axes, n_rows: int, k: int):
+def make_sharded_query(mesh, axes, n_rows: int, k: int,
+                       placement_kind: str = "hash"):
     """Distributed unified query (§Perf iteration: rag-unified/query_hot).
 
     The naive GSPMD lowering of `unified_query_ref` over a row-sharded corpus
@@ -120,36 +121,22 @@ def make_sharded_query(mesh, axes, n_rows: int, k: int):
     scan per shard, keeps only each shard's local top-k, and merges a
     constant-size (shards x k) candidate list: collective payload drops from
     O(B x N) to O(B x shards x k), independent of corpus size.
+
+    Thin wrapper over `repro.kernels.arena_scan.sharded.make_sharded_arena_scan`
+    (the full engine entry point, which additionally returns the per-shard
+    `rows_scanned` audit vector) keeping the 2-output contract this module has
+    always exposed. Selection is exact lexicographic (score desc, global
+    doc_id asc) — placement-invariant by construction.
     """
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
+    from repro.kernels.arena_scan.sharded import make_sharded_arena_scan
+    fn = make_sharded_arena_scan(mesh, axes, n_rows, k,
+                                 placement_kind=placement_kind)
 
-    ax = (axes,) if isinstance(axes, str) else tuple(axes)
-    n_shards = 1
-    for a in ax:
-        n_shards *= mesh.shape[a]
-    n_local = n_rows // n_shards
+    def query(store, q, pred):
+        scores, slots, _rows = fn(store, q, pred)
+        return scores, slots
 
-    def local_fn(store_l, q_l, pred_l):
-        mask = predicate_mask(store_l, pred_l)
-        scores = q_l.astype(jnp.float32) @ store_l["emb"].astype(jnp.float32).T
-        scores = jnp.where(mask[None, :], scores, NEG_INF)
-        k_eff = min(k, n_local)
-        s, i = jax.lax.top_k(scores, k_eff)
-        i = jnp.where(s > NEG_INF, i + jax.lax.axis_index(ax) * n_local, -1)
-        s_all = jax.lax.all_gather(s, ax, axis=1, tiled=True)   # (B, shards*k)
-        i_all = jax.lax.all_gather(i, ax, axis=1, tiled=True)
-        top_s, pos = jax.lax.top_k(s_all, k)
-        top_i = jnp.take_along_axis(i_all, pos, axis=1)
-        return top_s, jnp.where(top_s > NEG_INF, top_i, -1)
-
-    row = P(ax)
-    store_specs = {"emb": P(ax, None), "tenant": row, "category": row,
-                   "updated_at": row, "acl": row, "doc_id": row, "version": row,
-                   "commit_ts": P(), "n_live": P()}
-    return shard_map(local_fn, mesh=mesh,
-                     in_specs=(store_specs, P(), P()),
-                     out_specs=(P(), P()), check_rep=False)
+    return query
 
 
 def unified_query(store: Store, q: jax.Array, pred: Predicate, k: int,

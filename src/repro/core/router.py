@@ -54,8 +54,11 @@ class TieredResult(tuple):
 
 class TieredRouter:
     def __init__(self, hot_cfg: StoreConfig, warm_cfg: StoreConfig, *,
-                 hot_window_s: int, now_ts: int):
-        self.hot = TransactionLog(hot_cfg, empty(hot_cfg))
+                 hot_window_s: int, now_ts: int, hot_placement=None):
+        # hot_placement: optional core.store.ShardPlacement — a mesh-built
+        # RagDB routes hot-tier slot allocation through per-shard regions
+        self.hot = TransactionLog(hot_cfg, empty(hot_cfg),
+                                  placement=hot_placement)
         self.warm = SplitStackClient(warm_cfg)
         self.cold: dict[int, dict[str, Any]] = {}
         self.hot_window_s = hot_window_s

@@ -64,6 +64,58 @@ def normalize(cfg: StoreConfig, emb: jax.Array) -> jax.Array:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardPlacement:
+    """Row placement over a device mesh: the arena is split into
+    ``n_shards`` contiguous, equally sized regions (slot-aligned with every
+    lane — vector, lexical, metadata — because they all index by slot), and
+    shard s owns the slot range [s * rows_per_shard, (s+1) * rows_per_shard).
+
+    kind:
+      * ``"hash"``   — docs route by ``doc_id % n_shards`` (balanced; the
+        perf-bench default).
+      * ``"tenant"`` — docs route by ``tenant % n_shards`` (tenant-affine: a
+        tenant's rows live on ONE known shard, so a tenant-scoped query can
+        skip every other shard and cross-shard leakage is auditable by
+        per-shard ``rows_scanned``, not just masked by predicates).
+
+    The placement IS the global→(shard, local slot) id map: global slot g
+    lives on shard ``g // rows_per_shard`` at local offset
+    ``g % rows_per_shard`` — no lookup table, because regions are contiguous.
+    """
+    n_shards: int
+    capacity: int
+    kind: str = "hash"            # "hash" | "tenant"
+
+    def __post_init__(self):
+        if self.kind not in ("hash", "tenant"):
+            raise ValueError(f"unknown placement kind {self.kind!r}")
+        if self.capacity % self.n_shards:
+            raise ValueError(
+                f"capacity {self.capacity} not divisible by {self.n_shards} shards")
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.capacity // self.n_shards
+
+    def region(self, shard: int) -> tuple[int, int]:
+        """Slot range [start, stop) owned by ``shard``."""
+        return shard * self.rows_per_shard, (shard + 1) * self.rows_per_shard
+
+    def shard_of_slot(self, slot: int) -> int:
+        return slot // self.rows_per_shard
+
+    def locate(self, slot: int) -> tuple[int, int]:
+        """Global slot -> (shard, shard-local slot)."""
+        return divmod(slot, self.rows_per_shard)
+
+    def shard_of_doc(self, tenant: int, doc_id: int) -> int:
+        """Write-path routing: which shard's region a new doc allocates in."""
+        if self.kind == "tenant":
+            return int(tenant) % self.n_shards
+        return int(doc_id) % self.n_shards
+
+
+@dataclasses.dataclass(frozen=True)
 class DocBatch:
     """A batch of documents headed into the store (host-side container).
 

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.store import DocBatch, Store, StoreConfig, normalize
+from repro.core.store import (DocBatch, ShardPlacement, Store, StoreConfig,
+                              normalize)
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +110,11 @@ class IntentRecord:
     free_take: int = 0                        # recycled slots consumed (ingest)
     free_add: tuple = ()                      # slots returned (delete)
     cursor_after: int | None = None           # fresh-frontier cursor (ingest)
+    # sharded-arena allocator fields (ShardPlacement logs only; the legacy
+    # fields above stay () / None so the two allocators never mix):
+    shard_free_take: tuple = ()               # per-shard recycled counts
+    shard_free_add: tuple = ()                # (shard, slot) pairs (delete)
+    shard_cursors_after: tuple | None = None  # per-shard fresh frontiers
     ivf_op: tuple | None = None               # ("add", slots, emb) | ("remove", slots)
     lex_op: tuple | None = None               # (slots, terms, tfs)
 
@@ -126,12 +132,25 @@ class TransactionLog:
     wall-time for Table 2.
     """
 
-    def __init__(self, cfg: StoreConfig, store: Store):
+    def __init__(self, cfg: StoreConfig, store: Store,
+                 placement: ShardPlacement | None = None):
         self.cfg = cfg
         self._store = store
         self._cursor = 0
         self._slot_of_doc: dict[int, int] = {}
         self._free_slots: list[int] = []      # tombstoned slots, LIFO recycled
+        # sharded arena: rows route to their owning shard's contiguous slot
+        # region, each with its OWN fresh-frontier cursor and LIFO free list
+        # (shard-local slot recycling — a freed slot can only be reused by a
+        # doc that routes to the same shard, so placement never drifts).
+        self.placement = placement
+        if placement is not None:
+            if placement.capacity != cfg.capacity:
+                raise ValueError("placement capacity != store capacity")
+            self._shard_cursor = [placement.region(s)[0]
+                                  for s in range(placement.n_shards)]
+            self._shard_free: list[list[int]] = [
+                [] for _ in range(placement.n_shards)]
         self.write_latencies_s: list[float] = []
         # host mirror of the device commit_ts watermark: every commit bumps
         # both, so (snapshot identity) == (commit_count value) without a
@@ -196,14 +215,22 @@ class TransactionLog:
         if "alloc" not in rec.done:
             if rec.free_take:
                 del self._free_slots[len(self._free_slots) - rec.free_take:]
+            for sh, take in enumerate(rec.shard_free_take):
+                if take:
+                    free = self._shard_free[sh]
+                    del free[len(free) - take:]
             for d, s in rec.slot_updates:
                 self._slot_of_doc[d] = s
             for d in rec.slot_removals:
                 self._slot_of_doc.pop(d, None)
             if rec.free_add:
                 self._free_slots.extend(rec.free_add)
+            for sh, slot in rec.shard_free_add:
+                self._shard_free[sh].append(slot)
             if rec.cursor_after is not None:
                 self._cursor = rec.cursor_after
+            if rec.shard_cursors_after is not None:
+                self._shard_cursor = list(rec.shard_cursors_after)
             rec.done.add("alloc")
         crash(rec.op, "alloc")
         if "ivf" not in rec.done:
@@ -251,18 +278,49 @@ class TransactionLog:
         return "rolled-forward"
 
     # -- writes --------------------------------------------------------
+    def _alloc_slots(self, batch: DocBatch, m: int):
+        """Pick the m slots an ingest will write. Peek (don't pop) in both
+        allocators: state only advances at the journaled alloc step below, so
+        a failed device write leaks nothing. Returns (slot_list, the
+        IntentRecord alloc fields that publish the allocation)."""
+        if self.placement is None:
+            n_fresh_avail = self.cfg.capacity - self._cursor
+            if m > len(self._free_slots) + n_fresh_avail:
+                raise RuntimeError("store arena full — grow capacity or compact")
+            # recycle tombstoned slots first, then extend the fresh frontier
+            n_recycled = min(m, len(self._free_slots))
+            recycled = self._free_slots[len(self._free_slots) - n_recycled:][::-1]
+            n_fresh = m - n_recycled
+            slot_list = recycled + list(range(self._cursor, self._cursor + n_fresh))
+            return slot_list, dict(free_take=n_recycled,
+                                   cursor_after=self._cursor + n_fresh)
+        # sharded arena: each doc routes to its owning shard's slot region
+        # (hash or tenant-affine), recycling THAT shard's tombstones first
+        # (LIFO), then extending that shard's fresh frontier.
+        pl = self.placement
+        tenants = np.asarray(batch.tenant)
+        doc_ids = np.asarray(batch.doc_id)
+        take = [0] * pl.n_shards
+        cursors = list(self._shard_cursor)
+        slot_list: list[int] = []
+        for t, d in zip(tenants, doc_ids):
+            sh = pl.shard_of_doc(int(t), int(d))
+            free = self._shard_free[sh]
+            if take[sh] < len(free):
+                take[sh] += 1
+                slot_list.append(free[len(free) - take[sh]])
+            else:
+                if cursors[sh] >= pl.region(sh)[1]:
+                    raise RuntimeError(
+                        f"shard {sh} region full — grow capacity or rebalance")
+                slot_list.append(cursors[sh])
+                cursors[sh] += 1
+        return slot_list, dict(shard_free_take=tuple(take),
+                               shard_cursors_after=tuple(cursors))
+
     def ingest(self, batch: DocBatch) -> None:
         m = batch.size
-        n_fresh_avail = self.cfg.capacity - self._cursor
-        if m > len(self._free_slots) + n_fresh_avail:
-            raise RuntimeError("store arena full — grow capacity or compact")
-        # recycle tombstoned slots first, then extend the fresh frontier.
-        # Peek (don't pop) so a failed device write leaks nothing: allocator
-        # state only advances after the commit point below.
-        n_recycled = min(m, len(self._free_slots))
-        recycled = self._free_slots[len(self._free_slots) - n_recycled:][::-1]
-        n_fresh = m - n_recycled
-        slot_list = recycled + list(range(self._cursor, self._cursor + n_fresh))
+        slot_list, alloc_fields = self._alloc_slots(batch, m)
         slots = jnp.asarray(slot_list, jnp.int32)
         self._crash("ingest", "prepare")
         t0 = time.perf_counter()
@@ -274,11 +332,11 @@ class TransactionLog:
         rec = IntentRecord(
             op="ingest", epoch=self.commit_count + 1, store=new,
             slot_updates=tuple(zip(doc_ids, slot_list)),
-            free_take=n_recycled, cursor_after=self._cursor + n_fresh,
             ivf_op=("add", slot_list, np.asarray(batch.emb)),
             lex_op=(slot_list,
                     None if batch.terms is None else np.asarray(batch.terms),
-                    None if batch.tfs is None else np.asarray(batch.tfs)))
+                    None if batch.tfs is None else np.asarray(batch.tfs)),
+            **alloc_fields)
         self._wal = rec                     # write-ahead: journal the intent
         self._crash("ingest", "intent")
         self._publish(rec, inject=True)
@@ -312,10 +370,15 @@ class TransactionLog:
         rec = IntentRecord(
             op="delete", epoch=self.commit_count + 1, store=new,
             slot_removals=tuple(int(d) for d in doc_ids),
-            # tombstoned slots return to the allocator (free-slot recycling);
-            # they leave the ivf member table and drop their postings (df
-            # refunds) in the ivf/lex steps.
-            free_add=tuple(slot_list),
+            # tombstoned slots return to the allocator (free-slot recycling —
+            # to their OWNING shard's list under a placement, so a recycled
+            # slot is only ever reused by a doc that routes there); they leave
+            # the ivf member table and drop their postings (df refunds) in
+            # the ivf/lex steps.
+            free_add=() if self.placement is not None else tuple(slot_list),
+            shard_free_add=(tuple((self.placement.shard_of_slot(s), s)
+                                  for s in slot_list)
+                            if self.placement is not None else ()),
             ivf_op=("remove", slot_list),
             lex_op=(slot_list, None, None))
         self._wal = rec

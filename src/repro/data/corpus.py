@@ -142,6 +142,57 @@ def make_corpus(cfg: CorpusConfig) -> DocBatch:
                     terms=jnp.asarray(terms), tfs=jnp.asarray(tfs))
 
 
+def stream_corpus(cfg: CorpusConfig, chunk_rows: int = 65_536):
+    """Chunked corpus generator for bench-scale (million-row) ingest.
+
+    Yields `DocBatch` chunks of at most ``chunk_rows`` docs with globally
+    unique, monotonically increasing doc_ids, drawn from the same topic
+    mixture as `make_corpus` (the shared `topic_basis` stream). Host memory
+    stays O(chunk_rows x dim) instead of O(n_docs x dim), and each chunk
+    draws from its OWN derived rng stream — SeedSequence([seed, salt,
+    chunk_index]) — so chunk c is reproducible without generating chunks
+    0..c-1 (a resumable ingest can seek). The draw ORDER differs from
+    `make_corpus`, so the same cfg yields a statistically identical but not
+    byte-identical corpus; only `make_corpus` carries the seeded-bytes
+    contract the small fixed-seed tests rely on.
+
+    >>> cfg = CorpusConfig(n_docs=100, dim=8, vocab_size=512)
+    >>> chunks = list(stream_corpus(cfg, chunk_rows=64))
+    >>> [int(c.emb.shape[0]) for c in chunks]
+    [64, 36]
+    >>> int(chunks[1].doc_id[0])      # ids continue across chunks
+    64
+    """
+    start, chunk = 0, 0
+    while start < cfg.n_docs:
+        n = min(chunk_rows, cfg.n_docs - start)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, 0x57E4A, chunk]))
+        emb, tid = _topic_points(cfg, rng, n, with_topics=True)
+        tenant = rng.integers(0, cfg.n_tenants, n, dtype=np.int32)
+        category = rng.integers(0, cfg.n_categories, n, dtype=np.int32)
+        updated_at = rng.integers(0, cfg.days_span * DAY_S, n,
+                                  dtype=np.int64).astype(np.int32)
+        acl = np.zeros(n, dtype=np.uint32)
+        for _ in range(3):
+            bit = rng.integers(0, cfg.n_acl_groups, n)
+            on = rng.random(n) < 0.6
+            acl |= (np.uint32(1) << bit.astype(np.uint32)) * on.astype(np.uint32)
+        acl |= np.uint32(1) << rng.integers(
+            0, cfg.n_acl_groups, n).astype(np.uint32)
+        doc_id = np.arange(start, start + n, dtype=np.int32)
+        rng_lex = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, 0x7E45, chunk]))
+        terms, tfs = _doc_lexical(cfg, tid, rng_lex)
+        yield DocBatch(emb=jnp.asarray(emb), tenant=jnp.asarray(tenant),
+                       category=jnp.asarray(category),
+                       updated_at=jnp.asarray(updated_at),
+                       acl=jnp.asarray(acl), doc_id=jnp.asarray(doc_id),
+                       terms=jnp.asarray(terms), tfs=jnp.asarray(tfs))
+        start += n
+        chunk += 1
+
+
 def make_queries(cfg: CorpusConfig, n_queries: int, batch: int = 1, seed: int = 1) -> jax.Array:
     rng = np.random.default_rng(seed)
     q = _topic_points(cfg, rng, n_queries * batch)

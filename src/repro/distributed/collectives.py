@@ -12,12 +12,18 @@ def constrain(x, mesh: Mesh, spec: P):
 
 def topk_allgather_merge(scores: jax.Array, idx: jax.Array, axis, k: int):
     """Distributed top-k merge: each shard contributes its local (B, k) best;
-    gather k per shard and re-top-k. Payload O(shards*k) — constant in corpus
-    size (the unified query's scaling argument)."""
+    gather k per shard and reselect. Payload O(shards*k) — constant in corpus
+    size (the unified query's scaling argument).
+
+    Equal scores break by *global* id (ascending), NOT by gathered column
+    position: column position encodes shard order, so a positional tie-break
+    would make results depend on where rows happened to be placed. The
+    2-key sort keeps the merge placement-invariant (the sharded engine's
+    determinism contract — see kernels/arena_scan/sharded.py)."""
     s_all = jax.lax.all_gather(scores, axis, axis=1, tiled=True)
     i_all = jax.lax.all_gather(idx, axis, axis=1, tiled=True)
-    top_s, pos = jax.lax.top_k(s_all, k)
-    return top_s, jnp.take_along_axis(i_all, pos, axis=1)
+    neg_s, top_i = jax.lax.sort((-s_all, i_all), num_keys=2)
+    return -neg_s[:, :k], top_i[:, :k]
 
 
 def collective_bytes_of_hlo(hlo_text: str) -> dict[str, int]:

@@ -242,6 +242,69 @@ def _check_chaos_isolation(args):
     db.attach_faults(None)
 
 
+def _check_sharded_affine_isolation(args):
+    """SHARDED tenant-affine isolation: through a mesh-built RagDB (tenant
+    placement over every local device — S=1 in the tier-1 process, S=8 when
+    re-run from the distributed subprocess suite), a tenant-scoped query
+    (a) scans ONLY its owning shard (per-shard rows audit), (b) never
+    surfaces a POISONED foreign-tenant row crafted to out-score the whole
+    corpus, and (c) returns exactly the reference engine's bits."""
+    import jax
+
+    from repro.launch.mesh import make_mesh
+
+    emb, tenant, ts, cat, acl, pred, q, k = _corpus(args)
+    n = emb.shape[0]
+    S = jax.device_count()
+    tenant = np.abs(tenant).astype(np.int32) % 6    # live rows (placement key)
+    principal_tenant = abs(pred.tenant) % 6
+    # two poisoned rows, one per query row: a FOREIGN tenant, maximally
+    # eligible on every other clause, embedding aligned with the query so
+    # its dot score dwarfs every legitimate row — if any structural gate or
+    # mask leaked, it would top both k-lists
+    qn = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-6)
+    emb = np.concatenate([emb, 100.0 * qn.astype(np.float32)])
+    tenant = np.concatenate(
+        [tenant, np.full(2, (principal_tenant + 1) % 6, np.int32)])
+    ts = np.concatenate([ts, np.full(2, 600, np.int32)])
+    cat = np.concatenate([cat, cat[:2]])
+    acl = np.concatenate([acl, np.full(2, 0xFFFFFFFF, np.uint32)])
+    n += 2
+    # tenant placement packs each tenant's rows into its owning shard's
+    # contiguous region — size regions for the FULLEST shard, not the mean
+    cap = S * (int(np.bincount(tenant % S, minlength=S).max()) + 1)
+    mesh = make_mesh((S,), ("data",))
+    db = RagDB(StoreConfig(capacity=cap, dim=8, metric="dot"), mesh=mesh,
+               shard_axes=("data",), placement="tenant")
+    db.ingest(DocBatch(emb=jnp.asarray(emb), tenant=jnp.asarray(tenant),
+                       category=jnp.asarray(cat), updated_at=jnp.asarray(ts),
+                       acl=jnp.asarray(acl, jnp.uint32),
+                       doc_id=jnp.arange(n, dtype=jnp.int32)))
+    principal = Principal(tenant_id=principal_tenant, group_bits=pred.acl_bits)
+    res = (db.session(principal).search(q, normalize=False)
+           .newer_than(pred.min_ts).limit(k).using("sharded").run())
+
+    snap = db.log.snapshot()
+    snap_tenant = np.asarray(snap["tenant"])
+    for b in range(2):
+        got = res.slots[b][res.slots[b] >= 0]
+        assert (snap_tenant[got] == principal_tenant).all(), \
+            "poisoned foreign-tenant row surfaced through the sharded engine"
+        assert (res.scores[b] < 50.0).all(), "poisoned score leaked"
+    # (a) the per-shard audit: ONLY the owning shard scanned its region
+    owner = principal_tenant % S
+    want_rows = [cap // S if s == owner else 0 for s in range(S)]
+    assert db.stats.shard_rows_scanned == want_rows, \
+        (db.stats.shard_rows_scanned, want_rows)
+    # (c) bit-identity with the reference engine on the same snapshot
+    lowered = Predicate(tenant=principal_tenant, min_ts=pred.min_ts,
+                        acl_bits=pred.acl_bits)
+    s_ref, i_ref = unified_query_ref(snap, jnp.asarray(q),
+                                     lowered.as_array(), k)
+    assert (np.asarray(i_ref) == res.slots).all()
+    assert (np.asarray(s_ref) == res.scores).all()
+
+
 SEED_GRID = list(range(40))
 
 if HAVE_HYPOTHESIS:
@@ -282,6 +345,11 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=15, deadline=None)
     def test_chaos_isolation_property(args):
         _check_chaos_isolation(args)
+
+    @given(corpus_st)
+    @settings(max_examples=10, deadline=None)
+    def test_sharded_affine_isolation_property(args):
+        _check_sharded_affine_isolation(args)
 else:
     @pytest.mark.parametrize("seed", SEED_GRID)
     def test_no_leak_and_topk_sound(seed):
@@ -302,3 +370,7 @@ else:
     @pytest.mark.parametrize("seed", SEED_GRID[:15])
     def test_chaos_isolation_property(seed):
         _check_chaos_isolation(_args_from_seed(seed))
+
+    @pytest.mark.parametrize("seed", SEED_GRID[:10])
+    def test_sharded_affine_isolation_property(seed):
+        _check_sharded_affine_isolation(_args_from_seed(seed))

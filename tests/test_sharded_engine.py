@@ -1,0 +1,177 @@
+"""Sharded-engine tests that run on the SINGLE real device (S=1 mesh, plus
+pure-function selection logic). The multi-device behavior — cross-shard
+merge, tenant-affine shard skip, collective-payload bound, placement
+invariance — runs in subprocesses under tests/test_distributed.py; this file
+keeps the engine's contracts in the tier-1 lane:
+
+  * `lex_topk` is EXACTLY the lexicographic (score desc, doc_id asc) top-k,
+    including under constructed score ties (the determinism contract's
+    selection primitive);
+  * `ShardPlacement` routes slots into contiguous per-shard regions and its
+    (shard, local) map is consistent both ways;
+  * a mesh-built RagDB at S=1 runs the WHOLE sharded path (placement-routed
+    allocation, shard-mapped program, per-shard stats, explain lines)
+    bit-identically to the reference engine;
+  * per-shard slot recycling: deleting a doc returns its slot to the owning
+    shard's free list, and the next doc routed to that shard reuses it.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.ragdb import RagDB
+from repro.core.query import unified_query_ref
+from repro.core.store import DocBatch, ShardPlacement, StoreConfig
+from repro.core.tenancy import Principal
+from repro.kernels.arena_scan.sharded import INT32_MAX, lex_topk
+from repro.kernels.arena_scan.stages import NEG_INF
+from repro.launch.mesh import make_mesh
+
+
+def _lex_oracle(scores: np.ndarray, doc_ids: np.ndarray, k: int):
+    """Brute-force lexicographic (score desc, id asc) top-k per row."""
+    b, n = scores.shape
+    out_s = np.full((b, k), float(NEG_INF), np.float32)
+    out_d = np.full((b, k), INT32_MAX, np.int64)
+    out_p = np.full((b, k), -1, np.int64)
+    for r in range(b):
+        order = sorted(range(n), key=lambda j: (-scores[r, j], doc_ids[j]))
+        take = order[: min(k, n)]
+        out_s[r, : len(take)] = scores[r, take]
+        out_d[r, : len(take)] = doc_ids[take]
+        out_p[r, : len(take)] = take
+    return out_s, out_d, out_p
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("n,k", [(3, 5), (64, 7), (200, 10)])
+def test_lex_topk_matches_bruteforce(seed, n, k):
+    rng = np.random.default_rng(seed)
+    b = 3
+    # quantized scores force REAL ties (several columns share a score), and
+    # a sprinkle of NEG_INF rows models masked-out entries
+    scores = rng.integers(0, 8, (b, n)).astype(np.float32)
+    scores[rng.random((b, n)) < 0.2] = float(NEG_INF)
+    doc_ids = rng.permutation(10_000)[:n].astype(np.int32)
+    s, d, p = (np.asarray(a) for a in lex_topk(
+        jnp.asarray(scores), jnp.asarray(doc_ids), k))
+    es, ed, ep = _lex_oracle(scores, doc_ids, k)
+    np.testing.assert_array_equal(s, es)
+    np.testing.assert_array_equal(d, ed)
+    np.testing.assert_array_equal(p, ep)
+
+
+def test_shard_placement_regions_and_routing():
+    pl = ShardPlacement(n_shards=4, capacity=32, kind="tenant")
+    assert pl.rows_per_shard == 8
+    assert pl.region(0) == (0, 8) and pl.region(3) == (24, 32)
+    for slot in range(32):
+        sh, local = pl.locate(slot)
+        assert pl.shard_of_slot(slot) == sh == slot // 8
+        assert pl.region(sh)[0] + local == slot
+    # tenant placement routes on tenant id; hash placement on doc id
+    assert pl.shard_of_doc(6, 123) == 6 % 4
+    ph = ShardPlacement(n_shards=4, capacity=32, kind="hash")
+    assert ph.shard_of_doc(6, 123) == 123 % 4
+    with pytest.raises(ValueError):
+        ShardPlacement(n_shards=3, capacity=32)      # 32 % 3 != 0
+    with pytest.raises(ValueError):
+        ShardPlacement(n_shards=4, capacity=32, kind="roundrobin")
+
+
+def _mesh_db(n, dim, placement, **kw):
+    mesh = make_mesh((1,), ("data",))
+    return RagDB(StoreConfig(capacity=n, dim=dim, metric="dot"), mesh=mesh,
+                 shard_axes=("data",), placement=placement, **kw)
+
+
+def _ingest_random(db, rng, n_docs, dim, n_tenants=6):
+    emb = rng.standard_normal((n_docs, dim), dtype=np.float32)
+    db.ingest(DocBatch(
+        emb=jnp.asarray(emb),
+        tenant=jnp.asarray(rng.integers(0, n_tenants, n_docs), jnp.int32),
+        category=jnp.asarray(rng.integers(0, 4, n_docs), jnp.int32),
+        updated_at=jnp.asarray(rng.integers(1, 100, n_docs), jnp.int32),
+        acl=jnp.asarray(np.full(n_docs, 1), jnp.uint32),
+        doc_id=jnp.arange(n_docs, dtype=jnp.int32)))
+    return emb
+
+
+@pytest.mark.parametrize("placement", ["hash", "tenant"])
+def test_sharded_engine_single_shard_matches_ref(rng, placement):
+    n, dim, k = 256, 16, 5
+    db = _mesh_db(n, dim, placement)
+    _ingest_random(db, rng, 200, dim)
+    q = rng.standard_normal((dim,), dtype=np.float32)
+    b = (db.session(Principal(tenant_id=3, group_bits=0x1))
+         .search(q, normalize=False).limit(k).using("sharded"))
+    plan = b.plan()
+    assert plan.shards == 1 and plan.placement == placement
+    assert "sharding:" in plan.explain()
+    res = b.run()
+    s0, i0 = unified_query_ref(db.log.snapshot(), jnp.asarray(q[None, :]),
+                               plan.pred.as_array(), k)
+    np.testing.assert_array_equal(res.slots, np.asarray(i0))
+    np.testing.assert_array_equal(res.scores, np.asarray(s0))
+    assert db.stats.shards_used == 1
+    assert db.stats.shard_rows_scanned == [n]
+    assert db.stats.rows_scanned == n
+    assert "sharded:" in db.explain()
+
+
+def test_sharded_plan_keys_carry_shards():
+    db = _mesh_db(64, 8, "tenant")
+    no_mesh = RagDB(StoreConfig(capacity=64, dim=8, metric="dot"))
+    q = np.zeros((8,), np.float32)
+    p = (db.session(Principal(tenant_id=1, group_bits=1))
+         .search(q).limit(3).using("sharded").plan())
+    r = (no_mesh.session(Principal(tenant_id=1, group_bits=1))
+         .search(q).limit(3).plan())
+    assert 1 in p.group_key and "tenant" in p.group_key
+    assert p.fuse_key != r.fuse_key
+    assert not p.fusable                     # sharded owns its collective
+
+
+def test_sharded_without_mesh_rejected_at_plan_time():
+    db = RagDB(StoreConfig(capacity=16, dim=4))
+    b = (db.session(Principal(tenant_id=0, group_bits=1))
+         .search(np.zeros(4, np.float32)).using("sharded").limit(2))
+    with pytest.raises(ValueError, match="mesh"):
+        b.plan()
+
+
+def test_placement_slot_recycling_stays_in_region(rng):
+    """Delete returns slots to the OWNING shard's free list, and the next
+    doc routed there reuses them (LIFO) — region membership is an invariant
+    of every slot a tenant's docs ever occupy."""
+    n, dim = 64, 8
+    db = _mesh_db(n, dim, "tenant")
+    _ingest_random(db, rng, 40, dim)
+    pl = db.log.placement
+    assert pl is not None and pl.kind == "tenant"
+    snap = db.log.snapshot()
+    tenant = np.asarray(snap["tenant"])
+    # placement invariant: every live row sits in its tenant's region
+    for slot in np.nonzero(tenant >= 0)[0]:
+        assert pl.shard_of_doc(int(tenant[slot]), 0) == pl.shard_of_slot(slot)
+    # recycle: delete one doc, re-ingest same tenant -> same slot comes back
+    victim = int(np.asarray(snap["doc_id"])[np.nonzero(tenant >= 0)[0][0]])
+    vslot = db.log.slot_of(victim)
+    vtenant = int(tenant[vslot])
+    db.delete([victim])
+    db.ingest(DocBatch(
+        emb=jnp.asarray(rng.standard_normal((1, dim), dtype=np.float32)),
+        tenant=jnp.asarray([vtenant], jnp.int32),
+        category=jnp.asarray([0], jnp.int32),
+        updated_at=jnp.asarray([50], jnp.int32),
+        acl=jnp.asarray([1], jnp.uint32),
+        doc_id=jnp.asarray([9999], jnp.int32)))
+    assert db.log.slot_of(9999) == vslot
+
+
+def test_sharded_region_full_is_loud(rng):
+    """A shard whose region fills raises instead of spilling into another
+    shard's rows (spilling would silently break the affine audit)."""
+    db = _mesh_db(8, 4, "tenant")        # S=1: one region of 8 rows
+    with pytest.raises(RuntimeError, match="region full"):
+        _ingest_random(db, rng, 9, 4, n_tenants=2)

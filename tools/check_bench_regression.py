@@ -14,6 +14,8 @@ Usage:
         [--paged-threshold 0.15]
     python tools/check_bench_regression.py --chaos-only FRESH.json
         [--chaos-p99-mult 10] [--breaker-steps 10]
+    python tools/check_bench_regression.py --sharded-only FRESH.json
+        [COMMITTED.json] [--at-n 250000] [--threshold 0.25]
 
 The ``--serving-only`` lane gates the serving subsystem instead (fresh
 file from ``bench_serving --smoke --out PATH``; committed references are
@@ -60,6 +62,24 @@ committed reference and no machine normalization are needed:
   2. the measured configuration really paged: n_pages >= 2 (arena larger
      than one page) and the bench's pre-timing bit-identity assertion ran
      (`bit_identical` recorded true).
+
+The ``--sharded-only`` lane gates the shard-mapped arena scan (ISSUE 9;
+fresh file from ``bench_latency --sharded-only --out PATH``, which spawns
+its own multi-device subprocess). Invariants hold on EVERY (N, S) cell in
+the fresh file; the timing comparison is machine-normalized like the
+grouped lane:
+  1. merge bit-identity: each cell recorded its merged (score, doc_id)
+     k-lists bit-identical to the single-device lexicographic oracle —
+     a broken cross-shard merge fails regardless of timing;
+  2. the collective payload from compiled HLO is within the O(S*B*k)
+     bound (<= 2*S*B*k*8 bytes for the three gathered (B, k) k-lists)
+     AND under 0.1% of arena bytes — a lowering that gathers scores or
+     rows instead of k-lists fails by orders of magnitude;
+  3. the per-shard audit: rows_scanned per device == N/S exactly (every
+     shard scans only its own region, and all of it);
+  4. p50 regression at the gated (N, max-S) point vs the committed file,
+     normalized by the S=1 p50 of each file (the single-shard scan is the
+     same program minus the mesh, so uniform machine speed cancels).
 
 Grouped-lane checks, at the gated group count (default G=8, the PR's
 acceptance point):
@@ -422,6 +442,78 @@ def check_paged(args) -> int:
     return 0 if ok else 1
 
 
+def check_sharded(args) -> int:
+    fresh = _load(args.fresh, "sharded", "sizes")
+    ok = True
+    k = fresh["k"]
+    b_pad = max(fresh["batch"], 8)   # query block lane-pads B <= 8 up to 8
+    print(f"sharded gate ({fresh['devices']} emulated devices, "
+          f"B={fresh['batch']}, k={k}, {fresh['placement']} placement):")
+    for n_str, row in sorted(fresh["sizes"].items(), key=lambda kv: int(kv[0])):
+        arena, abytes = row["arena_rows"], row["arena_bytes"]
+        for s_str, cell in sorted(row["shards"].items(),
+                                  key=lambda kv: int(kv[0])):
+            s = int(s_str)
+            bound = 2 * s * b_pad * k * 8
+            print(f"  N={n_str} S={s}: p50 {cell['scan_ms']['p50']:.2f}ms  "
+                  f"collective {cell['collective_bytes']}B (bound {bound}B, "
+                  f"{cell['collective_bytes'] / abytes:.2e} of arena)  "
+                  f"rows/shard {arena // s}  "
+                  f"bit_identical={cell['bit_identical']}")
+            if cell["bit_identical"] is not True:
+                print("  FAIL: merged k-lists no longer bit-identical to "
+                      "the single-device oracle")
+                ok = False
+            if not 0 < cell["collective_bytes"] <= bound:
+                print("  FAIL: collective payload exceeds the O(S*B*k) "
+                      "bound — something gathers more than the k-lists")
+                ok = False
+            if cell["collective_bytes"] >= 0.001 * abytes:
+                print("  FAIL: collective traffic is no longer a vanishing "
+                      "(<0.1%) fraction of arena bytes")
+                ok = False
+            if cell["shard_rows_scanned"] != [arena // s] * s:
+                print("  FAIL: per-device rows_scanned != N/S — a shard "
+                      "scans rows it does not own, or skips its own")
+                ok = False
+
+    # p50 regression at the gated point: largest S, machine-normalized by
+    # each file's S=1 baseline (same scan program minus the mesh)
+    committed = _load(args.committed, "sharded", "sizes")
+    n = str(args.at_n)
+    for name, sec in (("fresh", fresh), ("committed", committed)):
+        if n not in sec["sizes"]:
+            print(f"error: {name} sharded section has no N={n} row "
+                  f"(has {sorted(sec['sizes'])})", file=sys.stderr)
+            return 2
+    f_row, c_row = fresh["sizes"][n], committed["sizes"][n]
+    s_max = str(max(int(x) for x in f_row["shards"]))
+    if s_max not in c_row["shards"] or "1" not in c_row["shards"]:
+        print(f"error: committed sharded N={n} row lacks S=1/S={s_max}",
+              file=sys.stderr)
+        return 2
+    f_p50 = f_row["shards"][s_max]["scan_ms"]["p50"]
+    c_p50 = c_row["shards"][s_max]["scan_ms"]["p50"]
+    if args.absolute:
+        cmp_p50, how = f_p50, "raw"
+    else:
+        machine = (c_row["shards"]["1"]["scan_ms"]["p50"]
+                   / max(f_row["shards"]["1"]["scan_ms"]["p50"], 1e-9))
+        cmp_p50 = f_p50 * machine
+        how = f"S1-normalized x{machine:.2f}"
+    ratio = cmp_p50 / max(c_p50, 1e-9)
+    print(f"  S={s_max} p50 at N={n}: fresh {f_p50:.2f}ms ({how}: "
+          f"{cmp_p50:.2f}ms) vs committed {c_p50:.2f}ms "
+          f"({(ratio - 1) * 100:+.1f}%, threshold "
+          f"+{args.threshold * 100:.0f}%)")
+    if ratio > 1 + args.threshold:
+        print("  FAIL: sharded scan p50 regressed past the threshold")
+        ok = False
+
+    print("PASS" if ok else "REGRESSION")
+    return 0 if ok else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("fresh", help="freshly measured JSON "
@@ -444,6 +536,11 @@ def main(argv=None) -> int:
                          "from bench_serving --chaos --smoke --out PATH; "
                          "self-contained — the file carries its own clean "
                          "baseline)")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="gate the shard-mapped arena scan instead (fresh "
+                         "file from bench_latency --sharded-only --out "
+                         "PATH): bit-identity, O(S*B*k) collective payload, "
+                         "per-shard rows audit, S1-normalized p50")
     ap.add_argument("--chaos-p99-mult", type=float, default=10.0,
                     help="with --chaos-only: max storm-over-clean p99 "
                          "multiple (default 10)")
@@ -462,9 +559,9 @@ def main(argv=None) -> int:
                          "baseline throughput (CI slack; default 0.6 — the "
                          "hard 0.8 bar is asserted on the committed "
                          "artifact)")
-    ap.add_argument("--at-n", type=int, default=50_000,
-                    help="with --hybrid-only: corpus size to gate on "
-                         "(default 50000)")
+    ap.add_argument("--at-n", type=int, default=None,
+                    help="corpus size to gate on (default 50000 for "
+                         "--hybrid-only, 250000 for --sharded-only)")
     ap.add_argument("--at-g", type=int, default=8,
                     help="group count to gate on (default 8)")
     ap.add_argument("--threshold", type=float, default=None,
@@ -482,6 +579,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.threshold is None:
         args.threshold = 0.5 if args.serving_only else 0.25
+    if args.at_n is None:
+        args.at_n = 250_000 if args.sharded_only else 50_000
 
     if args.serving_only:
         return check_serving(args)
@@ -491,6 +590,8 @@ def main(argv=None) -> int:
         return check_paged(args)
     if args.chaos_only:
         return check_chaos(args)
+    if args.sharded_only:
+        return check_sharded(args)
 
     fresh = load_sweep(args.fresh)
     committed = load_sweep(args.committed)
