@@ -21,7 +21,13 @@ machine):
 
 Output: results/bench_serving.json — per scenario, p50/p95/p99/p999 for
 end-to-end AND the queue-wait/plan/service breakdown, plus shed/degradation/
-stale counters (the MetricsRegistry.snapshot schema, docs/api.md).
+stale counters (the MetricsRegistry.snapshot schema, docs/api.md), a
+head-vs-tail per-tenant p99 breakdown, the cost-model ``calibration``
+section (predicted-vs-measured across the ref/ivf/hybrid/sharded engines),
+and the ``obs_overhead`` tracer-tax microbench gated by
+`check_bench_regression.py --obs-only`. The chaos lane additionally dumps
+the flight recorder (JSON + Perfetto trace_event) and audits that every
+degraded/failed response's trace carries its matching annotation.
 `--smoke` shrinks corpus and durations to CI scale; the regression lane is
 `tools/check_bench_regression.py --serving-only`.
 """
@@ -29,6 +35,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import gc
 import time
 
 import numpy as np
@@ -38,6 +45,7 @@ from repro.api.planner import PlannerConfig
 from repro.api.ragdb import RagDB, ResultCache
 from repro.core.store import StoreConfig
 from repro.data.corpus import DAY_S, CorpusConfig, make_corpus
+from repro.obs import CalibrationTable, FlightRecorder, Tracer
 from repro.serving.faults import FaultPlan, FaultRule
 from repro.serving.load import (WorkloadConfig, lower_query, make_trace,
                                 run_scenario)
@@ -124,7 +132,174 @@ def warm_degraded_shapes(db: RagDB, wl: WorkloadConfig,
                 batch = [plans[i % g] for i in range(b)]
                 db.execute(batch, use_cache=False)
                 runs += 1
+                if b > 1 and g <= b - 1:
+                    # partially-filled batch: row padding to the bucket
+                    # opens an extra blocker lane when the group count is
+                    # already pow2 (`_pad_group_launch`), bumping G to the
+                    # next pow2 — e.g. 6 rows x 4 groups compiles
+                    # (bucket 8, G 8), a program a full batch never
+                    # reaches. The scheduler drains partial batches
+                    # whenever arrivals lag the drain, so these shapes DO
+                    # land inside measured storms.
+                    db.execute(batch[:b - 1], use_cache=False)
+                    runs += 1
     return runs
+
+
+def run_calibration(n_docs: int, dim: int, n_tenants: int, seed: int,
+                    *, batches: int = 10, batch: int = 8) -> dict:
+    """Cost-model calibration audit sweep across every priced engine.
+
+    One plain db reaches ref (exact), ivf (index) and hybrid (lexical
+    arena); a second 1-device-mesh db reaches sharded — both write into
+    the SAME `CalibrationTable`, so the sweep accumulates
+    predicted-vs-measured for all four engines the committed
+    results/bench_latency.json curves price. Warm-up batches compile every
+    shape first and the table is reset after, so no first-compile stall
+    pollutes the drift ratios."""
+    from repro.index.lexical import LexicalConfig
+    from repro.launch.mesh import make_mesh
+    ccfg = CorpusConfig(n_docs=n_docs, dim=dim, n_tenants=n_tenants,
+                        seed=seed)
+    corpus = make_corpus(ccfg)
+    scfg = StoreConfig(capacity=1 << (n_docs - 1).bit_length(), dim=dim)
+    db = RagDB(scfg, now_ts=ccfg.now_ts,
+               planner_cfg=PlannerConfig.with_measured_costs(),
+               lexical_cfg=LexicalConfig(vocab_size=ccfg.vocab_size,
+                                         doc_terms=ccfg.doc_terms))
+    db.ingest(corpus)
+    db.build_index()
+    db_sh = RagDB(scfg, now_ts=ccfg.now_ts,
+                  planner_cfg=PlannerConfig.with_measured_costs(),
+                  mesh=make_mesh((1,), ("data",)), shard_axes=("data",),
+                  placement="hash")
+    db_sh.ingest(corpus)
+    db_sh.calibration = db.calibration        # one shared audit table
+    rng = np.random.default_rng(seed)
+    sess, sess_sh = db.admin_session(), db_sh.admin_session()
+
+    def plans_for(engine):
+        host, s = ((db_sh, sess_sh) if engine == "sharded" else (db, sess))
+        out = []
+        for _ in range(batch):
+            q = rng.standard_normal(dim).astype(np.float32)
+            b = s.search(q, normalize=False).limit(8)
+            if engine == "hybrid":
+                b = b.match([int(t) for t in
+                             rng.integers(0, ccfg.n_common_terms, 4)])
+            else:
+                b = b.using(engine)
+            out.append(b.plan())
+        return host, out
+
+    engines = ("ref", "ivf", "hybrid", "sharded")
+    for engine in engines:                    # compile warm-up, discarded
+        host, plans = plans_for(engine)
+        host.execute(plans, use_cache=False)
+    db.calibration = db_sh.calibration = CalibrationTable()
+    for engine in engines:
+        for _ in range(batches):
+            host, plans = plans_for(engine)
+            host.execute(plans, use_cache=False)
+    snap = db.calibration.snapshot()
+    snap.pop("samples", None)                 # keep the artifact small
+    snap["swept_engines"] = list(engines)
+    for eng in engines:
+        e = snap["engines"].get(eng, {})
+        r = e.get("ratio")
+        print(f"  calibration {eng:<8s} {e.get('count', 0):3d} units  "
+              f"measured/predicted "
+              f"{('x%.2f' % r) if r is not None else 'unpriced'}")
+    return snap
+
+
+def run_obs_overhead(seed: int, *, iters: int = 200,
+                     n_docs: int = 32768, dim: int = 64) -> dict:
+    """The tracer tax, measured where the `--obs-only` gate reads it: one
+    fixed 8-plan batch executed ``iters`` times with the cache off, tracer
+    fully disabled vs tracer+recorder on, passes interleaved (min of three
+    p50s each) so machine drift cannot masquerade as overhead. The on-pass
+    pushes far more traces through a small recorder than it can hold,
+    demonstrating the O(cap + pin_cap) memory bound the gate asserts.
+
+    The arena is a FIXED production-representative shape (32k rows x dim
+    64) even in smoke mode: the tracer's cost is a fixed number of span
+    records per request, so measuring it against the smoke corpus's toy
+    arena (or its halved embedding width) would compare Python bookkeeping
+    against itself rather than against the device work a real serving
+    batch does."""
+    rng = np.random.default_rng(seed)
+    db, _, _ = build_db(n_docs, dim, 8)
+    sess = db.admin_session()
+    plans = [sess.search(rng.standard_normal(dim).astype(np.float32),
+                         normalize=False).using("ref").limit(8).plan()
+             for _ in range(8)]
+    rec = FlightRecorder(cap=64, pin_cap=32)
+    off = Tracer(enabled=False)
+    on = Tracer(enabled=True, recorder=rec)
+
+    def p50(tracer) -> float:
+        db.attach_tracer(tracer)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            db.execute(plans, use_cache=False)
+            ts.append((time.perf_counter() - t0) * 1e3)
+        return float(np.percentile(ts, 50))
+
+    p50(off)                                  # shape warm-up, discarded
+    # freeze the heap the surrounding bench accumulated: a collection
+    # landing mid-pass would re-scan megabytes of harness state and bill
+    # it to whichever pass it struck. The tracer's own allocations still
+    # run the young generation — that cost IS the tax being measured.
+    gc.collect()
+    gc.freeze()
+    try:
+        pairs = [(p50(off), p50(on)) for _ in range(3)]
+    finally:
+        gc.unfreeze()
+    db.attach_tracer(Tracer(enabled=False))
+    p_off = min(o for o, _ in pairs)
+    p_on = min(n for _, n in pairs)
+    out = {"iters": iters, "batch": len(plans), "arena_rows": n_docs,
+           "p50_off_ms": p_off, "p50_on_ms": p_on,
+           "overhead_ratio": p_on / max(p_off, 1e-9),
+           "overhead_budget": 1.05,
+           "recorder": {"cap": rec.cap, "pin_cap": rec.pin_cap,
+                        "recorded": rec.recorded,
+                        "ring_len": len(rec.ring),
+                        "pinned": len(rec.pinned),
+                        "pin_drops": rec.pin_drops,
+                        "bounded": bool(len(rec.ring) <= rec.cap
+                                        and len(rec.pinned) <= rec.pin_cap)}}
+    print(f"  obs overhead: tracer-off p50 {p_off:.3f}ms on {p_on:.3f}ms "
+          f"(x{out['overhead_ratio']:.3f}, budget 1.05); recorder "
+          f"{rec.recorded} recorded -> ring {len(rec.ring)}/{rec.cap}")
+    return out
+
+
+def _tenant_tail_p99(report: dict) -> dict:
+    """Head-vs-tail tenant p99 from the labeled ``e2e_ms{tenant=N}``
+    histograms: the Zipf tenant mix means the head tenant dominates batch
+    composition while tail tenants ride along in mixed batches — where a
+    per-tenant isolation regression (one tenant's deep ladder rung taxing
+    everyone's tail) shows up first."""
+    prefix = "e2e_ms{tenant="
+    per = {}
+    for key, h in report.get("histograms", {}).items():
+        if key.startswith(prefix) and key.endswith("}"):
+            per[key[len(prefix):-1]] = {"count": h.get("count", 0),
+                                        "p50": h.get("p50", 0.0),
+                                        "p99": h.get("p99", 0.0)}
+    if not per:
+        return {}
+    ranked = sorted(per.items(), key=lambda kv: -kv[1]["count"])
+    head, tail = ranked[0], ranked[-1]
+    return {"per_tenant": per,
+            "head": {"tenant": head[0], **head[1]},
+            "tail": {"tenant": tail[0], **tail[1]},
+            "tail_over_head_p99":
+                tail[1]["p99"] / max(head[1]["p99"], 1e-9)}
 
 
 def run(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
@@ -132,6 +307,12 @@ def run(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
         out_path: str | None = None) -> dict:
     if smoke:
         n_docs, dim, n_tenants, duration_s = 3_000, 32, 4, 0.8
+    # tracer tax FIRST, on a quiet heap: after the scenario lanes the
+    # process holds every arena/result built so far, and allocator noise
+    # at that point dwarfs the ~100us/batch being measured
+    # iters NOT reduced in smoke mode: 60-sample p50s are unstable enough
+    # that run-to-run drift exceeds the ~100us/batch being measured
+    obs_overhead = run_obs_overhead(seed)
     db, corpus, ccfg = build_db(n_docs, dim, n_tenants)
     doc_ids = np.asarray(corpus.doc_id)
     base_wl = WorkloadConfig(duration_s=duration_s, n_tenants=n_tenants,
@@ -182,9 +363,17 @@ def run(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
     reset_serving_state(db)
     steady = run_scenario(db, wl, sched_cfg, write_doc_ids=doc_ids,
                           now_ts=ccfg.now_ts)
+    steady_r = steady.report()
     out["scenarios"]["steady"] = {"offered_x_capacity": 0.5,
-                                  "scheduler": steady.report()}
-    _print_row("steady/sched", steady.report(), slo_ms)
+                                  "scheduler": steady_r,
+                                  "per_tenant": _tenant_tail_p99(steady_r)}
+    _print_row("steady/sched", steady_r, slo_ms)
+    pt = out["scenarios"]["steady"]["per_tenant"]
+    if pt:
+        print(f"  per-tenant: head t{pt['head']['tenant']} "
+              f"p99={pt['head']['p99']:.1f}ms "
+              f"({pt['head']['count']} reqs), tail t{pt['tail']['tenant']} "
+              f"p99={pt['tail']['p99']:.1f}ms ({pt['tail']['count']} reqs)")
 
     # -- overload: flash crowd over a comfortable base, baseline vs sched --
     # cache OFF for both runs: the Zipf mix otherwise turns offered load
@@ -256,6 +445,7 @@ def run(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
     out["scenarios"]["overload"] = {"offered_x_capacity": overload_x,
                                     "burst_x": burst_x,
                                     "baseline": br, "scheduler": sr,
+                                    "per_tenant": _tenant_tail_p99(sr),
                                     "acceptance": acceptance}
     print(f"  acceptance: baseline p99/p50 "
           f"{acceptance['baseline_tail_blowup']:.1f}x (floor 10x), "
@@ -315,6 +505,21 @@ def run(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
     out["scenarios"]["concurrent_writes"] = {
         "offered_x_capacity": 1.2, "frontier": frontier}
 
+    # -- cost-model calibration audit (all four priced engines) -----------
+    print("calibration sweep: ref/ivf/hybrid/sharded")
+    out["calibration"] = run_calibration(n_docs, dim, n_tenants, seed,
+                                         batches=4 if smoke else 10)
+    # the serving run's own always-on audit rides along: the e2e aggregates
+    # the scheduler fed plus the unit buckets the scenarios exercised
+    serving_cal = db.calibration.snapshot()
+    out["calibration"]["serving"] = {"recorded": serving_cal["recorded"],
+                                     "engines": serving_cal["engines"],
+                                     "e2e": serving_cal["e2e"]}
+
+    # -- tracer tax + recorder bound (the --obs-only gate input; measured
+    # before the lanes, see top of run) ----------------------------------
+    out["obs_overhead"] = obs_overhead
+
     if out_path:
         import json
         with open(out_path, "w") as f:
@@ -373,10 +578,42 @@ def _audit_silent_wrong(db: RagDB, results, *, limit: int = 200) -> dict:
             "silent_wrong": wrong}
 
 
-def _breaker_recovery(db: RagDB, ccfg, seed: int) -> dict:
+def _audit_trace_annotations(results) -> dict:
+    """The chaos-lane observability bar: every response served degraded
+    must carry a ``degraded`` pin + root annotation on its trace, and
+    every failed response a ``failed`` pin, a ``served=failed`` root
+    annotation AND at least one injected-fault span annotation naming what
+    killed it. Shed requests never reach ``results`` — their traces pin
+    ``failed`` at the admission gate and are audited by the recorder's
+    pinning tests instead."""
+    deg_total = deg_ok = fail_total = fail_ok = 0
+    for r in results:
+        t = getattr(r.request, "trace", None)
+        if t is None or not getattr(t, "enabled", False):
+            continue
+        if r.degraded:
+            deg_total += 1
+            if "degraded" in t.pins and t.root.ann.get("degraded"):
+                deg_ok += 1
+        if r.served == "failed":
+            fail_total += 1
+            faulted = any("faults" in s.ann for s in t.spans)
+            if ("failed" in t.pins and faulted
+                    and t.root.ann.get("served") == "failed"):
+                fail_ok += 1
+    return {"degraded_results": deg_total, "degraded_annotated": deg_ok,
+            "failed_results": fail_total, "failed_annotated": fail_ok,
+            "complete": bool(deg_ok == deg_total and fail_ok == fail_total)}
+
+
+def _breaker_recovery(db: RagDB, ccfg, seed: int,
+                      results: list | None = None) -> dict:
     """Trip the breaker under a total warm outage, lift the outage, and
     count serving steps until the first clean response — the 'breaker
-    recovers within N steps' bar."""
+    recovers within N steps' bar. ``results`` (optional sink) collects
+    every served response: this sub-experiment produces DETERMINISTIC
+    degraded hot-only serves, so the chaos lane feeds them to the trace
+    annotation audit even when the storm proper recovers everything."""
     import numpy as np
     storm = FaultPlan(seed, {"warm.error": FaultRule(rate=1.0)})
     db.attach_faults(storm)
@@ -393,6 +630,8 @@ def _breaker_recovery(db: RagDB, ccfg, seed: int) -> dict:
                                  .limit(8).plan(),
                                  arrival_t=sched.clock(), req_id=i))
         (res,) = sched.run_until_idle()
+        if results is not None:
+            results.append(res)
         return res
 
     opened_after = 0
@@ -437,6 +676,12 @@ def run_chaos(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
                         k=8, engine=None, seed=seed, rate_rps=100.0,
                         write_rate_rps=0.0)
     cap = measure_capacity(db, wl)
+    # compile the whole (bucket x rung x group-layout) shape space before
+    # anything is measured: batch composition is timing-sensitive, and a
+    # batch layout the single warmup pass never happened to form is a
+    # multi-hundred-ms XLA compile inside the measured storm tail (reads
+    # as a fake 15-20x p99 blowup + queue-overflow shed burst)
+    warm_degraded_shapes(db, wl)
     rate = 0.4 * cap["capacity_rps"]
     slo_ms = float(np.clip(50.0 * cap["service_ms_per_req"], 25.0, 500.0))
     wl = dataclasses.replace(wl, rate_rps=rate)
@@ -458,20 +703,47 @@ def run_chaos(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
     cr = clean.report()
     _print_row("chaos/clean", cr, slo_ms)
 
-    # the storm: same trace, every query-path fault site firing
+    # the storm: same trace, every query-path fault site firing — with the
+    # tracer + flight recorder on, so every degraded/failed response leaves
+    # an annotated span tree behind (the x-ray this lane audits and dumps)
     storm = FaultPlan.storm(seed)
+    rec = FlightRecorder(cap=256, pin_cap=256)
     reset_serving_state(db)
     db.attach_faults(storm)
+    db.attach_tracer(Tracer(enabled=True, recorder=rec))
     stormed = run_scenario(db, wl, sched_cfg, events=list(trace))
+    db.attach_tracer(Tracer(enabled=False))
     db.attach_faults(None)
     sr = stormed.report()
     _print_row("chaos/storm", sr, slo_ms)
     fired = storm.counters()
 
     audit = _audit_silent_wrong(db, stormed.results)
-    breaker = _breaker_recovery(db, ccfg, seed)
+    # the breaker sub-experiment serves deterministically-degraded
+    # responses: trace it into the SAME recorder so the dumped flight
+    # recorder always contains annotated degraded span trees (the storm
+    # proper can recover every fault at low smoke rates)
+    breaker_results: list = []
+    db.attach_tracer(Tracer(enabled=True, recorder=rec))
+    breaker = _breaker_recovery(db, ccfg, seed, results=breaker_results)
+    db.attach_tracer(Tracer(enabled=False))
+    trace_audit = _audit_trace_annotations(
+        list(stormed.results) + breaker_results)
     c_p99 = cr["histograms"]["e2e_ms"].get("p99", 0.0)
     s_p99 = sr["histograms"]["e2e_ms"].get("p99", 0.0)
+
+    # dump the recorder next to the artifact: the raw span trees (the
+    # trace_report.py input) and the Perfetto/chrome://tracing timeline
+    import os
+    from benchmarks.common import RESULTS_DIR
+    flight_dir = (os.path.dirname(out_path) or ".") if out_path \
+        else RESULTS_DIR
+    flight_path = os.path.join(flight_dir, "flight_recorder_chaos.json")
+    perfetto_path = os.path.join(flight_dir,
+                                 "flight_recorder_chaos_perfetto.json")
+    rec.dump(flight_path, calibration=db.calibration.snapshot())
+    rec.dump_perfetto(perfetto_path)
+
     section = {
         "config": {"n_docs": n_docs, "dim": dim, "n_tenants": n_tenants,
                    "duration_s": duration_s, "seed": seed, "smoke": smoke,
@@ -484,6 +756,11 @@ def run_chaos(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
         "p99_ratio": s_p99 / max(c_p99, 1e-9),
         "audit": audit,
         "breaker": breaker,
+        "flight_recorder": {
+            "path": flight_path, "perfetto_path": perfetto_path,
+            "recorded": rec.recorded, "retained": len(rec.traces()),
+            "pinned": len(rec.pinned), "pin_drops": rec.pin_drops,
+            "trace_audit": trace_audit},
         "classified": {
             "correct": audit["undegraded_total"],
             "degraded": sr["degraded"],
@@ -497,11 +774,28 @@ def run_chaos(n_docs: int = 20_000, dim: int = 64, n_tenants: int = 8,
           f"{audit['silent_wrong']}/{audit['checked']} silent-wrong; "
           f"breaker opened={breaker['opened']} recovered in "
           f"{breaker['recovery_steps']} step(s)")
+    print(f"  flight recorder: {rec.recorded} traces recorded "
+          f"({len(rec.pinned)} pinned, {rec.pin_drops} pin drops) -> "
+          f"{flight_path}; annotation audit "
+          f"degraded {trace_audit['degraded_annotated']}/"
+          f"{trace_audit['degraded_results']}, failed "
+          f"{trace_audit['failed_annotated']}/"
+          f"{trace_audit['failed_results']} "
+          f"(complete={trace_audit['complete']})")
 
     if out_path:
         import json
+        import os
+        # merge when the target already holds the scenario sections (the
+        # committed-artifact flow: serving run first, chaos second) —
+        # clobbering them breaks every other gate that reads the file
+        payload = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                payload = json.load(f)
+        payload["chaos"] = section
         with open(out_path, "w") as f:
-            json.dump({"chaos": section}, f, indent=1)
+            json.dump(payload, f, indent=1)
         print(f"wrote {out_path}")
     else:
         # merge into the committed artifact next to the scenario sections

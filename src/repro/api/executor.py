@@ -30,6 +30,7 @@ scans) and `executor.unified_query_grouped` (fused scans).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 
 import jax
@@ -37,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.plan import PhysicalPlan, bucket_rows
+from repro.obs.tracer import FanSpan
 from repro.core.query import (BLOCK_ALL, Predicate, stack_predicates,
                               unified_query, unified_query_grouped)
 from repro.core.store import Store
@@ -201,6 +203,11 @@ class _Hot:
     extra_np: tuple | None = None # synced extra
     shard_rows: object = None     # (S,) per-shard rows scanned (sharded only)
     shard_meta: tuple | None = None  # (n_shards, collective_bytes)
+    launch_ms: float = 0.0        # host-side dispatch cost (perf_counter)
+    sync_ms: float = 0.0          # finish-time device_get wait (+ rescans)
+    terms: int = 0                # postings lanes this program streamed
+                                  # (hybrid only) — the calibration audit's
+                                  # per-unit twin of stats.terms_scanned
 
 
 def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
@@ -261,13 +268,17 @@ def _launch_hot(store: Store, q: jax.Array, pred: Predicate, k: int,
     return _Hot(s, sl, n_arena)
 
 
-def _finish_hot(hot: _Hot) -> tuple[np.ndarray, np.ndarray]:
+def _finish_hot(hot: _Hot, trace_fan=None) -> tuple[np.ndarray, np.ndarray]:
     """Sync one launched program. The ivf completeness net runs HERE: a
     pruned scan can under-fill the k-list when qualifying rows sit outside
     the probed clusters (e.g. a tight recency bound, or a forced
     .using("ivf") on a selective predicate). An under-filled row falls back
     to ONE exact rescan — completeness beats speed, and the extra arena
-    scan shows up in `hot.rows` so the audit trail stays honest."""
+    scan shows up in `hot.rows` so the audit trail stays honest.
+
+    ``trace_fan`` (member request traces, tracer-enabled path only) nests
+    a ``rescan`` span under the caller's open ``device_sync`` span exactly
+    when the completeness net fires."""
     s, sl = jax.device_get((hot.s, hot.sl))
     if hot.shard_rows is not None:
         # sharded: the per-shard audit vector replaces the whole-arena row
@@ -288,11 +299,15 @@ def _finish_hot(hot: _Hot) -> tuple[np.ndarray, np.ndarray]:
     if hot.rescan is not None:
         store, q, pred, k, exact, nv, ivf = hot.rescan
         if bool((sl[:nv] < 0).any()):
+            fan = (FanSpan(trace_fan, "rescan", engine=exact)
+                   if trace_fan is not None else None)
             s, sl = unified_query(store, q, pred, k, engine=exact)
             s, sl = jax.device_get((s, sl))
             if bool((sl[:nv] < 0).any()):
                 ivf.starved.add((pred, k))
             hot.rows += store["emb"].shape[0]
+            if fan is not None:
+                fan.end(rows=store["emb"].shape[0])
     return s, sl
 
 
@@ -417,14 +432,15 @@ def _launch_hybrid(store: Store, lex_snap: dict, q: np.ndarray,
                        mode=mode, w_dense=w_dense, w_lex=w_lex, rrf_c=rrf_c,
                        lists=lists, page_rows=page_rows)
     n_arena = store["emb"].shape[0]
+    terms = n_arena * int(lex_snap["terms"].shape[1])
     if stats is not None:
-        stats.terms_scanned += n_arena * int(lex_snap["terms"].shape[1])
+        stats.terms_scanned += terms
     if lists:
         d_s, d_i, l_s, l_i = out
         return _Hot(d_s, d_i, n_arena, pad_check=n_valid,
-                    extra=(l_s, l_i))
+                    extra=(l_s, l_i), terms=terms)
     s, sl = out
-    return _Hot(s, sl, n_arena, pad_check=n_valid)
+    return _Hot(s, sl, n_arena, pad_check=n_valid, terms=terms)
 
 
 def run_grouped(store: Store, q: np.ndarray, preds: list[Predicate], k: int,
@@ -655,6 +671,14 @@ class InFlightPlans:
                                  # group_keys whose warm probe failed over to
                                  # hot-only (RagDB.finish stamps the explicit
                                  # degraded annotation and skips the cache)
+    row_traces: list | None = None   # per query row: the owning request's
+                                 # obs.Trace (tracer-enabled path only) —
+                                 # finish_plans records device_sync/rescan/
+                                 # merge spans into these across the async
+                                 # launch/finish boundary
+    calib: object = None         # obs.CalibrationTable (always-on audit):
+                                 # finish_plans records one predicted-vs-
+                                 # measured row per dispatch unit
 
 
 def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
@@ -697,7 +721,8 @@ def execute_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
 def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                  sharded_fn=None, stats: ExecStats | None = None,
                  shapes: CompiledShapes | None = None, index=None,
-                 planner_cfg=None, lex=None, warm_guard=None) -> InFlightPlans:
+                 planner_cfg=None, lex=None, warm_guard=None,
+                 obs=None, tracer=None, calib=None) -> InFlightPlans:
     """Phases 1+2 of `execute_plans` (see there): launch every hot device
     program and issue every warm probe WITHOUT a single device_get, and
     return the in-flight handle `finish_plans` syncs.
@@ -706,7 +731,17 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
     probe with timeout / bounded retry / hedge / circuit breaker; when the
     guard gives up, that group fails over to hot-only serving (its probe
     entry is None and its group_key lands in `InFlightPlans.warm_failed`)
-    instead of propagating the warm tier's failure."""
+    instead of propagating the warm tier's failure.
+
+    ``obs`` (one obs.Trace per plan, aligned to ``plans``) threads the
+    span-tree instrumentation through: every dispatch unit records a
+    ``launch`` span and every warm round trip a ``warm_probe`` span into
+    each member request's trace (batch-shared work is measured ONCE and
+    fanned out). ``tracer`` supplies the active-sink stack warm-tier
+    faults and WarmGuard decisions annotate through; ``calib`` (the
+    RagDB's CalibrationTable) is carried to finish_plans, which records
+    the per-unit predicted-vs-measured audit. All three default to None —
+    the uninstrumented path is unchanged."""
     from repro.api.planner import PlannerConfig, fuse_batch
 
     ks = {p.logical.k for p in plans}
@@ -728,6 +763,13 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
     q_all = np.concatenate(qs, axis=0)
     B = q_all.shape[0]
 
+    # per-row trace handles (span fan-out targets); None = tracing off
+    row_traces = None
+    if obs is not None:
+        row_traces = []
+        for tr, q in zip(obs, qs):
+            row_traces.extend([tr] * q.shape[0])
+
     groups: dict[tuple, list[int]] = {}
     for i, p in enumerate(row_plans):
         groups.setdefault(p.group_key, []).append(i)
@@ -741,6 +783,12 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
     for unit in units:
         member_idxs = [groups[p.group_key] for p in unit.plans]
         rep = unit.plans[0]
+        fan = None
+        if row_traces is not None:
+            fan = FanSpan([row_traces[i] for m in member_idxs for i in m],
+                          "launch", engine=rep.engine, fused=unit.fused,
+                          groups=len(unit.plans))
+        t_launch0 = time.perf_counter()
         if rep.engine == "hybrid":
             # hybrid always dispatches through the grouped fused scan (a
             # single predicate group is simply G=1): ONE pass computes
@@ -792,6 +840,10 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                               plan.engine, sharded_fn, index, plan.nprobe,
                               n_valid, skip_rescan=bool(plan.degraded),
                               page_rows=plan.page_rows)
+        hot.launch_ms = (time.perf_counter() - t_launch0) * 1e3
+        if fan is not None:
+            fan.end(rows=sum(len(m) for m in member_idxs),
+                    page_rows=rep.page_rows)
         inflight.append((unit, member_idxs, hot))
         if stats is not None:
             n_rows_unit = sum(len(m) for m in member_idxs)
@@ -829,7 +881,22 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
                 def probe(plan=plan, m=m):
                     return warm.query(q_all[np.asarray(m)], plan.pred, k,
                                       pushdown=True)
-            res = warm_guard.call(probe) if warm_guard is not None else probe()
+            wspan = None
+            if row_traces is not None:
+                wspan = FanSpan([row_traces[i] for i in m], "warm_probe",
+                                engine=plan.engine)
+                if tracer is not None:
+                    # warm faults + WarmGuard retry/hedge/breaker decisions
+                    # annotate the active sink — this probe's span
+                    tracer.push(wspan)
+            try:
+                res = (warm_guard.call(probe) if warm_guard is not None
+                       else probe())
+            finally:
+                if wspan is not None and tracer is not None:
+                    tracer.pop()
+            if wspan is not None:
+                wspan.end(failover=res is None)
             if stats is not None:
                 # real round trips issued, successful or not (retries count)
                 stats.device_calls += warm.stats.round_trips - rt0
@@ -849,23 +916,54 @@ def launch_plans(hot_store: Store, warm, plans: list[PhysicalPlan], *,
         warm_results.append(probes)
     return InFlightPlans(inflight=inflight, warm_results=warm_results,
                          B=B, k=k, stats=stats, lex=lex,
-                         warm_failed=warm_failed)
+                         warm_failed=warm_failed, row_traces=row_traces,
+                         calib=calib)
 
 
 def finish_plans(pending: InFlightPlans):
     """Phase 3 of `execute_plans`: the FIRST device_get. Syncs every
     in-flight unit, runs ivf completeness rescans, merges tiers, scatters
-    into row order. Returns (scores, slots, tiers)."""
+    into row order. Returns (scores, slots, tiers).
+
+    Observability rides the same loop: each unit's sync is a
+    ``device_sync`` span (rescans nest inside it) and the per-group merge
+    a ``merge`` span in every member request's trace, and each unit lands
+    one predicted-vs-measured row in `pending.calib` (the cost-model
+    calibration audit — always-on, tracing or not)."""
     B, k, stats, lex = pending.B, pending.k, pending.stats, pending.lex
+    row_traces, calib = pending.row_traces, pending.calib
     scores = np.full((B, k), np.float32(np.finfo(np.float32).min), np.float32)
     slots = np.full((B, k), -1, np.int32)
     tiers = np.full((B, k), TIER_HOT, np.int32)
     for (unit, member_idxs, hot), probes in zip(pending.inflight,
                                                 pending.warm_results):
-        hs, hi = _finish_hot(hot)
+        unit_traces = ([row_traces[i] for m in member_idxs for i in m]
+                       if row_traces is not None else None)
+        sync_fan = (FanSpan(unit_traces, "device_sync",
+                            engine=unit.plans[0].engine)
+                    if unit_traces is not None else None)
+        t_sync0 = time.perf_counter()
+        hs, hi = _finish_hot(hot, trace_fan=unit_traces)
+        hot.sync_ms = (time.perf_counter() - t_sync0) * 1e3
         _note_sharded(stats, hot)
+        if sync_fan is not None:
+            if hot.shard_meta is not None:
+                sync_fan.annotate("shards", hot.shard_meta[0])
+                sync_fan.annotate("collective_bytes", hot.shard_meta[1])
+            sync_fan.end(rows_scanned=hot.rows)
+        if calib is not None:
+            rep = unit.plans[0]
+            calib.record_unit(
+                engine=rep.engine, n_rows=rep.n_rows,
+                groups=len(unit.plans), k=k,
+                rows=sum(len(m) for m in member_idxs),
+                predicted_ms=rep.est_cost_ms, launch_ms=hot.launch_ms,
+                sync_ms=hot.sync_ms, rows_scanned=hot.rows,
+                terms_scanned=hot.terms)
         if stats is not None:
             stats.rows_scanned += hot.rows
+        merge_fan = (FanSpan(unit_traces, "merge", groups=len(member_idxs))
+                     if unit_traces is not None else None)
         off = 0
         for gi, m in enumerate(member_idxs):
             span = slice(off, off + len(m))
@@ -902,4 +1000,6 @@ def finish_plans(pending: InFlightPlans):
                 s_m, sl_m, t_m = merge_tiers(hs[span], hi[span], ws, wi, k)
             scores[m], slots[m], tiers[m] = s_m, sl_m, t_m
             off += len(m)
+        if merge_fan is not None:
+            merge_fan.end()
     return scores, slots, tiers

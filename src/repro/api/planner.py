@@ -112,6 +112,38 @@ class CostModel:
         slope = (y1 - y0) / (x1 - x0) if x1 != x0 else 0.0
         return math.exp(y0 + slope * (x - x0))
 
+    def calibrated(self, table) -> "CostModel":
+        """A copy whose curves are rescaled by the measured/predicted ratio
+        a live `obs.CalibrationTable` observed per engine — the calibration
+        audit closed back into pricing (the ROADMAP's "learned, self-tuning
+        planner" first step: bench-time curves drift; the ratio is exactly
+        the drift). Engines the table never saw (or saw only unpriced)
+        keep their bench-time curves; a None/empty table is identity.
+
+        >>> from repro.obs import CalibrationTable
+        >>> cm = CostModel(curves=(("ref", ((1000, 1.0), (4000, 4.0))),))
+        >>> t = CalibrationTable()
+        >>> t.record_unit(engine="ref", n_rows=1000, groups=1, k=8, rows=1,
+        ...               predicted_ms=1.0, launch_ms=0.5, sync_ms=1.5,
+        ...               rows_scanned=1000)
+        >>> round(cm.calibrated(t).estimate_ms("ref", 2000), 3)  # x2 drift
+        4.0
+        >>> cm.calibrated(None) is cm
+        True
+        """
+        if table is None or not getattr(table, "recorded", 0):
+            return self
+        per_engine = table.per_engine()
+        curves = []
+        for eng, pts in self.curves:
+            ratio = (per_engine.get(eng) or {}).get("ratio")
+            if ratio is None or ratio <= 0.0:
+                curves.append((eng, pts))
+            else:
+                curves.append((eng, tuple((n, ms * ratio)
+                                          for n, ms in pts)))
+        return dataclasses.replace(self, curves=tuple(curves))
+
     @classmethod
     def from_bench(cls, path: str | None = None) -> "CostModel | None":
         """Load the ``cost_model`` section bench_latency saves; None when the

@@ -46,6 +46,8 @@ from repro.core.store import DocBatch, ShardPlacement, StoreConfig
 from repro.core.tenancy import Principal, TenantRegistry, category_mask
 from repro.core.transactions import TransactionLog
 from repro.index.lexical import LexicalArena, LexicalConfig
+from repro.obs import CalibrationTable, Tracer
+from repro.obs.tracer import NULL_TRACE, TraceGroup
 from repro.serving.faults import FaultPlan, HotLaunchError, WedgedBatchError
 
 _FOREVER = (1 << 31) - 1     # hot window that never expires (single-tier mode)
@@ -188,6 +190,12 @@ class PendingExecution:
     use_cache: bool
     before_hot: int                   # stats watermarks for the router
     before_warm: int                  # counter reconciliation in finish()
+    traces: list | None = None        # per-plan obs.Trace handles (span trees
+                                      # survive the launch/finish boundary on
+                                      # this field)
+    owns_traces: bool = False         # True when RagDB.launch auto-created
+                                      # the traces (no scheduler upstream):
+                                      # finish() then finishes them too
 
 
 class RagDB:
@@ -293,6 +301,12 @@ class RagDB:
         # probes get retry/hedge/breaker protection.
         self.faults = None
         self.warm_guard = None
+        # observability: the tracer is OFF by default (attach_tracer turns
+        # span trees on); the calibration audit is ALWAYS-ON — finish_plans
+        # records one predicted-vs-measured row per dispatch unit into it
+        # whether or not anyone is tracing.
+        self.tracer = Tracer(enabled=False)
+        self.calibration = CalibrationTable()
 
     def attach_faults(self, plan) -> None:
         """Thread one `serving.faults.FaultPlan` through every injection
@@ -301,9 +315,24 @@ class RagDB:
         txn.<op>.<point> crash points in the TransactionLog."""
         self.faults = plan
         self.log.faults = plan
+        if plan is not None:
+            # every fired fault annotates the active trace sink (no-op
+            # while tracing is off — FaultPlan stays dependency-free)
+            plan.obs = self.tracer
         # the warm client always holds a plan (the filter_bug shim needs
         # one) — detaching restores a fresh no-rule plan there
         self.router.warm.faults = plan if plan is not None else FaultPlan()
+
+    def attach_tracer(self, tracer) -> None:
+        """Install an `obs.Tracer` (usually recorder-backed) as this db's
+        span-tree factory and active-sink stack. Re-points the attached
+        FaultPlan's annotation hook and the serving WarmGuard, so fired
+        faults and retry/hedge/breaker decisions land in the right spans."""
+        self.tracer = tracer
+        if self.faults is not None:
+            self.faults.obs = tracer
+        if self.warm_guard is not None:
+            self.warm_guard.tracer = tracer
 
     # -- storage facade --------------------------------------------------
     @property
@@ -563,11 +592,22 @@ class RagDB:
                                        stale_within_s=stale_within_s))
 
     def launch(self, plans: list[PhysicalPlan], *, use_cache: bool = True,
-               stale_within_s: float | None = None) -> "PendingExecution":
+               stale_within_s: float | None = None,
+               traces: list | None = None) -> "PendingExecution":
         """Cache lookups + phase-1/2 launch of every missing plan, WITHOUT
         a device sync: the returned `PendingExecution` holds cache-served
         chunks and the in-flight executor handle. The serving scheduler
-        pipelines by launching batch N+1 before finishing batch N."""
+        pipelines by launching batch N+1 before finishing batch N.
+
+        ``traces`` (one obs.Trace per plan) carries caller-owned span trees
+        — the serving scheduler births them at offer() so queue/degrade
+        spans precede these. With the db's tracer enabled and no traces
+        given, launch creates one per plan and finish() finishes them."""
+        owns_traces = False
+        if traces is None and self.tracer.enabled:
+            traces = [self.tracer.trace("request", engine=p.engine,
+                                        route=p.route) for p in plans]
+            owns_traces = True
         per_plan: list[tuple | None] = [None] * len(plans)
         rows = [1 if p.logical.q is None
                 else int(np.atleast_2d(p.logical.q).shape[0]) for p in plans]
@@ -577,23 +617,41 @@ class RagDB:
         cache = self.result_cache if use_cache else None
         now = self.clock()
         for i, p in enumerate(plans):
+            t = (traces[i] if traces is not None and traces[i] is not None
+                 else NULL_TRACE)
+            if t.enabled and p.degraded:
+                t.annotate("degraded", p.degraded)
+                t.pin("degraded")
+            # no cache configured (or use_cache=False) means no lookup
+            # happens — so no span either; the tracer observes, never pads
+            sid = (t.begin("cache_lookup")
+                   if t.enabled and cache is not None else None)
             key = self._result_key(p) if cache is not None else None
             hit = cache.get(key) if key is not None else None
             if hit is not None:
                 per_plan[i] = hit
                 served[i] = "cache"
+                if sid is not None:
+                    t.end(sid, outcome="hit")
                 continue
-            if (self.faults is not None and key is not None
-                    and self.faults.fires("cache.stale")):
+            if (self.faults is not None and key is not None):
                 # chaos site cache.stale: a buggy cache layer serves the
                 # newest entry for this plan+query IGNORING commit epochs.
                 # The epoch guard compares the entry's full key (which
                 # encodes hot/warm commit counts + index epoch + lex
                 # version) against the live one and refuses on mismatch —
                 # the query falls through to a fresh, correct execution.
-                poisoned = cache.newest(key[:3])
-                if poisoned is not None and poisoned[0] != key:
-                    self.stats.stale_epoch_rejected += 1
+                self.tracer.push(t)
+                try:
+                    fired = self.faults.fires("cache.stale")
+                finally:
+                    self.tracer.pop()
+                if fired:
+                    poisoned = cache.newest(key[:3])
+                    if poisoned is not None and poisoned[0] != key:
+                        self.stats.stale_epoch_rejected += 1
+                        if t.enabled:
+                            t.annotate_current("stale_epoch_rejected", True)
             if key is not None and stale_within_s is not None:
                 stale = cache.get_stale(key[:3], now=now,
                                         max_age_s=stale_within_s)
@@ -601,12 +659,18 @@ class RagDB:
                     per_plan[i], stale_age_s[i] = stale
                     served[i] = "stale"
                     self.stats.stale_serves += 1
+                    if sid is not None:
+                        t.end(sid, outcome="stale", age_s=stale[1])
                     continue
+            if sid is not None:
+                t.end(sid, outcome="miss")
             misses.append((i, key))
         inflight = None
         before_hot = before_warm = 0
         if misses:
             run_plans = [plans[i] for i, _ in misses]
+            run_traces = ([traces[i] for i, _ in misses]
+                          if traces is not None else None)
             # only build the sharded program when a mesh exists; otherwise
             # let the executor raise its "requires a mesh-built RagDB" error
             needs_shard = (self.mesh is not None
@@ -614,37 +678,62 @@ class RagDB:
             k = run_plans[0].logical.k
             before_hot = self.stats.hot_queries
             before_warm = self.stats.warm_queries
-            if self.faults is not None:
-                # chaos site hot.launch: the device dispatch fails before
-                # anything is issued — drawn ONCE per launch so a retrying
-                # caller (Scheduler) re-enters cleanly with no side effects
-                self.faults.raise_if("hot.launch", HotLaunchError)
-            inflight = launch_plans(
-                self.log.snapshot(), self.router.warm, run_plans,
-                sharded_fn=self._sharded_fn(k) if needs_shard else None,
-                stats=self.stats, shapes=self.shapes, index=self.index,
-                planner_cfg=self.planner_cfg, lex=self.lex,
-                warm_guard=self.warm_guard)
+            # batch-scope active sink: a fault firing anywhere in this
+            # launch (hot.launch here, warm.* inside the probes unless the
+            # per-probe span shadows it) annotates EVERY member trace
+            group = TraceGroup(run_traces) if run_traces is not None else None
+            if group is not None:
+                self.tracer.push(group)
+            try:
+                if self.faults is not None:
+                    # chaos site hot.launch: the device dispatch fails
+                    # before anything is issued — drawn ONCE per launch so
+                    # a retrying caller (Scheduler) re-enters cleanly with
+                    # no side effects
+                    self.faults.raise_if("hot.launch", HotLaunchError)
+                inflight = launch_plans(
+                    self.log.snapshot(), self.router.warm, run_plans,
+                    sharded_fn=self._sharded_fn(k) if needs_shard else None,
+                    stats=self.stats, shapes=self.shapes, index=self.index,
+                    planner_cfg=self.planner_cfg, lex=self.lex,
+                    warm_guard=self.warm_guard, obs=run_traces,
+                    tracer=self.tracer, calib=self.calibration)
+            finally:
+                if group is not None:
+                    self.tracer.pop()
         return PendingExecution(plans=list(plans), per_plan=per_plan,
                                 rows=rows, misses=misses, inflight=inflight,
                                 served=served, stale_age_s=stale_age_s,
                                 use_cache=cache is not None,
                                 before_hot=before_hot,
-                                before_warm=before_warm)
+                                before_warm=before_warm,
+                                traces=traces, owns_traces=owns_traces)
 
     def finish(self, pending: "PendingExecution"):
         """Sync a `launch`ed batch (the first device_get), fill the result
         cache, and concatenate per-plan chunks into (scores, slots, tiers)
         in plan order."""
         cache = self.result_cache if pending.use_cache else None
+        traces = pending.traces
         if pending.inflight is not None:
-            if self.faults is not None:
-                # chaos sites on the sync path: a wedged batch (stall) and a
-                # hard finish failure — the Scheduler's watchdog/requeue
-                # logic is what keeps the serving loop alive through these
-                self.faults.stall("hot.wedge")
-                self.faults.raise_if("hot.finish_error", WedgedBatchError)
-            s, sl, tr = finish_plans(pending.inflight)
+            run_traces = ([traces[i] for i, _ in pending.misses]
+                          if traces is not None else None)
+            group = TraceGroup(run_traces) if run_traces is not None else None
+            if group is not None:
+                self.tracer.push(group)
+            try:
+                if self.faults is not None:
+                    # chaos sites on the sync path: a wedged batch (stall)
+                    # and a hard finish failure — the Scheduler's
+                    # watchdog/requeue logic is what keeps the serving loop
+                    # alive through these
+                    self.faults.stall("hot.wedge")
+                    self.faults.raise_if("hot.finish_error",
+                                         WedgedBatchError)
+                s, sl, tr = finish_plans(pending.inflight)
+            finally:
+                if group is not None:
+                    self.tracer.pop()
             self.router.stats.hot_queries += (self.stats.hot_queries
                                               - pending.before_hot)
             self.router.stats.warm_queries += (self.stats.warm_queries
@@ -666,9 +755,24 @@ class RagDB:
                     pending.plans[i] = dataclasses.replace(
                         p, degraded=p.degraded
                         + ("warm-unavailable: served hot-only",))
+                    if (traces is not None and traces[i] is not None
+                            and traces[i].enabled):
+                        traces[i].annotate("degraded",
+                                           pending.plans[i].degraded)
+                        traces[i].pin("degraded")
                 elif cache is not None and key is not None:
                     cache.put(key, chunk, now=now, stale_key=key[:3])
                 off += n
+        if traces is not None:
+            for i, t in enumerate(traces):
+                if t is None or not t.enabled:
+                    continue
+                t.annotate("served", pending.served[i])
+                if pending.stale_age_s[i] is not None:
+                    t.annotate("stale_age_s", pending.stale_age_s[i])
+                if pending.owns_traces:
+                    # no scheduler upstream: the request's life ends here
+                    t.finish()
         # concatenation copies, so cached arrays are never aliased to callers
         return tuple(np.concatenate([c[j] for c in pending.per_plan], axis=0)
                      for j in range(3))
@@ -735,7 +839,17 @@ class RagDB:
             f"{st.stale_epoch_rejected} stale-epoch cache reads rejected",
             f"  ivf index:    {index}",
             f"  lexical:      {lexical}",
+            f"  calibration:  {self.calibration.explain_line()}",
         ]
+        if self.tracer.enabled:
+            rec = self.tracer.recorder
+            recorded = ("no flight recorder" if rec is None else
+                        f"{rec.recorded} recorded "
+                        f"({len(rec.pinned)} pinned, {rec.pin_drops} "
+                        f"pin drops)")
+            lines.append(f"  tracing:      on, "
+                         f"{self.tracer.traces_started} traces started, "
+                         f"{recorded}")
         if self.mesh is not None:
             lines.append(
                 f"  sharded:      {self.n_shards} shard(s) "

@@ -131,6 +131,10 @@ class FaultPlan:
         self.calls: dict[str, int] = {}
         self.fired: dict[str, int] = {}
         self._rngs: dict[str, np.random.Generator] = {}
+        #: duck-typed observability hook (anything with ``.fault(site)``;
+        #: RagDB.attach_faults points it at the obs.Tracer's active-sink
+        #: stack). Kept duck-typed so this module stays dependency-free.
+        self.obs = None
 
     def _rng(self, site: str) -> np.random.Generator:
         g = self._rngs.get(site)
@@ -157,6 +161,9 @@ class FaultPlan:
             fire = fire or (draw and in_window)
         if fire:
             self.fired[site] = self.fired.get(site, 0) + 1
+            if self.obs is not None:
+                # the request(s) being traced right now carry the fault
+                self.obs.fault(site)
         return fire
 
     def raise_if(self, site: str, exc: type = FaultError) -> None:
@@ -286,9 +293,16 @@ class WarmGuard:
         self.sleep = sleep
         self.metrics = metrics
         self._rng = np.random.default_rng(int(seed))
+        #: duck-typed obs.Tracer (RagDB.attach_tracer / Scheduler wire it):
+        #: retry/hedge/breaker decisions annotate the active warm_probe span
+        self.tracer = None
         self.breaker = CircuitBreaker(
             cfg.breaker_failures, cfg.breaker_reset_s, clock=clock,
             on_transition=lambda s: metrics.inc(f"breaker_{s}"))
+
+    def _ann(self, key: str, value) -> None:
+        if self.tracer is not None:
+            self.tracer.annotate_active(key, value)
 
     @property
     def state(self) -> str:
@@ -304,7 +318,11 @@ class WarmGuard:
         if not self.breaker.allow():
             m.inc("breaker_skips")
             m.inc("warm_failovers")
+            self._ann("breaker", "open")
+            self._ann("failover", "breaker-skip")
             return None
+        errors = timeouts = 0
+        hedged = hedge_won = False
         attempts = self.cfg.max_retries + 1
         for attempt in range(attempts):
             t0 = self.clock()
@@ -312,6 +330,7 @@ class WarmGuard:
                 res = fn()
             except FaultError:
                 m.inc("warm_errors")
+                errors += 1
                 self.breaker.record_failure()
                 if self.breaker.state == "open":
                     break                      # tripped: stop burning retries
@@ -326,6 +345,7 @@ class WarmGuard:
                 # deadline is checked after the fact and the late result is
                 # refused — the caller never observes it.
                 m.inc("warm_timeouts")
+                timeouts += 1
                 self.breaker.record_failure()
                 if self.breaker.state == "open":
                     break
@@ -338,15 +358,34 @@ class WarmGuard:
                 # Hedged probe: a second attempt "launched" at the hedge
                 # threshold; keep whichever would have finished first.
                 m.inc("hedges")
+                hedged = True
                 t1 = self.clock()
                 try:
                     res2 = fn()
                     if hg + (self.clock() - t1) * 1e3 < elapsed_ms:
                         m.inc("hedge_wins")
+                        hedge_won = True
                         res = res2
                 except FaultError:
                     pass                        # hedge lost; primary stands
             self.breaker.record_success()
+            if errors or timeouts or hedged:
+                self._ann("attempts", attempt + 1)
+                if errors:
+                    self._ann("warm_errors", errors)
+                if timeouts:
+                    self._ann("warm_timeouts", timeouts)
+                if hedged:
+                    self._ann("hedged", True)
+                if hedge_won:
+                    self._ann("hedge_win", True)
             return res
         m.inc("warm_failovers")
+        self._ann("failover", "breaker-tripped"
+                  if self.breaker.state == "open" else "retries-exhausted")
+        if errors:
+            self._ann("warm_errors", errors)
+        if timeouts:
+            self._ann("warm_timeouts", timeouts)
+        self._ann("breaker", self.breaker.state)
         return None

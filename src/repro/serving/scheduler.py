@@ -84,6 +84,9 @@ class ServeRequest:
     req_id: int = 0
     tenant: int = -2               # metrics label only (plan.pred is the law)
     retries: int = 0               # watchdog/fault requeues consumed so far
+    trace: object = None           # obs.Trace — born at offer() when the
+                                   # db's tracer is on, carried through every
+                                   # requeue, finished with the result
 
     @property
     def rows(self) -> int:
@@ -144,6 +147,9 @@ class Scheduler:
             clock=self.clock, sleep=self._sleep, metrics=self.metrics,
             seed=cfg.seed)
         db.warm_guard = self.guard
+        # retry/hedge/breaker decisions annotate the active warm_probe span
+        # (attach_tracer re-points this if a tracer arrives later)
+        self.guard.tracer = db.tracer
         self.queue: deque[ServeRequest] = deque()
         # at most one batch in flight beyond the one being launched: the
         # executor's device_get pipeline depth
@@ -153,12 +159,27 @@ class Scheduler:
 
     # -- admission ---------------------------------------------------------
     def offer(self, req: ServeRequest) -> bool:
-        """Admit ``req`` or shed it (bounded queue). Returns admitted."""
+        """Admit ``req`` or shed it (bounded queue). Returns admitted.
+
+        With the db's tracer on, the request's trace is born HERE — queue
+        wait is part of its life — with an open ``queue`` span that the
+        drain closes; a shed request's trace finishes immediately, pinned
+        ``failed`` so the flight recorder keeps it."""
+        tracer = self.db.tracer
+        if tracer.enabled and req.trace is None:
+            req.trace = tracer.trace("request", req_id=req.req_id,
+                                     tenant=req.tenant)
         if self.cfg.admission and len(self.queue) >= self.cfg.max_queue:
             self.shed_count += 1
             self.metrics.inc("shed", tenant=req.tenant)
+            if req.trace is not None and req.trace.enabled:
+                req.trace.annotate("served", "shed")
+                req.trace.pin("failed")
+                req.trace.finish()
             return False
         self.queue.append(req)
+        if req.trace is not None and req.trace.enabled:
+            req.trace.begin("queue")
         return True
 
     @property
@@ -217,9 +238,19 @@ class Scheduler:
                 wait_ms = (now - r.arrival_t) * 1e3
                 waits.append(wait_ms)
                 self.metrics.hist("queue_wait_ms").observe(wait_ms)
+                tr = r.trace
+                traced = tr is not None and tr.enabled
+                if traced:
+                    # close the queue span offer()/requeue left open
+                    tr.end_current(wait_ms=wait_ms)
                 budget = self.cfg.slo_ms - wait_ms
+                sid = tr.begin("plan", pressure=pressure,
+                               budget_ms=budget) if traced else None
                 plan = (self._degrade_for(r, budget, pressure)
                         if self.cfg.admission else r.plan)
+                if sid is not None:
+                    tr.end(sid, engine=plan.engine,
+                           rungs=len(plan.degraded))
                 if self.cfg.admission and self.cfg.stale_within_s is not None:
                     allow_stale |= (budget <= 0
                                     or pressure >= self.cfg.stale_pressure)
@@ -246,13 +277,16 @@ class Scheduler:
                 self.metrics.inc("requests", tenant=r.tenant)
             # bounded launch retry: hot.launch faults fire BEFORE any device
             # dispatch, so re-entering db.launch is side-effect-clean
+            traces = ([r.trace for r in batch]
+                      if self.db.tracer.enabled else None)
             pending = None
             for attempt in range(self.cfg.launch_retries + 1):
                 try:
                     pending = self.db.launch(
                         plans, use_cache=self.cfg.use_cache,
                         stale_within_s=(self.cfg.stale_within_s if allow_stale
-                                        else None))
+                                        else None),
+                        traces=traces)
                     break
                 except HotLaunchError:
                     if attempt < self.cfg.launch_retries:
@@ -290,6 +324,10 @@ class Scheduler:
             self.metrics.inc("failed", tenant=r.tenant)
             k, n = r.plan.logical.k, r.rows
             e2e_ms = (t_done - r.arrival_t) * 1e3
+            if r.trace is not None and r.trace.enabled:
+                r.trace.annotate("served", "failed")
+                r.trace.pin("failed")
+                r.trace.finish(e2e_ms=e2e_ms)
             out.append(ServedResult(
                 request=r,
                 scores=np.full((n, k), np.float32(np.finfo(np.float32).min),
@@ -318,6 +356,10 @@ class Scheduler:
                 give_up.append((r, w))
         for r, _ in reversed(retry):
             self.metrics.inc("requeued", tenant=r.tenant)
+            if r.trace is not None and r.trace.enabled:
+                # back in line: a fresh queue span (the drain closes it)
+                r.trace.annotate("requeues", r.retries)
+                r.trace.begin("queue")
             self.queue.appendleft(r)
         if not give_up:
             return []
@@ -358,12 +400,26 @@ class Scheduler:
             e2e_ms = (t_done - r.arrival_t) * 1e3
             met = e2e_ms <= self.cfg.slo_ms
             self.metrics.hist("e2e_ms").observe(e2e_ms)
+            # per-tenant tail: the head-vs-tail p99 breakdown the SLO-class
+            # report reads (labeled series beside the global one)
+            self.metrics.hist("e2e_ms", tenant=r.tenant).observe(e2e_ms)
             if not met:
                 self.metrics.inc("deadline_miss", tenant=r.tenant)
             if pending.served[i] == "stale":
                 self.metrics.inc("stale_serves")
                 self.metrics.hist("stale_age_s").observe(
                     pending.stale_age_s[i])
+            p = pending.plans[i]
+            # calibration audit: the scheduler is the only layer that sees
+            # arrival->result, so the e2e aggregate is fed from here
+            self.db.calibration.observe_e2e(
+                engine=p.engine, n_rows=p.n_rows, k=p.logical.k,
+                e2e_ms=e2e_ms)
+            if r.trace is not None and r.trace.enabled:
+                if not met:
+                    r.trace.pin("slo")
+                r.trace.annotate("deadline_met", met)
+                r.trace.finish(e2e_ms=e2e_ms, service_ms=service_ms)
             out.append(ServedResult(
                 request=r, scores=scores[off:off + n],
                 slots=slots[off:off + n], tiers=tiers[off:off + n],

@@ -14,7 +14,11 @@ import repro.api.plan
 import repro.api.planner
 import repro.api.ragdb
 import repro.index.lexical.arena
+import repro.obs.calibration
+import repro.obs.recorder
+import repro.obs.tracer
 import repro.serving.engine
+import repro.serving.metrics
 
 MODULES = [
     repro.api.plan,
@@ -23,6 +27,10 @@ MODULES = [
     repro.api.ragdb,
     repro.index.lexical.arena,
     repro.serving.engine,
+    repro.serving.metrics,
+    repro.obs.tracer,
+    repro.obs.recorder,
+    repro.obs.calibration,
 ]
 
 

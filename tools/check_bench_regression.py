@@ -14,6 +14,8 @@ Usage:
         [--paged-threshold 0.15]
     python tools/check_bench_regression.py --chaos-only FRESH.json
         [--chaos-p99-mult 10] [--breaker-steps 10]
+    python tools/check_bench_regression.py --obs-only FRESH.json
+        [--obs-threshold 0.05] [--min-engines 4]
     python tools/check_bench_regression.py --sharded-only FRESH.json
         [COMMITTED.json] [--at-n 250000] [--threshold 0.25]
 
@@ -358,6 +360,64 @@ def check_chaos(args) -> int:
     return 0 if ok else 1
 
 
+def check_obs(args) -> int:
+    """``--obs-only``: gate the observability layer on a fresh serving run
+    (the SAME file the --serving-only lane reads — bench_serving --smoke
+    --out PATH). Self-contained, no committed reference. Three bars:
+      1. tracer tax: tracer-on p50 within --obs-threshold (default 5%) of
+         tracer-off on the fixed-batch interleaved microbench — tracing
+         must stay a rounding error on the serve path;
+      2. recorder memory bounded: the microbench recorded more traces than
+         the ring holds, yet ring <= cap and pinned <= pin_cap — the
+         flight recorder is O(cap + pin_cap) no matter how long it runs;
+      3. calibration coverage: the predicted-vs-measured audit priced at
+         least --min-engines engines (default 4: ref/ivf/hybrid/sharded).
+    """
+    try:
+        with open(args.fresh) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {args.fresh}: {e}", file=sys.stderr)
+        return 2
+    obs = payload.get("obs_overhead")
+    cal = payload.get("calibration")
+    if not isinstance(obs, dict) or not isinstance(cal, dict):
+        print("error: file lacks obs_overhead/calibration sections (need "
+              "a bench_serving run, not --chaos)", file=sys.stderr)
+        return 2
+    ok = True
+    ratio = obs["overhead_ratio"]
+    print(f"obs gate ({obs['iters']} iters, batch {obs['batch']}):")
+    print(f"  tracer tax: off p50 {obs['p50_off_ms']:.3f}ms vs on "
+          f"{obs['p50_on_ms']:.3f}ms (x{ratio:.3f}, ceiling "
+          f"x{1 + args.obs_threshold:.2f})")
+    if ratio > 1 + args.obs_threshold:
+        print("  FAIL: enabling the tracer costs more than the budget — "
+              "the traced hot path is no longer O(1) appends per span")
+        ok = False
+    r = obs["recorder"]
+    print(f"  recorder: {r['recorded']} recorded -> ring {r['ring_len']}/"
+          f"{r['cap']}, pinned {r['pinned']}/{r['pin_cap']} "
+          f"({r['pin_drops']} pin drops)")
+    if r["recorded"] <= r["cap"]:
+        print("  FAIL: the microbench recorded fewer traces than the ring "
+              "holds — the memory bound was never exercised")
+        ok = False
+    if not (r["ring_len"] <= r["cap"] and r["pinned"] <= r["pin_cap"]):
+        print("  FAIL: flight-recorder memory exceeded its declared bound")
+        ok = False
+    engines = sorted(e for e, v in cal.get("engines", {}).items()
+                     if v.get("ratio") is not None)
+    print(f"  calibration: {len(engines)} priced engines "
+          f"({', '.join(engines)}; floor {args.min_engines})")
+    if len(engines) < args.min_engines:
+        print("  FAIL: the calibration audit no longer covers every "
+              "priced engine")
+        ok = False
+    print("PASS" if ok else "REGRESSION")
+    return 0 if ok else 1
+
+
 def check_hybrid(args) -> int:
     fresh = load_hybrid(args.fresh)
     committed = load_hybrid(args.committed)
@@ -536,6 +596,18 @@ def main(argv=None) -> int:
                          "from bench_serving --chaos --smoke --out PATH; "
                          "self-contained — the file carries its own clean "
                          "baseline)")
+    ap.add_argument("--obs-only", action="store_true",
+                    help="gate the observability layer instead (same fresh "
+                         "file as --serving-only): tracer-on p50 within "
+                         "--obs-threshold of tracer-off, flight-recorder "
+                         "memory bounded, calibration audit covers "
+                         "--min-engines engines")
+    ap.add_argument("--obs-threshold", type=float, default=0.05,
+                    help="with --obs-only: max tracer-on-over-off p50 "
+                         "overhead (default 0.05 = 5%%)")
+    ap.add_argument("--min-engines", type=int, default=4,
+                    help="with --obs-only: minimum engines the calibration "
+                         "audit must price (default 4)")
     ap.add_argument("--sharded-only", action="store_true",
                     help="gate the shard-mapped arena scan instead (fresh "
                          "file from bench_latency --sharded-only --out "
@@ -590,6 +662,8 @@ def main(argv=None) -> int:
         return check_paged(args)
     if args.chaos_only:
         return check_chaos(args)
+    if args.obs_only:
+        return check_obs(args)
     if args.sharded_only:
         return check_sharded(args)
 

@@ -2,7 +2,8 @@
 """Timing-hygiene audit (CI lane): latency must be measured on monotonic
 clocks, and timed regions must sync async device work.
 
-Rules enforced over benchmarks/, src/repro/serving/, and tools/:
+Rules enforced over benchmarks/, src/repro/serving/, src/repro/obs/, and
+tools/:
 
 1. no `time.time()` in files that measure latency — wall clocks jump
    (NTP slew, suspend); `time.perf_counter()` / `time.monotonic()` don't.
@@ -24,7 +25,8 @@ import re
 import sys
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
-SCOPES = ("benchmarks", os.path.join("src", "repro", "serving"), "tools")
+SCOPES = ("benchmarks", os.path.join("src", "repro", "serving"),
+          os.path.join("src", "repro", "obs"), "tools")
 
 #: wall timestamps (not latency measurements) are fine here; the audit
 #: itself mentions the pattern in its docstring/regex
